@@ -1,0 +1,53 @@
+"""Beyond-paper ablation: effect of data heterogeneity on FSL-GAN
+convergence — the paper's own future-work item (iv) (§6).
+
+Three federated partitions of the same synthetic MNIST set across 3
+clients: IID, Dirichlet(0.5) (moderate skew — the reproduction default),
+Dirichlet(0.1) (strong label skew). Reports the tail generator loss and
+the per-client example-count spread as the skew measure.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.gan import FSLGANTrainer
+from repro.data import partition_dirichlet, partition_iid, synthetic_mnist
+
+
+def run(fast: bool = False, epochs: int = 8, clients: int = 3
+        ) -> List[Tuple[str, float, str]]:
+    if fast:
+        epochs = 3
+    imgs, labels = synthetic_mnist(1500, seed=0)
+    cases = {
+        "iid": lambda: partition_iid(imgs, clients, seed=0),
+        "dirichlet0.5": lambda: partition_dirichlet(imgs, labels, clients,
+                                                    alpha=0.5, seed=0),
+        "dirichlet0.1": lambda: partition_dirichlet(imgs, labels, clients,
+                                                    alpha=0.1, seed=0),
+    }
+    rows = []
+    finals = {}
+    for name, mk in cases.items():
+        parts = mk()
+        sizes = [len(v) for v in parts.values()]
+        cfg = get_config("dcgan-mnist").override({
+            "shape.global_batch": 32, "fsl.num_clients": clients,
+            "model.dcgan.base_filters": 8})
+        tr = FSLGANTrainer(cfg, parts, seed=0)
+        t0 = time.time()
+        hist = [tr.train_epoch(batches_per_client=3) for _ in range(epochs)]
+        g = [h["g_loss"] for h in hist]
+        tail = float(np.mean(g[-max(2, epochs // 3):]))
+        finals[name] = tail
+        rows.append((f"heterogeneity_gen_loss[{name}]",
+                     (time.time() - t0) * 1e6 / epochs,
+                     f"final_g_loss={tail:.3f} client_sizes={sizes}"))
+    rows.append(("heterogeneity_summary", 0.0,
+                 f"finals={ {k: round(v, 3) for k, v in finals.items()} } "
+                 "(paper future-work (iv): skew vs convergence)"))
+    return rows

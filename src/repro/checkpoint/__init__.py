@@ -1,0 +1,3 @@
+from repro.checkpoint.io import (  # noqa: F401
+    CheckpointManager, load_pytree, save_pytree,
+)

@@ -1,0 +1,111 @@
+"""Pytree checkpointing to .npz (no external deps).
+
+Trees are flattened to path-keyed arrays; bfloat16 leaves are bit-cast to
+uint16 with a dtype sidecar since numpy has no native bfloat16.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "//"
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        keys = []
+        for p in path:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "idx"):
+                keys.append(str(p.idx))
+            else:
+                keys.append(str(p))
+        out.append((_SEP.join(keys), leaf))
+    return out
+
+
+def save_pytree(path: str, tree, extra: Optional[Dict[str, Any]] = None
+                ) -> None:
+    arrays: Dict[str, np.ndarray] = {}
+    dtypes: Dict[str, str] = {}
+    for key, leaf in _flatten_with_paths(tree):
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            dtypes[key] = "bfloat16"
+            arr = arr.view(np.uint16)
+        arrays[key] = arr
+    meta = {"dtypes": dtypes, "extra": extra or {}}
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, __meta__=np.frombuffer(
+            json.dumps(meta).encode(), np.uint8), **arrays)
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str, like=None) -> Tuple[Any, Dict[str, Any]]:
+    """Load; if `like` is given, restore into its tree structure."""
+    with np.load(path) as z:
+        meta = json.loads(bytes(z["__meta__"]).decode())
+        arrays = {k: z[k] for k in z.files if k != "__meta__"}
+    for k, dt in meta["dtypes"].items():
+        if dt == "bfloat16":
+            arrays[k] = arrays[k].view(jnp.bfloat16)
+    if like is None:
+        return arrays, meta["extra"]
+    keys = [k for k, _ in _flatten_with_paths(like)]
+    missing = [k for k in keys if k not in arrays]
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {missing[:5]}...")
+    leaves = [jnp.asarray(arrays[k]) for k in keys]
+    treedef = jax.tree.structure(like)
+    return jax.tree.unflatten(treedef, leaves), meta["extra"]
+
+
+class CheckpointManager:
+    """Step-indexed checkpoints with retention."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:08d}.npz")
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None) -> str:
+        p = self._path(step)
+        save_pytree(p, tree, {**(extra or {}), "step": step})
+        self._gc()
+        return p
+
+    def steps(self) -> List[int]:
+        pat = re.compile(r"ckpt_(\d+)\.npz$")
+        out = []
+        for f in os.listdir(self.dir):
+            m = pat.match(f)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def restore(self, like=None, step: Optional[int] = None):
+        steps = self.steps()
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        step = step if step is not None else steps[-1]
+        return load_pytree(self._path(step), like)
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            os.remove(self._path(s))

@@ -1,0 +1,461 @@
+"""Configuration system for the FSL-GAN framework.
+
+Plain dataclasses (no external deps) with:
+  - nested to_dict / from_dict round-tripping,
+  - dotted-path CLI overrides (``--set model.d_model=512``),
+  - validation hooks,
+  - derived-quantity helpers (param counts, per-family feature flags).
+
+Every assigned architecture is expressed as a :class:`RunConfig`; reduced
+"smoke" variants are produced by :func:`reduce_for_smoke`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field, fields
+from typing import Any, Dict, List, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model families
+# ---------------------------------------------------------------------------
+
+DENSE = "dense"
+MOE = "moe"
+SSM = "ssm"
+HYBRID = "hybrid"
+VLM = "vlm"
+AUDIO = "audio"
+DCGAN = "dcgan"
+
+FAMILIES = (DENSE, MOE, SSM, HYBRID, VLM, AUDIO, DCGAN)
+
+# Attention kinds
+ATTN_FULL = "full"            # causal full attention
+ATTN_SLIDING = "sliding"      # sliding-window causal attention
+ATTN_NONE = "none"            # attention-free (e.g. RWKV)
+
+
+@dataclass
+class MoEConfig:
+    """Mixture-of-Experts settings (DeepSeek-V2-Lite, OLMoE)."""
+    num_experts: int = 0                  # routed experts
+    num_shared_experts: int = 0           # always-on experts (DeepSeek)
+    top_k: int = 0
+    d_ff_expert: int = 0                  # per-expert hidden dim
+    router_aux_coef: float = 0.01         # load-balance loss coefficient
+    router_jitter: float = 0.0
+    capacity_factor: float = 0.0          # 0 => dropless (dense one-hot dispatch)
+
+    @property
+    def enabled(self) -> bool:
+        return self.num_experts > 0
+
+
+@dataclass
+class MLAConfig:
+    """DeepSeek-V2 Multi-head Latent Attention."""
+    kv_lora_rank: int = 0                 # compressed KV latent dim (512 for V2-Lite)
+    q_lora_rank: int = 0                  # 0 => full-rank queries (V2-Lite)
+    rope_head_dim: int = 64               # decoupled rope sub-dim per head
+    v_head_dim: int = 0                   # value head dim (defaults to head_dim)
+
+    @property
+    def enabled(self) -> bool:
+        return self.kv_lora_rank > 0
+
+
+@dataclass
+class RWKVConfig:
+    """RWKV-6 ("Finch") settings."""
+    head_dim: int = 64
+    decay_lora: int = 64                  # lora rank of data-dependent decay
+    token_shift_lora: int = 32            # lora rank of ddlerp token-shift
+    gate_lora: int = 64
+
+    @property
+    def enabled(self) -> bool:
+        return self.head_dim > 0
+
+
+@dataclass
+class RGLRUConfig:
+    """RecurrentGemma RG-LRU + local-attention hybrid settings."""
+    lru_width: int = 0                    # recurrent width (d_model if 0)
+    conv_width: int = 4                   # temporal conv1d width in recurrent block
+    window: int = 2048                    # local-attention window
+    pattern: Tuple[str, ...] = ()         # e.g. ("rglru","rglru","attn") repeated
+
+    @property
+    def enabled(self) -> bool:
+        return bool(self.pattern)
+
+
+@dataclass
+class EncDecConfig:
+    """Encoder-decoder (whisper) settings; the conv/mel frontend is a stub."""
+    encoder_layers: int = 0
+    encoder_seq: int = 1500               # whisper: 30 s -> 1500 frames after conv
+    max_target_positions: int = 448
+
+    @property
+    def enabled(self) -> bool:
+        return self.encoder_layers > 0
+
+
+@dataclass
+class DCGANConfig:
+    """The paper's own model: DCGAN with 3 conv blocks (Radford et al. 2016)."""
+    image_size: int = 28
+    channels: int = 1
+    latent_dim: int = 100
+    base_filters: int = 64
+    conv_blocks: int = 3
+
+    @property
+    def enabled(self) -> bool:
+        return self.conv_blocks > 0
+
+
+@dataclass
+class ModelConfig:
+    name: str = "unnamed"
+    family: str = DENSE
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0                     # 0 => d_model // num_heads
+    d_ff: int = 1024
+    vocab_size: int = 32000
+    max_seq_len: int = 8192
+    # flags
+    attention: str = ATTN_FULL
+    sliding_window: int = 0               # used when attention == ATTN_SLIDING
+    qk_norm: bool = False                 # Qwen3
+    qkv_bias: bool = False                # Qwen2
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    act: str = "silu"                     # mlp activation (silu => SwiGLU)
+    # family sub-configs
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    mla: MLAConfig = field(default_factory=MLAConfig)
+    rwkv: RWKVConfig = field(default_factory=RWKVConfig)
+    rglru: RGLRUConfig = field(default_factory=RGLRUConfig)
+    encdec: EncDecConfig = field(default_factory=EncDecConfig)
+    dcgan: DCGANConfig = field(default_factory=DCGANConfig)
+    # provenance
+    source: str = ""                      # citation bracket from the assignment
+
+    # ------------------------------------------------------------------
+    def __post_init__(self) -> None:
+        if self.family not in FAMILIES:
+            raise ValueError(f"unknown family {self.family!r}")
+        if self.head_dim == 0 and self.num_heads > 0:
+            self.head_dim = self.d_model // self.num_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def gqa_groups(self) -> int:
+        return max(1, self.num_heads // max(1, self.num_kv_heads))
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Analytic parameter count N (used for MODEL_FLOPS = 6*N*D)."""
+        if self.family == DCGAN:
+            return _dcgan_params(self.dcgan)
+        d, L, V = self.d_model, self.num_layers, self.vocab_size
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        # attention
+        if self.mla.enabled:
+            rk = self.mla.kv_lora_rank
+            rh = self.mla.rope_head_dim
+            vh = self.mla.v_head_dim or self.head_dim
+            nh = self.num_heads
+            qd = nh * (self.head_dim + rh)
+            per_layer += d * qd                       # q proj (full rank, V2-Lite)
+            per_layer += d * (rk + rh)                # compressed kv + rope k
+            per_layer += rk * nh * (self.head_dim + vh)  # kv up-proj
+            per_layer += nh * vh * d                  # o proj
+        elif self.family == SSM:
+            # RWKV-6 time-mix: r,k,v,g,o projections + small loras + decay
+            per_layer += 5 * d * d
+            per_layer += d * (self.rwkv.decay_lora * 2)
+            per_layer += 5 * d * self.rwkv.token_shift_lora * 2
+        else:
+            per_layer += d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+            if self.qkv_bias:
+                per_layer += self.q_dim + 2 * self.kv_dim
+        # mlp
+        if self.moe.enabled:
+            e = self.moe
+            ff = e.d_ff_expert
+            per_layer += (e.num_experts + e.num_shared_experts) * 3 * d * ff
+            per_layer += d * e.num_experts            # router
+        elif self.family == SSM:
+            per_layer += 2 * d * self.d_ff            # rwkv channel-mix (k,v) + r gate
+            per_layer += d * d
+        else:
+            mult = 3 if self.act == "silu" else 2     # swiglu has gate+up+down
+            per_layer += mult * d * self.d_ff
+        # rglru hybrid replaces some attn layers with LRU blocks
+        if self.rglru.enabled:
+            lw = self.rglru.lru_width or d
+            n_rec = sum(1 for p in self._layer_pattern() if p == "rglru")
+            n_att = L - n_rec
+            att_params = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+            rec_params = 2 * d * lw + lw * d + 2 * lw * self.rglru.conv_width + 2 * lw
+            per_layer = 0  # recompute fully below
+            mlp = 3 * d * self.d_ff
+            total_layers = n_att * (att_params + mlp) + n_rec * (rec_params + mlp)
+            norms = L * 2 * d + d
+            return emb + total_layers + norms
+        norms = L * 2 * d + d
+        total = emb + L * per_layer + norms
+        if self.encdec.enabled:
+            # encoder layers (full self-attn + mlp) + decoder cross-attn
+            enc_l = (d * self.q_dim * 2 + 2 * d * self.kv_dim + 2 * d * self.d_ff)
+            total += self.encdec.encoder_layers * enc_l
+            total += L * (d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d)
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top_k + shared experts count)."""
+        if not self.moe.enabled:
+            return self.param_count()
+        d, L = self.d_model, self.num_layers
+        e = self.moe
+        inactive = (e.num_experts - e.top_k) * 3 * d * e.d_ff_expert * L
+        return int(self.param_count() - inactive)
+
+    def _layer_pattern(self) -> List[str]:
+        if not self.rglru.enabled:
+            return ["attn"] * self.num_layers
+        pat = list(self.rglru.pattern)
+        out: List[str] = []
+        while len(out) < self.num_layers:
+            out.extend(pat)
+        return out[: self.num_layers]
+
+
+def _dcgan_params(c: DCGANConfig) -> int:
+    # generator: project latent -> (f*4, 7, 7) then 2 deconv blocks -> image
+    f = c.base_filters
+    g = c.latent_dim * f * 4 * 7 * 7 + (f * 4) * (f * 2) * 25 + (f * 2) * f * 25 + f * c.channels * 25
+    # discriminator: conv_blocks convs + classifier
+    d = c.channels * f * 25 + f * f * 2 * 25 + f * 2 * f * 4 * 25 + f * 4 * 7 * 7
+    return int(g + d)
+
+
+# ---------------------------------------------------------------------------
+# Parallelism / runtime
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ParallelConfig:
+    # mesh
+    data_axis: str = "data"
+    model_axis: str = "model"
+    pod_axis: str = "pod"
+    # strategies
+    fsdp: bool = True                     # shard params over `data` too
+    tensor_parallel: bool = True          # shard heads/ffn over `model`
+    expert_parallel: bool = True          # shard experts over `model`
+    sequence_parallel: bool = True        # shard residuals over `model` on seq dim
+    # training memory knobs
+    microbatches: int = 1                 # gradient-accumulation steps
+    remat: str = "full"                   # "none" | "full" | "dots"
+    scan_layers: bool = True              # False => unrolled (probe mode)
+    unroll_microbatches: bool = False     # True => python loop (probe mode)
+    # numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    accum_dtype: str = "float32"          # gradient-accumulation dtype
+    cache_dtype: str = "bfloat16"         # KV/decode-state dtype
+    # attention kernel dispatch
+    use_flash_kernel: bool = False        # Pallas kernels opt-in (tests turn on)
+
+
+@dataclass
+class OptimConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    schedule: str = "constant"            # "constant" | "cosine" | "linear"
+    warmup_steps: int = 0
+    total_steps: int = 1000
+    state_dtype: str = ""                 # "" => same as param dtype
+
+
+@dataclass
+class FSLConfig:
+    """Paper knobs: clients, devices-per-client, selection, averaging cadence."""
+    num_clients: int = 5
+    devices_per_client: int = 4
+    selection: str = "sorted_multi"       # random_single|random_multi|sorted_single|sorted_multi
+    local_steps: int = 1                  # FedAvg cadence (1 == per-step sync)
+    lan_latency_s: float = 0.050          # paper: 50 ms per LAN hop
+    weighted_average: bool = True         # weight FedAvg by client example counts
+    heterogeneity: str = "paper"          # device-pool preset (see core/devices.py)
+    seed: int = 0
+
+
+@dataclass
+class ShapeConfig:
+    name: str = "train_4k"
+    seq_len: int = 4096
+    global_batch: int = 256
+    mode: str = "train"                   # "train" | "prefill" | "decode"
+
+
+# The four assigned input shapes.
+INPUT_SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass
+class RunConfig:
+    model: ModelConfig = field(default_factory=ModelConfig)
+    parallel: ParallelConfig = field(default_factory=ParallelConfig)
+    optim: OptimConfig = field(default_factory=OptimConfig)
+    fsl: FSLConfig = field(default_factory=FSLConfig)
+    shape: ShapeConfig = field(default_factory=lambda: INPUT_SHAPES["train_4k"])
+    seed: int = 0
+
+    # ------------------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2, default=str)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "RunConfig":
+        return _from_dict(cls, d)
+
+    def override(self, dotted: Dict[str, Any]) -> "RunConfig":
+        """Apply {'model.d_model': 512, ...} style overrides, returning a copy."""
+        d = self.to_dict()
+        for path, val in dotted.items():
+            cur = d
+            parts = path.split(".")
+            for p in parts[:-1]:
+                cur = cur[p]
+            if parts[-1] not in cur:
+                raise KeyError(f"unknown config key {path!r}")
+            cur[parts[-1]] = _coerce(cur[parts[-1]], val)
+        return RunConfig.from_dict(d)
+
+    def validate(self) -> "RunConfig":
+        m = self.model
+        if m.family != DCGAN:
+            if m.family != SSM and m.num_heads % max(1, m.num_kv_heads) != 0:
+                raise ValueError("num_heads must be divisible by num_kv_heads")
+            if m.moe.enabled and m.moe.top_k > m.moe.num_experts:
+                raise ValueError("top_k > num_experts")
+        if self.shape.mode == "decode" and m.family in (DENSE, MOE, VLM) \
+                and self.shape.seq_len > 65536 and m.attention != ATTN_SLIDING:
+            raise ValueError(
+                f"{m.name}: long-context decode requires sub-quadratic attention "
+                "(set model.attention='sliding')")
+        return self
+
+
+def _coerce(old: Any, new: Any) -> Any:
+    if isinstance(new, str) and old is not None and not isinstance(old, str):
+        t = type(old)
+        if t is bool:
+            return new.lower() in ("1", "true", "yes")
+        return t(new)
+    return new
+
+
+def _from_dict(cls: Any, d: Dict[str, Any]) -> Any:
+    kwargs = {}
+    for f in fields(cls):
+        if f.name not in d:
+            continue
+        v = d[f.name]
+        if dataclasses.is_dataclass(f.type) if isinstance(f.type, type) else False:
+            kwargs[f.name] = _from_dict(f.type, v)
+        elif f.name in _NESTED.get(cls, {}):
+            kwargs[f.name] = _from_dict(_NESTED[cls][f.name], v)
+        elif isinstance(v, list):
+            kwargs[f.name] = tuple(v)
+        else:
+            kwargs[f.name] = v
+    return cls(**kwargs)
+
+
+_NESTED = {
+    ModelConfig: {"moe": MoEConfig, "mla": MLAConfig, "rwkv": RWKVConfig,
+                  "rglru": RGLRUConfig, "encdec": EncDecConfig, "dcgan": DCGANConfig},
+    RunConfig: {"model": ModelConfig, "parallel": ParallelConfig,
+                "optim": OptimConfig, "fsl": FSLConfig, "shape": ShapeConfig},
+}
+
+
+# ---------------------------------------------------------------------------
+# Smoke reduction
+# ---------------------------------------------------------------------------
+
+def reduce_for_smoke(cfg: RunConfig, *, seq_len: int = 64, batch: int = 2) -> RunConfig:
+    """Reduced variant of the same family: 2 layers, d_model<=512, <=4 experts."""
+    d = cfg.to_dict()
+    m = d["model"]
+    m["num_layers"] = 2
+    scale = max(1, m["d_model"] // 256)
+    m["d_model"] = min(m["d_model"], 256)
+    m["num_heads"] = max(1, min(m["num_heads"], 4))
+    m["num_kv_heads"] = max(1, min(m["num_kv_heads"], m["num_heads"],
+                                   max(1, m["num_kv_heads"])))
+    if m["num_heads"] % m["num_kv_heads"]:
+        m["num_kv_heads"] = 1
+    m["head_dim"] = m["d_model"] // m["num_heads"]
+    m["d_ff"] = min(m["d_ff"], 512)
+    m["vocab_size"] = min(m["vocab_size"], 512)
+    m["max_seq_len"] = max(seq_len * 2, 128)
+    if m["moe"]["num_experts"]:
+        m["moe"]["num_experts"] = 4
+        m["moe"]["num_shared_experts"] = min(1, m["moe"]["num_shared_experts"])
+        m["moe"]["top_k"] = 2
+        m["moe"]["d_ff_expert"] = min(m["moe"]["d_ff_expert"] or 128, 128)
+    if m["mla"]["kv_lora_rank"]:
+        m["mla"]["kv_lora_rank"] = 64
+        m["mla"]["rope_head_dim"] = 16
+        m["mla"]["v_head_dim"] = m["head_dim"]
+    if m["rwkv"]["head_dim"] and d["model"]["family"] == SSM:
+        m["rwkv"]["head_dim"] = 32
+        m["rwkv"]["decay_lora"] = 16
+        m["rwkv"]["token_shift_lora"] = 8
+        m["rwkv"]["gate_lora"] = 16
+    if m["rglru"]["pattern"]:
+        m["rglru"]["lru_width"] = m["d_model"]
+        m["rglru"]["window"] = min(m["rglru"]["window"], seq_len)
+    if m["encdec"]["encoder_layers"]:
+        m["encdec"]["encoder_layers"] = 2
+        m["encdec"]["encoder_seq"] = 32
+    d["shape"] = {"name": "smoke", "seq_len": seq_len, "global_batch": batch,
+                  "mode": d["shape"]["mode"]}
+    d["parallel"]["microbatches"] = 1
+    d["parallel"]["param_dtype"] = "float32"
+    d["parallel"]["compute_dtype"] = "float32"
+    out = RunConfig.from_dict(d)
+    return out

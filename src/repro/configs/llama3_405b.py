@@ -1,0 +1,26 @@
+"""llama3-405b — dense, 126L d_model=16384 128H (GQA kv=8) d_ff=53248
+vocab=128256. The scale stressor for the production mesh. [arXiv:2407.21783]
+
+Dry-run memory accounting uses bf16 params + bf16 Adam moments (ZeRO-style
+fully sharded); see EXPERIMENTS.md §Dry-run for the per-device bytes.
+"""
+from repro.config import ModelConfig, OptimConfig, ParallelConfig, RunConfig
+
+
+def config() -> RunConfig:
+    return RunConfig(
+        model=ModelConfig(
+            name="llama3-405b", family="dense",
+            num_layers=126, d_model=16384, num_heads=128, num_kv_heads=8,
+            head_dim=128, d_ff=53248, vocab_size=128256, max_seq_len=8192,
+            rope_theta=500_000.0,
+            source="[arXiv:2407.21783]",
+        ),
+        # microbatches=16 keeps per-microbatch batch (256/16) == data axis
+        # extent so activations stay batch-sharded (EXPERIMENTS §Perf it1)
+        parallel=ParallelConfig(param_dtype="bfloat16", microbatches=16,
+                                accum_dtype="bfloat16"),
+        optim=OptimConfig(lr=8e-5, weight_decay=0.1, schedule="cosine",
+                          warmup_steps=2000, total_steps=50_000,
+                          state_dtype="bfloat16"),
+    ).validate()

@@ -1,0 +1,9 @@
+"""FSL-GAN core: the paper's contribution (split + selection + fedavg + GAN)."""
+from repro.core.devices import Client, Device, make_pool  # noqa: F401
+from repro.core.fedavg import (fedavg, fedavg_collective,  # noqa: F401
+                               fedavg_weighted_collective)
+from repro.core.gan import FSLGANTrainer, bce_logits, d_loss_fn, g_loss_fn  # noqa: F401
+from repro.core.selection import STRATEGIES, make_plan, plan_all_clients  # noqa: F401
+from repro.core.simulate import epoch_time_report, strategy_sweep  # noqa: F401
+from repro.core.split import (InfeasibleSplit, Portion, SplitPlan,  # noqa: F401
+                              split_forward)

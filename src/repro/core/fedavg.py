@@ -1,0 +1,61 @@
+"""FedAvg aggregation (McMahan et al. 2017), as used by the paper for the
+discriminator parameters.
+
+Two forms:
+  * fedavg(trees, weights)        host-side, cross-silo: explicit list of
+                                  client parameter trees (the paper's setting
+                                  — sequential simulation on one accelerator).
+  * fedavg_collective(tree, axis) in-mesh: parameters live sharded on the
+                                  pod; averaging is one `lax.pmean` over the
+                                  data axis inside shard_map/pjit (the
+                                  TPU-native adaptation, DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def _check_same_structure(trees: Sequence) -> None:
+    s0 = jax.tree.structure(trees[0])
+    for i, t in enumerate(trees[1:], 1):
+        if jax.tree.structure(t) != s0:
+            raise ValueError(f"client tree {i} structure differs from client 0")
+
+
+def fedavg(trees: Sequence, weights: Optional[Sequence[float]] = None):
+    """Weighted average of parameter pytrees (fp32 accumulate)."""
+    if not trees:
+        raise ValueError("fedavg of zero clients")
+    _check_same_structure(trees)
+    if weights is None:
+        weights = [1.0] * len(trees)
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.sum(w)
+
+    def avg(*leaves):
+        acc = sum(l.astype(jnp.float32) * w[i] for i, l in enumerate(leaves))
+        return acc.astype(leaves[0].dtype)
+
+    return jax.tree.map(avg, *trees)
+
+
+def fedavg_collective(tree, axis_name: str):
+    """Average a replicated-per-client tree over a mesh axis (use inside
+    shard_map). Equal-weight clients; weighted form scales before pmean."""
+    return jax.tree.map(
+        lambda x: jax.lax.pmean(x.astype(jnp.float32), axis_name
+                                ).astype(x.dtype), tree)
+
+
+def fedavg_weighted_collective(tree, weight, axis_name: str):
+    """Weighted in-mesh FedAvg: weight is this shard's client weight."""
+    wsum = jax.lax.psum(jnp.asarray(weight, jnp.float32), axis_name)
+
+    def avg(x):
+        contrib = x.astype(jnp.float32) * weight
+        return (jax.lax.psum(contrib, axis_name) / wsum).astype(x.dtype)
+
+    return jax.tree.map(avg, tree)

@@ -1,0 +1,175 @@
+"""FSL-GAN training (paper §3-§5).
+
+Roles:
+  * **Server** owns the generator G. It never sees real data — it only ships
+    generated (fake) images to clients and receives averaged discriminator
+    parameters, which is the paper's privacy argument.
+  * **Clients** each own a discriminator replica D_c trained on their local
+    real data + the server's fakes. After ``local_steps`` batches the D
+    parameters are FedAvg'd (weighted by client example counts).
+  * Within a client, D training is *split* across that client's devices
+    per the SplitPlan (core/split.py). The split changes wall-time (priced
+    by core/simulate.py), not math — split_forward == monolithic forward is
+    a pinned test invariant, so the simulation trains the monolithic D.
+
+Losses: non-saturating DCGAN BCE.
+    L_D = BCE(D(x_real), 1) + BCE(D(G(z)), 0)
+    L_G = BCE(D(G(z)), 1)
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import RunConfig
+from repro.core.devices import make_pool
+from repro.core.fedavg import fedavg
+from repro.core.selection import plan_all_clients
+from repro.core.split import SplitPlan
+from repro.models.dcgan import (disc_apply, disc_init, disc_layer_costs,
+                                disc_layer_names, gen_apply, gen_init)
+from repro.optim import make_optimizer
+
+
+def bce_logits(logits: jnp.ndarray, target: float) -> jnp.ndarray:
+    """Numerically-stable binary cross entropy with logits."""
+    l = logits.astype(jnp.float32)
+    t = jnp.full_like(l, target)
+    return jnp.mean(jnp.maximum(l, 0) - l * t + jnp.log1p(jnp.exp(-jnp.abs(l))))
+
+
+def d_loss_fn(d_params, real, fake, c) -> jnp.ndarray:
+    return (bce_logits(disc_apply(d_params, real, c), 1.0)
+            + bce_logits(disc_apply(d_params, fake, c), 0.0))
+
+
+def g_loss_fn(g_params, d_params, z, c) -> jnp.ndarray:
+    fake = gen_apply(g_params, z, c)
+    return bce_logits(disc_apply(d_params, fake, c), 1.0)
+
+
+@dataclass
+class GANState:
+    g_params: Any
+    g_opt: Any
+    d_params: Dict[str, Any]          # per-client discriminator replicas
+    d_opt: Dict[str, Any]
+    step: int = 0
+    history: Dict[str, List[float]] = field(default_factory=dict)
+
+
+class FSLGANTrainer:
+    """Paper-faithful sequential simulation (clients share one accelerator,
+    exactly like the paper's Colab runs)."""
+
+    def __init__(self, cfg: RunConfig, client_data: Dict[str, np.ndarray],
+                 seed: int = 0):
+        self.cfg = cfg
+        self.c = cfg.model.dcgan
+        self.client_ids = list(client_data)
+        self.client_data = client_data
+        self.batch_size = cfg.shape.global_batch
+        key = jax.random.PRNGKey(seed)
+        kg, kd = jax.random.split(key)
+        self.g_optimizer = make_optimizer(cfg.optim)
+        self.d_optimizer = make_optimizer(cfg.optim)
+        g_params = gen_init(kg, self.c)
+        d0 = disc_init(kd, self.c)
+        self.state = GANState(
+            g_params=g_params,
+            g_opt=self.g_optimizer.init(g_params),
+            d_params={cid: jax.tree.map(jnp.copy, d0)
+                      for cid in self.client_ids},
+            d_opt={cid: self.d_optimizer.init(d0) for cid in self.client_ids},
+        )
+        # split planning (prices the wall-time; see simulate.py)
+        pool = make_pool(cfg.fsl.heterogeneity, cfg.fsl.num_clients,
+                         cfg.fsl.devices_per_client, cfg.fsl.seed)
+        costs = disc_layer_costs(self.c)
+        layers = [(n, costs[n]) for n in disc_layer_names(self.c)]
+        self.plans: Dict[str, SplitPlan] = plan_all_clients(
+            pool, layers, cfg.fsl.selection, cfg.fsl.seed)
+        self._rng = np.random.default_rng(seed)
+        self._build_steps()
+
+    # ------------------------------------------------------------------
+    def _build_steps(self):
+        c, lr = self.c, self.cfg.optim.lr
+
+        @jax.jit
+        def d_step(d_params, d_opt, real, fake):
+            loss, grads = jax.value_and_grad(d_loss_fn)(d_params, real, fake, c)
+            d_params, d_opt = self.d_optimizer.update(grads, d_opt, d_params,
+                                                      jnp.asarray(lr))
+            return d_params, d_opt, loss
+
+        @jax.jit
+        def g_step(g_params, g_opt, d_params, z):
+            loss, grads = jax.value_and_grad(g_loss_fn)(g_params, d_params, z, c)
+            g_params, g_opt = self.g_optimizer.update(grads, g_opt, g_params,
+                                                      jnp.asarray(lr))
+            return g_params, g_opt, loss
+
+        @jax.jit
+        def gen_batch(g_params, z):
+            return gen_apply(g_params, z, c)
+
+        self._d_step, self._g_step, self._gen = d_step, g_step, gen_batch
+
+    def _sample_real(self, cid: str, n: int) -> jnp.ndarray:
+        data = self.client_data[cid]
+        idx = self._rng.integers(0, len(data), n)
+        return jnp.asarray(data[idx])
+
+    def _z(self, n: int) -> jnp.ndarray:
+        return jnp.asarray(self._rng.standard_normal(
+            (n, self.c.latent_dim), dtype=np.float32))
+
+    # ------------------------------------------------------------------
+    def train_epoch(self, batches_per_client: int = 24) -> Dict[str, float]:
+        """One FL round = paper epoch: local D training then FedAvg then G."""
+        st = self.state
+        d_losses = []
+        active = [cid for cid in self.client_ids if cid in self.plans] \
+            or self.client_ids
+        for cid in active:
+            dp, do = st.d_params[cid], st.d_opt[cid]
+            for b in range(batches_per_client):
+                real = self._sample_real(cid, self.batch_size)
+                fake = self._gen(st.g_params, self._z(self.batch_size))
+                # server ships fakes; client never shares `real`
+                dp, do, dl = self._d_step(dp, do, real,
+                                          jax.lax.stop_gradient(fake))
+                d_losses.append(float(dl))
+            st.d_params[cid], st.d_opt[cid] = dp, do
+
+        # FedAvg over client discriminators (weighted by examples)
+        weights = ([len(self.client_data[cid]) for cid in active]
+                   if self.cfg.fsl.weighted_average else None)
+        d_avg = fedavg([st.d_params[cid] for cid in active], weights)
+        for cid in self.client_ids:
+            st.d_params[cid] = jax.tree.map(jnp.copy, d_avg)
+
+        # server G update against the averaged D (never touches real data)
+        g_losses = []
+        for _ in range(batches_per_client):
+            st.g_params, st.g_opt, gl = self._g_step(
+                st.g_params, st.g_opt, d_avg, self._z(self.batch_size))
+            g_losses.append(float(gl))
+        st.step += 1
+        metrics = {"d_loss": float(np.mean(d_losses)),
+                   "g_loss": float(np.mean(g_losses)),
+                   "num_clients": float(len(active))}
+        for k, v in metrics.items():
+            st.history.setdefault(k, []).append(v)
+        return metrics
+
+    def generate(self, n: int, seed: int = 0) -> np.ndarray:
+        z = jax.random.normal(jax.random.PRNGKey(seed),
+                              (n, self.c.latent_dim))
+        return np.asarray(self._gen(self.state.g_params, z))

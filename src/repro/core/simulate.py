@@ -1,0 +1,82 @@
+"""Analytic time model for FSL-GAN epochs (reproduces Fig 2).
+
+The paper measures, per splitting strategy, the per-epoch wall time of the
+*slowest* client (the system bottleneck), with
+  - per-device compute time = (portion compute units) x Time_Factor,
+  - 50 ms per LAN hop between devices of one client,
+  - 24 batches per client per epoch, communication counted per batch,
+  - forward + backward both traverse the chain (2x hops), backward ~2x
+    forward compute (standard 1:2 fwd:bwd FLOP ratio).
+
+On a TPU pod the same model prices ICI hops instead of LAN (see
+roofline/hw.py); the LAN constants here deliberately mirror the paper.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.devices import Client
+from repro.core.selection import make_plan, plan_all_clients
+from repro.core.split import SplitPlan
+
+BWD_FWD_RATIO = 2.0
+
+
+@dataclass
+class TimeReport:
+    per_client: Dict[str, float]          # epoch seconds per client
+    slowest_client: str
+    slowest_time: float
+    mean_time: float
+
+
+def plan_epoch_time(plan: SplitPlan, client: Client,
+                    batches_per_epoch: int = 24,
+                    lan_latency_s: float = 0.050,
+                    compute_unit_s: float = 0.010) -> float:
+    """Seconds for one epoch of discriminator training under this plan.
+
+    The SL chain is sequential per batch: every device computes its portion
+    (fwd then bwd), activations/gradients hop the LAN at each boundary.
+    """
+    tf = {d.device_id: d.time_factor for d in client.devices}
+    compute = sum(p.cost * compute_unit_s * tf[p.device_id] * (1 + BWD_FWD_RATIO)
+                  for p in plan.portions)
+    hops = plan.num_boundaries * 2          # forward + backward traversal
+    per_batch = compute + hops * lan_latency_s
+    return per_batch * batches_per_epoch
+
+
+def epoch_time_report(clients: List[Client],
+                      layers: Sequence[Tuple[str, float]], strategy: str,
+                      seed: int = 0, batches_per_epoch: int = 24,
+                      lan_latency_s: float = 0.050,
+                      compute_unit_s: float = 0.010) -> TimeReport:
+    plans = plan_all_clients(clients, layers, strategy, seed)
+    if not plans:
+        raise ValueError("no feasible client")
+    by_id = {c.client_id: c for c in clients}
+    times = {cid: plan_epoch_time(p, by_id[cid], batches_per_epoch,
+                                  lan_latency_s, compute_unit_s)
+             for cid, p in plans.items()}
+    slowest = max(times, key=times.get)
+    return TimeReport(per_client=times, slowest_client=slowest,
+                      slowest_time=times[slowest],
+                      mean_time=float(np.mean(list(times.values()))))
+
+
+def strategy_sweep(clients: List[Client],
+                   layers: Sequence[Tuple[str, float]],
+                   seeds: Sequence[int] = range(10),
+                   **kw) -> Dict[str, Tuple[float, float]]:
+    """Fig 2: mean +/- std of slowest-client epoch time per strategy."""
+    from repro.core.selection import STRATEGIES
+    out = {}
+    for s in STRATEGIES:
+        vals = [epoch_time_report(clients, layers, s, seed=sd, **kw)
+                .slowest_time for sd in seeds]
+        out[s] = (float(np.mean(vals)), float(np.std(vals)))
+    return out

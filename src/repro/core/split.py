@@ -1,0 +1,81 @@
+"""Model splitting (paper §3.2/§4): partition an ordered layer stack into
+contiguous *portions* and assign each portion to one of a client's devices.
+
+The planner is model-agnostic: it consumes an ordered list of
+(layer_name, cost) pairs — the DCGAN discriminator's conv blocks, or any
+assigned transformer architecture's blocks (the paper's technique applied
+beyond GANs; see DESIGN.md §4).
+
+A :class:`SplitPlan` is the paper's central artifact: which device trains
+which contiguous layer range. ``plan_time()`` (core/simulate.py) prices it;
+``split_forward`` (this module) executes it portion-by-portion and is
+numerically identical to the unsplit forward — the property the tests pin.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.devices import Client, Device
+
+
+@dataclass(frozen=True)
+class Portion:
+    """A contiguous run of layers assigned to one device."""
+    device_id: str
+    layer_names: Tuple[str, ...]
+    cost: float                 # sum of layer costs (compute units)
+
+
+@dataclass
+class SplitPlan:
+    client_id: str
+    portions: List[Portion] = field(default_factory=list)
+
+    @property
+    def num_boundaries(self) -> int:
+        """Device-to-device hand-offs along the chain (LAN hops, fwd)."""
+        n = 0
+        for a, b in zip(self.portions, self.portions[1:]):
+            if a.device_id != b.device_id:
+                n += 1
+        return n
+
+    def layers_in_order(self) -> List[str]:
+        return [n for p in self.portions for n in p.layer_names]
+
+    def device_loads(self) -> Dict[str, float]:
+        loads: Dict[str, float] = {}
+        for p in self.portions:
+            loads[p.device_id] = loads.get(p.device_id, 0.0) + p.cost
+        return loads
+
+    def validate(self, layer_names: Sequence[str]) -> None:
+        got = self.layers_in_order()
+        if got != list(layer_names):
+            raise ValueError(
+                f"split plan does not cover the model in order:\n"
+                f"  expected {list(layer_names)}\n  got      {got}")
+
+
+class InfeasibleSplit(Exception):
+    """Client lacks capacity to host the model (paper: client is dropped)."""
+
+
+# ---------------------------------------------------------------------------
+# split execution — numerically identical to the unsplit forward
+# ---------------------------------------------------------------------------
+
+def split_forward(x, plan: SplitPlan,
+                  apply_layer: Callable[[str, object], object]):
+    """Run a forward pass portion-by-portion, as the devices would.
+
+    ``apply_layer(name, x) -> x`` applies one named layer. On real FSL
+    hardware each portion runs on its own device with activations crossing
+    the LAN at portion boundaries; here the boundary is a list hop, and the
+    result is bit-identical to the monolithic forward (tested property).
+    """
+    for portion in plan.portions:
+        for name in portion.layer_names:
+            x = apply_layer(name, x)
+    return x

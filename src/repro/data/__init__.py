@@ -1,0 +1,5 @@
+from repro.data.synthetic import (  # noqa: F401
+    synthetic_mnist, synthetic_tokens, synthetic_lm_batch,
+)
+from repro.data.federated import partition_iid, partition_dirichlet  # noqa: F401
+from repro.data.pipeline import BatchIterator  # noqa: F401

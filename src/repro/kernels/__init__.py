@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the substrate's compute hot-spots.
+
+The paper itself has no kernel-level contribution (DESIGN.md §6); these
+kernels serve the assigned-architecture substrate:
+
+  flash_attention   blockwise online-softmax attention (causal, GQA, window)
+  wkv6              RWKV-6 data-dependent-decay recurrence, chunked
+  fedavg            streaming weighted parameter average (paper's aggregation)
+
+Each kernel package: ``kernel.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jit'd public wrapper with padding/layout glue),
+``ref.py`` (pure-jnp oracle used by the allclose test sweeps).
+"""

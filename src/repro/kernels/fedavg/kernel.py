@@ -1,0 +1,39 @@
+"""Streaming weighted parameter average as a Pallas kernel.
+
+The paper's aggregation step (FedAvg over client discriminator params) is
+trivially memory-bound: out[n] = sum_c w[c] * params[c, n]. The kernel
+streams (C, bn) tiles through VMEM and does the reduction on the VPU —
+one HBM read per element, the roofline floor for this op. It exists to give
+the paper's own aggregation an explicit, measured kernel (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fedavg_kernel(x_ref, w_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # (C, bn)
+    w = w_ref[...].astype(jnp.float32)          # (C, 1)
+    o_ref[...] = jnp.sum(x * w, axis=0, keepdims=True).astype(o_ref.dtype)
+
+
+def fedavg_kernel(stacked: jnp.ndarray, weights: jnp.ndarray, *,
+                  block_n: int = 4096, interpret: bool = False) -> jnp.ndarray:
+    """stacked: (C, N) client-major flat params; weights: (C,), sums to 1."""
+    c, n = stacked.shape
+    block_n = min(block_n, n)
+    assert n % block_n == 0
+    w2 = weights.reshape(c, 1)
+    return pl.pallas_call(
+        _fedavg_kernel,
+        grid=(n // block_n,),
+        in_specs=[pl.BlockSpec((c, block_n), lambda i: (0, i)),
+                  pl.BlockSpec((c, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), stacked.dtype),
+        interpret=interpret,
+    )(stacked, w2)[0]

@@ -1,0 +1,40 @@
+"""Public fedavg op: pytree <-> flat glue around the Pallas kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fedavg.kernel import fedavg_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fedavg_flat(stacked: jnp.ndarray, weights: jnp.ndarray,
+                interpret: bool = False) -> jnp.ndarray:
+    """stacked: (C, N) -> (N,). Pads N to the 4096-wide tile."""
+    c, n = stacked.shape
+    pad = (-n) % 4096
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+    w = weights / jnp.sum(weights)
+    return fedavg_kernel(stacked, w, interpret=interpret)[:n]
+
+
+def fedavg_trees(trees: Sequence, weights: Optional[Sequence[float]] = None,
+                 interpret: bool = False):
+    """Kernel-backed FedAvg over a list of identical-structure pytrees."""
+    if weights is None:
+        weights = [1.0] * len(trees)
+    w = jnp.asarray(weights, jnp.float32)
+    flats, treedef = zip(*[jax.tree.flatten(t) for t in trees])
+    treedef = jax.tree.structure(trees[0])
+    out_leaves = []
+    for leaves in zip(*flats):
+        shape, dtype = leaves[0].shape, leaves[0].dtype
+        stacked = jnp.stack([l.reshape(-1).astype(jnp.float32)
+                             for l in leaves])
+        avg = fedavg_flat(stacked, w, interpret=interpret)
+        out_leaves.append(avg.reshape(shape).astype(dtype))
+    return jax.tree.unflatten(treedef, out_leaves)

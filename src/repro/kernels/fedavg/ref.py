@@ -1,0 +1,8 @@
+"""Oracle for the fedavg kernel."""
+import jax.numpy as jnp
+
+
+def fedavg_ref(stacked: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """stacked: (C, N); weights: (C,) summing to 1 -> (N,)."""
+    return jnp.sum(stacked.astype(jnp.float32) * weights[:, None], axis=0
+                   ).astype(stacked.dtype)

@@ -1,0 +1,141 @@
+"""Flash attention as a Pallas TPU kernel.
+
+Blockwise online-softmax (Dao et al.) adapted to TPU:
+  * grid = (batch, q_heads, q_blocks, kv_blocks) — the kv dimension is the
+    innermost *sequential* grid axis; VMEM scratch (running max, denom,
+    accumulator) persists across kv iterations, which is the TPU-idiomatic
+    replacement for a CUDA thread-block's shared-memory loop.
+  * BlockSpec tiles: q (1,1,bq,d), k/v (1,1,bk,d) — bq/bk default 128/256 so
+    the working set (q + k + v + acc ≈ bq*d + 2*bk*d + bq*d floats) stays
+    well under the ~16 MB/core VMEM budget while the bq x bk score matmul
+    feeds the 128x128 MXU with aligned shapes.
+  * GQA folds into the k/v index_map (kv head = q head // group) — no
+    repeated K/V materialisation in HBM.
+  * causal + sliding-window masks are computed from global indices; fully
+    masked kv blocks are skipped with ``pl.when`` (no MXU work issued).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int, seq_q: int,
+                  seq_k: int, causal: bool, window: int, q_offset: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # global positions of this tile
+    q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    # is any (q, k) pair in this tile unmasked?  (static-shape predicate)
+    run = True
+    if causal:
+        first_q = q_offset + qi * block_q
+        last_q = first_q + block_q - 1
+        first_k = ki * block_k
+        run = jnp.asarray(first_k <= last_q)
+        if window > 0:
+            last_k = first_k + block_k - 1
+            run = run & jnp.asarray(first_q - window + 1 <= last_k)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)        # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)        # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)        # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = (k_pos < seq_k) & (q_pos < seq_q)
+        if causal:
+            mask &= q_pos >= k_pos
+            if window > 0:
+                mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                         # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                           causal: bool = True, window: int = 0,
+                           scale: Optional[float] = None,
+                           block_q: int = 128, block_k: int = 256,
+                           seq_q_valid: Optional[int] = None,
+                           seq_k_valid: Optional[int] = None,
+                           q_offset: int = 0,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, Sq, D); k/v: (B, Hkv, Sk, D), H % Hkv == 0.
+
+    Sq/Sk must already be padded to block multiples (ops.py does this);
+    seq_*_valid give the unpadded lengths for masking. ``q_offset`` is the
+    global position of q row 0 (used for the decode/chunked case).
+    """
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert h % hkv == 0, (h, hkv)
+    groups = h // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0
+    scale = d ** -0.5 if scale is None else scale
+    grid = (b, h, sq // block_q, sk // block_k)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        seq_q=(seq_q_valid if seq_q_valid is not None else sq) + q_offset,
+        seq_k=seq_k_valid if seq_k_valid is not None else sk,
+        causal=causal, window=window, q_offset=q_offset)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, qi, ki, g=groups: (b_, h_ // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, qi, ki, g=groups: (b_, h_ // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,60 @@
+"""Public flash-attention op: layout/padding glue around the Pallas kernel.
+
+Accepts model-layout tensors (B, S, H, D) (as produced by the attention
+blocks), pads sequence lengths to block multiples, transposes to the kernel
+layout (B, H, S, D), and dispatches. ``interpret=True`` runs the kernel body
+in Python on CPU (used by every test in this container); on a real TPU the
+same call lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 256,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """q: (B, Sq, H, D); k/v: (B, Sk, Hkv, D) -> (B, Sq, H, D).
+
+    interpret=None auto-selects: Mosaic on TPU, interpreter elsewhere.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            block_q=block_q, block_k=block_k,
+                            interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def _flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                     causal: bool = True, window: int = 0,
+                     block_q: int = 128, block_k: int = 256,
+                     interpret: bool = False) -> jnp.ndarray:
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    qt = _pad_to(jnp.swapaxes(q, 1, 2), 2, block_q)
+    kt = _pad_to(jnp.swapaxes(k, 1, 2), 2, block_k)
+    vt = _pad_to(jnp.swapaxes(v, 1, 2), 2, block_k)
+    out = flash_attention_kernel(
+        qt, kt, vt, causal=causal, window=window,
+        block_q=min(block_q, qt.shape[2]), block_k=min(block_k, kt.shape[2]),
+        seq_q_valid=sq, seq_k_valid=sk, interpret=interpret)
+    return jnp.swapaxes(out[:, :, :sq], 1, 2)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0,
+                  scale: Optional[float] = None,
+                  q_offset: int = 0) -> jnp.ndarray:
+    """q: (B, H, Sq, D); k/v: (B, Hkv, Sk, D). fp32 math throughout."""
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    groups = h // hkv
+    k = jnp.repeat(k, groups, axis=1)
+    v = jnp.repeat(v, groups, axis=1)
+    scale = d ** -0.5 if scale is None else scale
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        q_pos = q_offset + jnp.arange(sq)[:, None]
+        k_pos = jnp.arange(sk)[None, :]
+        mask = q_pos >= k_pos
+        if window > 0:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

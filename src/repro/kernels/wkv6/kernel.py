@@ -1,0 +1,90 @@
+"""RWKV-6 WKV recurrence as a Pallas TPU kernel.
+
+TPU adaptation (DESIGN.md §6): the original CUDA kernel assigns one thread
+per channel and keeps state in registers/shared memory. Here each grid cell
+(batch b, head h) keeps its (N x N) state in VMEM **scratch that persists
+across the sequential time-chunk grid axis**, so the state never round-trips
+to HBM during the scan; r/k/v/w stream through VMEM one (bt x N) chunk at a
+time. The per-step update is VPU work on (N, N) tiles (N = head_dim, 64 for
+rwkv6-1.6b — one fp32 (8,128)-lane tile pair).
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sT_ref,
+                 state_scr, *, block_t: int):
+    tc = pl.program_id(2)
+    ntc = pl.num_programs(2)
+
+    @pl.when(tc == 0)
+    def _init():
+        state_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    rr = r_ref[0, :, 0, :].astype(jnp.float32)      # (bt, N)
+    kk = k_ref[0, :, 0, :].astype(jnp.float32)
+    vv = v_ref[0, :, 0, :].astype(jnp.float32)
+    ww = w_ref[0, :, 0, :].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)                # (N,)
+    S = state_scr[...]
+
+    def step(i, carry):
+        S, out = carry
+        rt = jax.lax.dynamic_slice_in_dim(rr, i, 1, 0)    # (1, N)
+        kt = jax.lax.dynamic_slice_in_dim(kk, i, 1, 0)
+        vt = jax.lax.dynamic_slice_in_dim(vv, i, 1, 0)
+        wt = jax.lax.dynamic_slice_in_dim(ww, i, 1, 0)
+        kv = kt.T * vt                                     # (N, N) outer
+        ot = rt @ (S + u[:, None] * kv)                    # (1, N)
+        S = wt.T * S + kv
+        out = jax.lax.dynamic_update_slice_in_dim(out, ot, i, 0)
+        return S, out
+
+    S, out = jax.lax.fori_loop(0, block_t, step,
+                               (S, jnp.zeros((block_t, rr.shape[1]),
+                                             jnp.float32)))
+    state_scr[...] = S
+    o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+    @pl.when(tc == ntc - 1)
+    def _finish():
+        sT_ref[0, 0] = state_scr[...].astype(sT_ref.dtype)
+
+
+def wkv6_kernel(r, k, v, w, u, state0, *, block_t: int = 64,
+                interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """r/k/v/w: (B, T, H, N) fp32; u: (H, N); state0: (B, H, N, N).
+
+    T must be a multiple of block_t (ops.py pads with w=1, k=0 steps which
+    are exact no-ops on the state). Returns (out (B,T,H,N), sT (B,H,N,N)).
+    """
+    b, t, h, n = r.shape
+    assert t % block_t == 0, (t, block_t)
+    grid = (b, h, t // block_t)
+    io_spec = pl.BlockSpec((1, block_t, 1, n),
+                           lambda b_, h_, tc: (b_, tc, h_, 0))
+    kernel = functools.partial(_wkv6_kernel, block_t=block_t)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[io_spec, io_spec, io_spec, io_spec,
+                  pl.BlockSpec((1, n), lambda b_, h_, tc: (h_, 0)),
+                  pl.BlockSpec((1, 1, n, n), lambda b_, h_, tc: (b_, h_, 0, 0))],
+        out_specs=[io_spec,
+                   pl.BlockSpec((1, 1, n, n),
+                                lambda b_, h_, tc: (b_, h_, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((b, t, h, n), r.dtype),
+                   jax.ShapeDtypeStruct((b, h, n, n), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, state0)

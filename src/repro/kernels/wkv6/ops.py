@@ -1,0 +1,47 @@
+"""Public WKV-6 op: padding + dispatch glue around the Pallas kernel.
+
+Padding steps use w=1, k=0: the state update becomes S <- 1*S + 0, an exact
+no-op, so the padded tail never perturbs the carried state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.kernel import wkv6_kernel
+
+
+def wkv6(r, k, v, w, u, state0: Optional[jnp.ndarray] = None, *,
+         block_t: int = 64, interpret: Optional[bool] = None
+         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """r/k/v/w: (B, T, H, N); u: (H, N) -> (out (B,T,H,N), sT (B,H,N,N)).
+
+    interpret=None auto-selects: Mosaic on TPU, interpreter elsewhere.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _wkv6(r, k, v, w, u, state0, block_t=block_t, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def _wkv6(r, k, v, w, u, state0: Optional[jnp.ndarray] = None, *,
+          block_t: int = 64, interpret: bool = False
+          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, t, h, n = r.shape
+    if state0 is None:
+        state0 = jnp.zeros((b, h, n, n), jnp.float32)
+    bt = min(block_t, max(t, 8))
+    pad = (-t) % bt
+    if pad:
+        zeros = jnp.zeros((b, pad, h, n), r.dtype)
+        ones = jnp.ones((b, pad, h, n), w.dtype)
+        r = jnp.concatenate([r, zeros], axis=1)
+        k = jnp.concatenate([k, zeros], axis=1)
+        v = jnp.concatenate([v, zeros], axis=1)
+        w = jnp.concatenate([w, ones], axis=1)
+    out, sT = wkv6_kernel(r, k, v, w, u, state0, block_t=bt,
+                          interpret=interpret)
+    return out[:, :t], sT

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the WKV-6 kernel (same math as models/rwkv6.py)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, state0: Optional[jnp.ndarray] = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """r/k/v/w: (B, T, H, N); u: (H, N); state0: (B, H, N, N) or None."""
+    b, t, h, n = r.shape
+    if state0 is None:
+        state0 = jnp.zeros((b, h, n, n), jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhn,bhnm->bhm", rt,
+                         S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, out
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+               for a in (r, k, v, w))
+    S, outs = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype), S

@@ -1,0 +1,44 @@
+"""Multi-host initialisation for real pods.
+
+On a real v5e pod each host runs the same program; JAX discovers its local
+devices and the coordinator stitches the global mesh. This container has no
+TPU, so these helpers are exercised only by the dry-run (fake devices) and
+documented for real deployments (scripts/launch_pod.sh).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+
+def maybe_initialize_distributed(coordinator: Optional[str] = None,
+                                 num_processes: Optional[int] = None,
+                                 process_id: Optional[int] = None) -> bool:
+    """Initialise jax.distributed from args or the standard env vars
+    (COORDINATOR_ADDRESS / NUM_PROCESSES / PROCESS_ID). Returns True if
+    distributed mode was initialised."""
+    coordinator = coordinator or os.environ.get("COORDINATOR_ADDRESS")
+    if not coordinator:
+        return False
+    num_processes = num_processes or int(os.environ.get("NUM_PROCESSES", "1"))
+    process_id = process_id if process_id is not None \
+        else int(os.environ.get("PROCESS_ID", "0"))
+    jax.distributed.initialize(coordinator_address=coordinator,
+                               num_processes=num_processes,
+                               process_id=process_id)
+    return True
+
+
+def is_primary() -> bool:
+    return jax.process_index() == 0
+
+
+def log_topology() -> str:
+    info = (f"process {jax.process_index()}/{jax.process_count()} "
+            f"local_devices={jax.local_device_count()} "
+            f"global_devices={jax.device_count()}")
+    if is_primary():
+        print(info, flush=True)
+    return info

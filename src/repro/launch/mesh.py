@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set
+``--xla_force_host_platform_device_count`` *before* first jax init.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: (16, 16) = 256 v5e chips, axes (data, model).
+    Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_parallel: int = 1) -> Mesh:
+    """Whatever this host has (1 CPU device in the container) — used by
+    smoke tests and examples."""
+    n = len(jax.devices())
+    mp = model_parallel if n % model_parallel == 0 else 1
+    return jax.make_mesh((n // mp, mp), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+def mesh_chips(mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

@@ -1,0 +1,117 @@
+"""ShapeDtypeStruct stand-ins for every model input + sharding trees.
+
+``input_specs(cfg)`` returns the abstract arguments the dry-run lowers
+against — weak-type-correct, shardable, zero allocation. ``shardings(cfg,
+mesh)`` returns the matching NamedSharding trees for params / optimizer /
+inputs / decode state.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import AUDIO, RunConfig
+from repro.models.transformer import (decode_state_shapes, decode_state_specs,
+                                      lm_param_shapes, lm_specs)
+from repro.optim import make_optimizer
+from repro.sharding.specs import (AxisRules, Lg, default_rules, logical_spec,
+                                  tree_shardings)
+
+
+def _dt(name: str):
+    return jnp.dtype(name)
+
+
+def batch_tokens(cfg: RunConfig) -> Tuple[int, int]:
+    """(global_batch, token_len) for the configured shape, respecting
+    whisper's 448-position decoder cap."""
+    s = cfg.shape
+    seq = s.seq_len
+    if cfg.model.encdec.enabled:
+        seq = min(seq, cfg.model.encdec.max_target_positions)
+    return s.global_batch, seq
+
+
+def input_specs(cfg: RunConfig) -> Dict[str, Any]:
+    """Abstract inputs for the configured (arch, shape) mode."""
+    m = cfg.model
+    b, seq = batch_tokens(cfg)
+    mode = cfg.shape.mode
+    if mode in ("train", "prefill"):
+        specs = {"tokens": jax.ShapeDtypeStruct((b, seq), jnp.int32)}
+        if mode == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, seq), jnp.int32)
+        if m.encdec.enabled:
+            specs["enc_embeds"] = jax.ShapeDtypeStruct(
+                (b, m.encdec.encoder_seq, m.d_model),
+                _dt(cfg.parallel.compute_dtype))
+        return specs
+    if mode == "decode":
+        state = decode_state_shapes(m, b, cfg.shape.seq_len,
+                                    _dt(cfg.parallel.cache_dtype))
+        return {"token": jax.ShapeDtypeStruct((b,), jnp.int32),
+                "state": state,
+                "index": jax.ShapeDtypeStruct((), jnp.int32)}
+    raise ValueError(mode)
+
+
+def param_shapes(cfg: RunConfig):
+    return lm_param_shapes(cfg.model, _dt(cfg.parallel.param_dtype))
+
+
+def opt_shapes(cfg: RunConfig, pshapes=None):
+    pshapes = pshapes if pshapes is not None else param_shapes(cfg)
+    opt = make_optimizer(cfg.optim)
+    return jax.eval_shape(opt.init, pshapes)
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+def make_rules(cfg: RunConfig, mesh) -> AxisRules:
+    return default_rules(mesh, cfg.parallel)
+
+
+def param_shardings(cfg: RunConfig, mesh, pshapes=None):
+    pshapes = pshapes if pshapes is not None else param_shapes(cfg)
+    rules = make_rules(cfg, mesh)
+    return tree_shardings(mesh, rules, pshapes, lm_specs(cfg.model))
+
+
+def opt_shardings(cfg: RunConfig, mesh, pshapes=None):
+    """Adam m/v shard like params; scalar step replicated."""
+    pshapes = pshapes if pshapes is not None else param_shapes(cfg)
+    psh = param_shardings(cfg, mesh, pshapes)
+    oshapes = opt_shapes(cfg, pshapes)
+    rep = NamedSharding(mesh, P())
+
+    out = {}
+    for k, v in oshapes.items():
+        if k in ("m", "v", "mom"):
+            out[k] = psh
+        else:
+            out[k] = rep
+    return out
+
+
+def batch_shardings(cfg: RunConfig, mesh, specs=None):
+    specs = specs if specs is not None else input_specs(cfg)
+    rules = make_rules(cfg, mesh)
+
+    def shard_one(s):
+        logical = ["batch"] + [None] * (len(s.shape) - 1)
+        return NamedSharding(mesh, logical_spec(mesh, rules, s.shape, logical))
+
+    if "state" in specs:
+        rep = NamedSharding(mesh, P())
+        state_sh = tree_shardings(
+            mesh, rules, specs["state"],
+            decode_state_specs(cfg.model))
+        return {"token": shard_one(specs["token"]),
+                "state": state_sh,
+                "index": rep}
+    return {k: shard_one(v) for k, v in specs.items()}

@@ -1,0 +1,422 @@
+"""Per-family transformer blocks: init/specs/apply/decode dispatch.
+
+A *block kind* is one residual block:
+
+  attn    GQA attention + dense MLP        (dense / vlm / hybrid-attn)
+  moe     GQA attention + MoE MLP          (olmoe)
+  mla     MLA attention + MoE MLP          (deepseek-v2)
+  rwkv    RWKV-6 time-mix + channel-mix    (ssm)
+  rglru   RG-LRU recurrent block + MLP     (hybrid-recurrent)
+  enc     bidirectional attention + MLP    (whisper encoder)
+  dec     causal self-attn + cross-attn + MLP (whisper decoder)
+
+Layer stacks are organised in *periods* (the smallest repeating kind tuple,
+e.g. ("rglru","rglru","attn") for RecurrentGemma) so heterogeneous stacks
+still scan: params for one period are stacked across periods and
+``jax.lax.scan`` runs the period function with remat.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import AUDIO, DCGAN, HYBRID, MOE, SSM, ModelConfig
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE_M
+from repro.models import rglru as RG
+from repro.models import rwkv6 as RW
+from repro.models.layers import AttnDims
+from repro.sharding.specs import Lg
+
+
+# ---------------------------------------------------------------------------
+# kinds & periods
+# ---------------------------------------------------------------------------
+
+def layer_kinds(m: ModelConfig) -> List[str]:
+    force = getattr(m, "_force_kind", None)
+    if force:                               # encoder stacks force 'enc'
+        return [force] * m.num_layers
+    if m.family == SSM:
+        return ["rwkv"] * m.num_layers
+    if m.family == HYBRID and m.rglru.enabled:
+        pat = []
+        while len(pat) < m.num_layers:
+            pat.extend(m.rglru.pattern)
+        return pat[: m.num_layers]
+    if m.family == AUDIO:
+        return ["dec"] * m.num_layers          # encoder handled separately
+    if m.moe.enabled:
+        return ["mla" if m.mla.enabled else "moe"] * m.num_layers
+    return ["attn"] * m.num_layers
+
+
+def period_of(m: ModelConfig) -> Tuple[str, ...]:
+    if m.family == HYBRID and m.rglru.enabled:
+        return tuple(m.rglru.pattern)
+    kinds = layer_kinds(m)
+    return (kinds[0],) if kinds else ()
+
+
+def split_periods(m: ModelConfig) -> Tuple[int, List[str]]:
+    """-> (num_full_periods, remainder_kinds)."""
+    period = period_of(m)
+    kinds = layer_kinds(m)
+    n_full = len(kinds) // len(period)
+    return n_full, kinds[n_full * len(period):]
+
+
+# ---------------------------------------------------------------------------
+# per-block init / specs
+# ---------------------------------------------------------------------------
+
+def _norm_init(m: ModelConfig, dtype):
+    return (L.layernorm_init(m.d_model, dtype) if m.family == AUDIO
+            else L.rmsnorm_init(m.d_model, dtype))
+
+
+def _norm_specs(m: ModelConfig):
+    return (L.layernorm_specs() if m.family == AUDIO else L.rmsnorm_specs())
+
+
+def norm_apply(m: ModelConfig, p, x):
+    return (L.layernorm_apply(p, x) if m.family == AUDIO
+            else L.rmsnorm_apply(p, x, m.norm_eps))
+
+
+def attn_dims(m: ModelConfig) -> AttnDims:
+    return AttnDims(
+        d_model=m.d_model, num_heads=m.num_heads,
+        num_kv_heads=m.num_kv_heads, head_dim=m.head_dim,
+        qk_norm=m.qk_norm, qkv_bias=m.qkv_bias or m.family == AUDIO,
+        rope_theta=m.rope_theta,
+        window=m.sliding_window if m.attention == "sliding" else 0)
+
+
+def block_init(key, kind: str, m: ModelConfig, dtype) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    dims = attn_dims(m)
+    if kind in ("attn", "moe", "enc"):
+        p = {"ln1": _norm_init(m, dtype), "attn": L.gqa_init(k1, dims, dtype),
+             "ln2": _norm_init(m, dtype)}
+        p["mlp"] = (MOE_M.moe_init(k2, m.d_model, m.moe, dtype)
+                    if kind == "moe" else
+                    L.mlp_init(k2, m.d_model, m.d_ff, m.act, dtype))
+        return p
+    if kind == "mla":
+        return {"ln1": _norm_init(m, dtype),
+                "attn": MLA.mla_init(k1, m.d_model, m.num_heads, m.head_dim,
+                                     m.mla, dtype),
+                "ln2": _norm_init(m, dtype),
+                "mlp": MOE_M.moe_init(k2, m.d_model, m.moe, dtype)}
+    if kind == "rwkv":
+        return {"ln1": _norm_init(m, dtype),
+                "time": RW.timemix_init(k1, m.d_model, m.rwkv, dtype),
+                "ln2": _norm_init(m, dtype),
+                "chan": RW.channelmix_init(k2, m.d_model, m.d_ff, dtype)}
+    if kind == "rglru":
+        return {"ln1": _norm_init(m, dtype),
+                "rec": RG.rglru_block_init(k1, m.d_model, m.rglru, dtype),
+                "ln2": _norm_init(m, dtype),
+                "mlp": L.mlp_init(k2, m.d_model, m.d_ff, m.act, dtype)}
+    if kind == "dec":
+        return {"ln1": _norm_init(m, dtype), "attn": L.gqa_init(k1, dims, dtype),
+                "lnx": _norm_init(m, dtype), "xattn": L.gqa_init(k3, dims, dtype),
+                "ln2": _norm_init(m, dtype),
+                "mlp": L.mlp_init(k2, m.d_model, m.d_ff, m.act, dtype)}
+    raise ValueError(kind)
+
+
+def block_specs(kind: str, m: ModelConfig) -> Dict[str, Any]:
+    dims = attn_dims(m)
+    if kind in ("attn", "moe", "enc"):
+        p = {"ln1": _norm_specs(m), "attn": L.gqa_specs(dims),
+             "ln2": _norm_specs(m)}
+        p["mlp"] = (MOE_M.moe_specs(m.moe) if kind == "moe"
+                    else L.mlp_specs(m.act))
+        return p
+    if kind == "mla":
+        return {"ln1": _norm_specs(m), "attn": MLA.mla_specs(m.mla),
+                "ln2": _norm_specs(m), "mlp": MOE_M.moe_specs(m.moe)}
+    if kind == "rwkv":
+        return {"ln1": _norm_specs(m), "time": RW.timemix_specs(m.rwkv),
+                "ln2": _norm_specs(m), "chan": RW.channelmix_specs()}
+    if kind == "rglru":
+        return {"ln1": _norm_specs(m), "rec": RG.rglru_block_specs(m.rglru),
+                "ln2": _norm_specs(m), "mlp": L.mlp_specs(m.act)}
+    if kind == "dec":
+        return {"ln1": _norm_specs(m), "attn": L.gqa_specs(dims),
+                "lnx": _norm_specs(m), "xattn": L.gqa_specs(dims),
+                "ln2": _norm_specs(m), "mlp": L.mlp_specs(m.act)}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def place_kv(k: jnp.ndarray, cache_len: int, window: int, dtype
+             ) -> jnp.ndarray:
+    """Lay a (B, S, H, hd) prefill K (or V) into a decode cache buffer.
+
+    Full attention: pad/truncate to cache_len (positions 0..S-1).
+    Sliding window: ring buffer of size min(cache_len, window); position p
+    lands in slot p % ring so `gqa_decode` ring arithmetic lines up.
+    """
+    b, s, h, hd = k.shape
+    if window:
+        ring = min(cache_len, window)
+        take = min(s, ring)
+        tail = k[:, s - take:, :, :]
+        slots = (jnp.arange(s - take, s)) % ring
+        buf = jnp.zeros((b, ring, h, hd), dtype)
+        return buf.at[:, slots].set(tail.astype(dtype))
+    if s >= cache_len:
+        return k[:, :cache_len].astype(dtype)
+    return jnp.pad(k.astype(dtype), ((0, 0), (0, cache_len - s),
+                                     (0, 0), (0, 0)))
+
+
+def block_apply(kind: str, p, x, m: ModelConfig, positions, cd,
+                enc_out: Optional[jnp.ndarray] = None,
+                use_kernel: bool = False, cache_len: int = 0,
+                cache_dtype=jnp.bfloat16
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Dict]]:
+    """One residual block over a full sequence.
+
+    Returns (x, aux_loss, cache) — cache is a decode-state dict (matching
+    ``block_state_init`` structure) when ``cache_len > 0`` (prefill), else
+    None.
+    """
+    aux = jnp.zeros((), jnp.float32)
+    cache: Optional[Dict] = None
+    dims = attn_dims(m)
+    if kind in ("attn", "moe", "enc"):
+        h = norm_apply(m, p["ln1"], x)
+        if kind == "enc":
+            # bidirectional: every position attends to every position
+            s = h.shape[1]
+            pos = jnp.zeros((s,), jnp.int32)  # q_pos >= k_pos always true
+            q, k, v = L.gqa_project_qkv(p["attn"], h, dims, positions,
+                                        cd, rope=m.rope_theta > 0)
+            o = L.attention(q, k, v, pos, pos, window=0)
+            o = o.reshape(*h.shape[:2], dims.num_heads * dims.head_dim)
+            a = L.dense_apply(p["attn"]["wo"], o, cd)
+        else:
+            a, (k, v) = L.gqa_apply(p["attn"], h, dims, positions, cd,
+                                    use_kernel=use_kernel)
+            if cache_len:
+                cache = {"k": place_kv(k, cache_len, dims.window, cache_dtype),
+                         "v": place_kv(v, cache_len, dims.window, cache_dtype)}
+        x = x + a
+        h = norm_apply(m, p["ln2"], x)
+        if kind == "moe":
+            y, aux = MOE_M.moe_apply(p["mlp"], h, m.moe, cd)
+        else:
+            y = L.mlp_apply(p["mlp"], h, m.act, cd)
+        return x + y, aux, cache
+    if kind == "mla":
+        h = norm_apply(m, p["ln1"], x)
+        a, (c_kv, k_rope) = MLA.mla_apply(p["attn"], h, m.num_heads,
+                                          m.head_dim, m.mla, positions,
+                                          m.rope_theta, cd)
+        if cache_len:
+            cache = {"ckv": place_kv(c_kv[:, :, None, :], cache_len, 0,
+                                     cache_dtype)[:, :, 0],
+                     "krope": place_kv(k_rope[:, :, None, :], cache_len, 0,
+                                       cache_dtype)[:, :, 0]}
+        x = x + a
+        h = norm_apply(m, p["ln2"], x)
+        y, aux = MOE_M.moe_apply(p["mlp"], h, m.moe, cd)
+        return x + y, aux, cache
+    if kind == "rwkv":
+        h = norm_apply(m, p["ln1"], x)
+        a, (xt, S) = RW.timemix_apply(p["time"], h, m.rwkv, compute_dtype=cd,
+                                      use_kernel=use_kernel)
+        x = x + a
+        h2 = norm_apply(m, p["ln2"], x)
+        y, xc = RW.channelmix_apply(p["chan"], h2, compute_dtype=cd)
+        if cache_len:
+            cache = {"x_time": xt.astype(cache_dtype),
+                     "x_chan": xc.astype(cache_dtype), "S": S}
+        return x + y, aux, cache
+    if kind == "rglru":
+        h = norm_apply(m, p["ln1"], x)
+        a, (conv, hT) = RG.rglru_block_apply(p["rec"], h, m.rglru,
+                                             compute_dtype=cd)
+        if cache_len:
+            cache = {"conv": conv.astype(cache_dtype), "h": hT}
+        x = x + a
+        h = norm_apply(m, p["ln2"], x)
+        return x + L.mlp_apply(p["mlp"], h, m.act, cd), aux, cache
+    if kind == "dec":
+        h = norm_apply(m, p["ln1"], x)
+        a, (k, v) = L.gqa_apply(p["attn"], h, dims, positions, cd)
+        x = x + a
+        h = norm_apply(m, p["lnx"], x)
+        xa, (ck, cv) = _cross_attend(p["xattn"], h, enc_out, dims, cd)
+        x = x + xa
+        if cache_len:
+            c = min(cache_len, m.encdec.max_target_positions)
+            cache = {"k": place_kv(k, c, 0, cache_dtype),
+                     "v": place_kv(v, c, 0, cache_dtype),
+                     "ck": ck.astype(cache_dtype),
+                     "cv": cv.astype(cache_dtype)}
+        h = norm_apply(m, p["ln2"], x)
+        return x + L.mlp_apply(p["mlp"], h, m.act, cd), aux, cache
+    raise ValueError(kind)
+
+
+def _cross_attend(p, h, enc_out, dims: AttnDims, cd):
+    """Cross attention: queries from h, K/V from encoder output (no rope).
+
+    Returns (out, (k, v)) so prefill can cache the cross K/V.
+    """
+    b, s, _ = h.shape
+    se = enc_out.shape[1]
+    q = L.dense_apply(p["wq"], h, cd).reshape(b, s, dims.num_heads,
+                                              dims.head_dim)
+    k = L.dense_apply(p["wk"], enc_out, cd).reshape(b, se, dims.num_kv_heads,
+                                                    dims.head_dim)
+    v = L.dense_apply(p["wv"], enc_out, cd).reshape(b, se, dims.num_kv_heads,
+                                                    dims.head_dim)
+    o = L.attention(q, k, v, jnp.zeros((s,), jnp.int32),
+                    jnp.zeros((se,), jnp.int32))
+    o = o.reshape(b, s, dims.num_heads * dims.head_dim)
+    return L.dense_apply(p["wo"], o, cd), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# decode state
+# ---------------------------------------------------------------------------
+
+def block_state_init(kind: str, m: ModelConfig, batch: int, cache_len: int,
+                     dtype) -> Dict[str, Any]:
+    """Zero decode-state for one block. cache_len already window-clipped."""
+    d = m.d_model
+    if kind in ("attn", "moe"):
+        c = min(cache_len, m.sliding_window) if m.attention == "sliding" \
+            else cache_len
+        return {"k": jnp.zeros((batch, c, m.num_kv_heads, m.head_dim), dtype),
+                "v": jnp.zeros((batch, c, m.num_kv_heads, m.head_dim), dtype)}
+    if kind == "mla":
+        return {"ckv": jnp.zeros((batch, cache_len, m.mla.kv_lora_rank), dtype),
+                "krope": jnp.zeros((batch, cache_len, m.mla.rope_head_dim),
+                                   dtype)}
+    if kind == "rwkv":
+        h = d // m.rwkv.head_dim
+        return {"x_time": jnp.zeros((batch, d), dtype),
+                "x_chan": jnp.zeros((batch, d), dtype),
+                "S": jnp.zeros((batch, h, m.rwkv.head_dim, m.rwkv.head_dim),
+                               jnp.float32)}
+    if kind == "rglru":
+        lw = m.rglru.lru_width or d
+        return {"conv": jnp.zeros((batch, m.rglru.conv_width - 1, lw), dtype),
+                "h": jnp.zeros((batch, lw), jnp.float32)}
+    if kind == "dec":
+        c = min(cache_len, m.encdec.max_target_positions)
+        se = m.encdec.encoder_seq
+        return {"k": jnp.zeros((batch, c, m.num_kv_heads, m.head_dim), dtype),
+                "v": jnp.zeros((batch, c, m.num_kv_heads, m.head_dim), dtype),
+                "ck": jnp.zeros((batch, se, m.num_kv_heads, m.head_dim), dtype),
+                "cv": jnp.zeros((batch, se, m.num_kv_heads, m.head_dim), dtype)}
+    raise ValueError(kind)
+
+
+def block_state_specs(kind: str, m: ModelConfig) -> Dict[str, Any]:
+    """Logical axes for decode state (leading dim = batch).
+
+    The cache sequence dim is sharded over the model axis ("seq") — at
+    long_500k (batch=1) this is the ONLY way the cache fits, and at
+    decode_32k it avoids score-matrix replication; GSPMD handles the
+    softmax over the sharded length. "kv" heads come after "seq" and only
+    claim an axis when one is left and divisible.
+    """
+    if kind in ("attn", "moe"):
+        return {"k": Lg("batch", "seq", "kv", None),
+                "v": Lg("batch", "seq", "kv", None)}
+    if kind == "mla":
+        return {"ckv": Lg("batch", "seq", None),
+                "krope": Lg("batch", "seq", None)}
+    if kind == "rwkv":
+        return {"x_time": Lg("batch", None), "x_chan": Lg("batch", None),
+                "S": Lg("batch", "heads", None, None)}
+    if kind == "rglru":
+        return {"conv": Lg("batch", None, "mlp"), "h": Lg("batch", "mlp")}
+    if kind == "dec":
+        return {"k": Lg("batch", None, "kv", None),
+                "v": Lg("batch", None, "kv", None),
+                "ck": Lg("batch", None, "kv", None),
+                "cv": Lg("batch", None, "kv", None)}
+    raise ValueError(kind)
+
+
+def block_decode(kind: str, p, x, state, index, m: ModelConfig, cd
+                 ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Single-token decode through one block. x: (B,1,d)."""
+    dims = attn_dims(m)
+    if kind in ("attn", "moe"):
+        h = norm_apply(m, p["ln1"], x)
+        a, (ck, cv) = L.gqa_decode(p["attn"], h, state["k"], state["v"],
+                                   index, dims, cd)
+        x = x + a
+        h = norm_apply(m, p["ln2"], x)
+        if kind == "moe":
+            y, _ = MOE_M.moe_apply(p["mlp"], h, m.moe, cd)
+        else:
+            y = L.mlp_apply(p["mlp"], h, m.act, cd)
+        return x + y, {"k": ck, "v": cv}
+    if kind == "mla":
+        h = norm_apply(m, p["ln1"], x)
+        a, (ckv, krope) = MLA.mla_decode(p["attn"], h, state["ckv"],
+                                         state["krope"], index, m.num_heads,
+                                         m.head_dim, m.mla, m.rope_theta, cd)
+        x = x + a
+        h = norm_apply(m, p["ln2"], x)
+        y, _ = MOE_M.moe_apply(p["mlp"], h, m.moe, cd)
+        return x + y, {"ckv": ckv, "krope": krope}
+    if kind == "rwkv":
+        h = norm_apply(m, p["ln1"], x)
+        a, (xt, S) = RW.timemix_apply(p["time"], h, m.rwkv,
+                                      x_prev_last=state["x_time"],
+                                      state0=state["S"], compute_dtype=cd)
+        x = x + a
+        h = norm_apply(m, p["ln2"], x)
+        y, xc = RW.channelmix_apply(p["chan"], h, x_prev_last=state["x_chan"],
+                                    compute_dtype=cd)
+        return x + y, {"x_time": xt.astype(state["x_time"].dtype),
+                       "x_chan": xc.astype(state["x_chan"].dtype), "S": S}
+    if kind == "rglru":
+        h = norm_apply(m, p["ln1"], x)
+        a, (conv, hT) = RG.rglru_block_apply(p["rec"], h, m.rglru,
+                                             conv_state=state["conv"],
+                                             h0=state["h"], compute_dtype=cd)
+        x = x + a
+        h = norm_apply(m, p["ln2"], x)
+        return x + L.mlp_apply(p["mlp"], h, m.act, cd), \
+            {"conv": conv.astype(state["conv"].dtype), "h": hT}
+    if kind == "dec":
+        h = norm_apply(m, p["ln1"], x)
+        a, (ck, cv) = L.gqa_decode(p["attn"], h, state["k"], state["v"],
+                                   index, dims, cd)
+        x = x + a
+        h = norm_apply(m, p["lnx"], x)
+        x = x + _cross_decode(p["xattn"], h, state["ck"], state["cv"], dims, cd)
+        h = norm_apply(m, p["ln2"], x)
+        y = L.mlp_apply(p["mlp"], h, m.act, cd)
+        return x + y, {"k": ck, "v": cv, "ck": state["ck"], "cv": state["cv"]}
+    raise ValueError(kind)
+
+
+def _cross_decode(p, h, ck, cv, dims: AttnDims, cd):
+    b = h.shape[0]
+    q = L.dense_apply(p["wq"], h, cd).reshape(b, 1, dims.num_heads,
+                                              dims.head_dim)
+    se = ck.shape[1]
+    o = L.attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                    jnp.zeros((1,), jnp.int32), jnp.zeros((se,), jnp.int32))
+    o = o.reshape(b, 1, dims.num_heads * dims.head_dim)
+    return L.dense_apply(p["wo"], o, cd)

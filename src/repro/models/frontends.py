@@ -1,0 +1,48 @@
+"""Stub modality frontends (the one sanctioned carve-out, see DESIGN.md).
+
+[audio]  whisper's mel-spectrogram + 2xConv1d feature extractor is replaced
+         by precomputed frame embeddings of shape (B, encoder_seq, d_model).
+[vlm]    chameleon's VQ-VAE image tokenizer is replaced by synthetic VQ token
+         ids interleaved with text ids in one sequence (early fusion means
+         the transformer itself is modality-agnostic).
+
+These functions produce both the ShapeDtypeStructs used by the dry-run
+(`input_specs`) and deterministic synthetic tensors for smoke tests/examples.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+
+
+def audio_frame_embeddings(key, batch: int, m: ModelConfig,
+                           dtype=jnp.float32) -> jnp.ndarray:
+    """Stub for mel+conv frontend output: (B, S_enc, d)."""
+    return 0.1 * jax.random.normal(
+        key, (batch, m.encdec.encoder_seq, m.d_model), dtype)
+
+
+def vlm_interleave(key, batch: int, seq_len: int, m: ModelConfig,
+                   image_span: int = 256, text_vocab_frac: float = 0.75
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Early-fusion token stream: text ids + one VQ image span per sequence.
+
+    Returns (tokens (B,S) int32, modality_mask (B,S) bool — True on image
+    tokens). VQ codes live in the top (1 - text_vocab_frac) of the vocab,
+    mirroring chameleon's shared-codebook layout.
+    """
+    v = m.vocab_size
+    text_hi = int(v * text_vocab_frac)
+    k1, k2, k3 = jax.random.split(key, 3)
+    text = jax.random.randint(k1, (batch, seq_len), 0, text_hi)
+    vq = jax.random.randint(k2, (batch, seq_len), text_hi, v)
+    span = min(image_span, seq_len // 2)
+    start = jax.random.randint(k3, (batch, 1), 0, max(seq_len - span, 1))
+    pos = jnp.arange(seq_len)[None, :]
+    mask = (pos >= start) & (pos < start + span)
+    return jnp.where(mask, vq, text).astype(jnp.int32), mask

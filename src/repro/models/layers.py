@@ -1,0 +1,428 @@
+"""Core layers: norms, linear, embedding, RoPE, SwiGLU MLP, GQA attention.
+
+All modules are pure-functional: ``*_init(key, ...) -> params`` (nested dict
+of jnp arrays), ``*_specs(...) -> matching tree of Lg logical-axis leaves``,
+``*_apply(params, x, ...) -> y``. No flax/equinox — parameter trees are the
+public interface, which keeps FedAvg/split/ckpt trivially composable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.specs import Lg, constrain
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale=None,
+               bias: bool = False):
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": _normal(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_specs(l_in, l_out, bias: bool = False):
+    p = {"w": Lg(l_in, l_out)}
+    if bias:
+        p["b"] = Lg(l_out)
+    return p
+
+
+def dense_apply(p, x, compute_dtype=None):
+    w = p["w"]
+    if compute_dtype is not None:
+        w = w.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_specs():
+    return {"scale": Lg(None)}
+
+
+def rmsnorm_apply(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm_specs():
+    return {"scale": Lg(None), "bias": Lg(None)}
+
+
+def layernorm_apply(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# embedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": _normal(key, (vocab, d), 0.02, dtype)}
+
+
+def embedding_specs():
+    return {"table": Lg("vocab", "embed")}
+
+
+def embedding_apply(p, ids, compute_dtype=None):
+    t = p["table"]
+    if compute_dtype is not None:
+        t = t.astype(compute_dtype)
+    return jnp.take(t, ids, axis=0)
+
+
+def unembed_apply(p, x):
+    """Tied unembedding: bf16 operands, f32 accumulation (stable xent
+    without f32 weight gathers)."""
+    return jnp.einsum("...d,vd->...v", x, p["table"],
+                      preferred_element_type=jnp.float32)
+
+
+def sinusoidal_positions(length: int, d: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal embeddings (fp32)."""
+    pos = jnp.arange(length)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    inv = jnp.exp(-jnp.log(10000.0) * dim / (d // 2 - 1 + 1e-9))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    if theta <= 0:
+        return x
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                    # (..., seq, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, act: str = "silu", dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if act == "silu":   # SwiGLU: gate + up + down
+        return {"gate": dense_init(ks[0], d, d_ff, dtype),
+                "up": dense_init(ks[1], d, d_ff, dtype),
+                "down": dense_init(ks[2], d_ff, d, dtype)}
+    return {"up": dense_init(ks[1], d, d_ff, dtype, bias=True),
+            "down": dense_init(ks[2], d_ff, d, dtype, bias=True)}
+
+
+def mlp_specs(act: str = "silu"):
+    if act == "silu":
+        return {"gate": dense_specs("embed", "mlp"),
+                "up": dense_specs("embed", "mlp"),
+                "down": dense_specs("mlp", "embed")}
+    return {"up": dense_specs("embed", "mlp", bias=True),
+            "down": dense_specs("mlp", "embed", bias=True)}
+
+
+def mlp_apply(p, x, act: str = "silu", compute_dtype=None):
+    # explicit TP anchors: hidden activations shard over "mlp" (model axis),
+    # matching the column/row-parallel weight layout — keeps GSPMD from
+    # falling back to full weight replication (see EXPERIMENTS.md §Perf).
+    if act == "silu":
+        g = dense_apply(p["gate"], x, compute_dtype)
+        u = dense_apply(p["up"], x, compute_dtype)
+        h = constrain(jax.nn.silu(g) * u, ("batch", None, "mlp"))
+        return dense_apply(p["down"], h, compute_dtype)
+    h = jax.nn.gelu(dense_apply(p["up"], x, compute_dtype))
+    h = constrain(h, ("batch", None, "mlp"))
+    return dense_apply(p["down"], h, compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention core
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B, S, Hkv, hd) -> (B, S, Hkv*groups, hd) by repetition (GQA)."""
+    if groups == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, groups, d)
+                            ).reshape(b, s, h * groups, d)
+
+
+def attention_scores_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                          window: int = 0) -> jnp.ndarray:
+    """(Lq, Lk) bool mask: causal, optionally banded to a sliding window."""
+    m = q_pos[:, None] >= k_pos[None, :]
+    if window and window > 0:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    return m
+
+
+def attention_full(q, k, v, q_pos, k_pos, window: int = 0,
+                   kv_valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Plain softmax attention. q: (B,Lq,H,hd); k,v: (B,Lk,Hkv,hd)."""
+    groups = q.shape[2] // k.shape[2]
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = attention_scores_mask(q_pos, k_pos, window)            # (Lq, Lk)
+    if kv_valid is not None:
+        mask = mask & kv_valid[:, None, None, :]                  # (B,1,1,Lk)
+    else:
+        mask = mask[None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out
+
+
+def attention_chunked(q, k, v, q_pos, k_pos, window: int = 0,
+                      kv_valid: Optional[jnp.ndarray] = None,
+                      kv_chunk: int = 1024) -> jnp.ndarray:
+    """Online-softmax attention, scanning over KV chunks.
+
+    Memory-safe reference for long sequences (the jnp analogue of the
+    Pallas flash kernel — O(Lq * kv_chunk) live scores instead of O(Lq*Lk)).
+    """
+    b, lq, h, hd = q.shape
+    lk = k.shape[1]
+    if lk % kv_chunk != 0:
+        pad = kv_chunk - lk % kv_chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=2**30)
+        if kv_valid is None:
+            kv_valid = jnp.arange(lk + pad)[None, :] < lk
+            kv_valid = jnp.broadcast_to(kv_valid, (b, lk + pad))
+        else:
+            kv_valid = jnp.pad(kv_valid, ((0, 0), (0, pad)))
+        lk += pad
+    groups = q.shape[2] // k.shape[2]
+    n_chunks = lk // kv_chunk
+    kc = k.reshape(b, n_chunks, kv_chunk, k.shape[2], k.shape[3])
+    vc = v.reshape(b, n_chunks, kv_chunk, v.shape[2], v.shape[3])
+    pc = k_pos.reshape(n_chunks, kv_chunk)
+    valc = (kv_valid.reshape(b, n_chunks, kv_chunk)
+            if kv_valid is not None else None)
+    scale = hd ** -0.5
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        if valc is None:
+            kcj, vcj, pj = xs
+            validj = None
+        else:
+            kcj, vcj, pj, validj = xs
+        kcj = _repeat_kv(kcj, groups)
+        vcj = _repeat_kv(vcj, groups)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, kcj,
+                            preferred_element_type=jnp.float32) * scale
+        mask = attention_scores_mask(q_pos, pj, window)
+        if validj is not None:
+            mask = mask & validj[:, None, None, :]
+        else:
+            mask = mask[None, None]
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_cur = jnp.max(logits, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(vcj.dtype), vcj,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), None
+
+    vd = v.shape[-1]
+    m0 = jnp.full((b, h, lq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, lq), jnp.float32)
+    a0 = jnp.zeros((b, h, lq, vd), jnp.float32)
+    xs = (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), pc)
+    if valc is not None:
+        xs = xs + (jnp.moveaxis(valc, 1, 0),)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), xs)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)   # (B, Lq, H, hd)
+
+
+def attention(q, k, v, q_pos, k_pos, window: int = 0,
+              kv_valid: Optional[jnp.ndarray] = None,
+              kv_chunk: int = 1024, force_full: bool = False) -> jnp.ndarray:
+    """Dispatch: full einsum for short KV, chunked online-softmax beyond."""
+    if force_full or k.shape[1] <= kv_chunk:
+        return attention_full(q, k, v, q_pos, k_pos, window, kv_valid)
+    return attention_chunked(q, k, v, q_pos, k_pos, window, kv_valid, kv_chunk)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (projections + rope + qk-norm + cache handling)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    window: int = 0          # 0 => full causal
+
+
+def gqa_init(key, dims: AttnDims, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    d, q_dim = dims.d_model, dims.num_heads * dims.head_dim
+    kv_dim = dims.num_kv_heads * dims.head_dim
+    p = {"wq": dense_init(ks[0], d, q_dim, dtype, bias=dims.qkv_bias),
+         "wk": dense_init(ks[1], d, kv_dim, dtype, bias=dims.qkv_bias),
+         "wv": dense_init(ks[2], d, kv_dim, dtype, bias=dims.qkv_bias),
+         "wo": dense_init(ks[3], q_dim, d, dtype,
+                          scale=(q_dim ** -0.5))}
+    if dims.qk_norm:
+        p["q_norm"] = rmsnorm_init(dims.head_dim, dtype)
+        p["k_norm"] = rmsnorm_init(dims.head_dim, dtype)
+    return p
+
+
+def gqa_specs(dims: AttnDims):
+    p = {"wq": dense_specs("embed", "mlp", bias=dims.qkv_bias),
+         "wk": dense_specs("embed", "kv", bias=dims.qkv_bias),
+         "wv": dense_specs("embed", "kv", bias=dims.qkv_bias),
+         "wo": dense_specs("mlp", "embed")}
+    if dims.qk_norm:
+        p["q_norm"] = rmsnorm_specs()
+        p["k_norm"] = rmsnorm_specs()
+    return p
+
+
+def gqa_project_qkv(p, x, dims: AttnDims, positions, compute_dtype=None,
+                    rope: bool = True):
+    b, s, _ = x.shape
+    q = dense_apply(p["wq"], x, compute_dtype).reshape(
+        b, s, dims.num_heads, dims.head_dim)
+    k = dense_apply(p["wk"], x, compute_dtype).reshape(
+        b, s, dims.num_kv_heads, dims.head_dim)
+    v = dense_apply(p["wv"], x, compute_dtype).reshape(
+        b, s, dims.num_kv_heads, dims.head_dim)
+    if dims.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q)
+        k = rmsnorm_apply(p["k_norm"], k)
+    if rope:
+        q = apply_rope(q, positions, dims.rope_theta)
+        k = apply_rope(k, positions, dims.rope_theta)
+    # TP anchors: heads shard over the model axis (kv heads too when they
+    # divide it; logical_spec drops the axis otherwise)
+    q = constrain(q, ("batch", None, "heads", None))
+    k = constrain(k, ("batch", None, "kv", None))
+    v = constrain(v, ("batch", None, "kv", None))
+    return q, k, v
+
+
+def gqa_apply(p, x, dims: AttnDims, positions=None, compute_dtype=None,
+              kv_chunk: int = 1024, use_kernel: bool = False):
+    """Training/prefill self-attention over a (B, S, d) sequence.
+
+    use_kernel=True dispatches the Pallas flash-attention kernel (Mosaic on
+    TPU, interpreter elsewhere); otherwise the jnp chunked reference runs.
+    """
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    pos_b = jnp.broadcast_to(positions, (s,)) if positions.ndim == 1 else positions
+    q, k, v = gqa_project_qkv(p, x, dims, pos_b, compute_dtype)
+    if use_kernel:
+        from repro.kernels.flash_attention.ops import flash_attention
+        out = flash_attention(q, k, v, causal=True, window=dims.window)
+    else:
+        out = attention(q, k, v, pos_b, pos_b, window=dims.window,
+                        kv_chunk=kv_chunk)
+    out = out.reshape(b, s, dims.num_heads * dims.head_dim)
+    return dense_apply(p["wo"], out, compute_dtype), (k, v)
+
+
+def gqa_decode(p, x, cache_k, cache_v, index, dims: AttnDims,
+               compute_dtype=None, kv_chunk: int = 1024):
+    """Single-token decode against a KV cache.
+
+    x: (B, 1, d); cache_k/v: (B, S_cache, Hkv, hd); index: current position.
+    Sliding-window archs use a ring buffer of size `window`.
+    """
+    b = x.shape[0]
+    s_cache = cache_k.shape[1]
+    pos = jnp.full((1,), index, jnp.int32)
+    q, k, v = gqa_project_qkv(p, x, dims, pos, compute_dtype)
+    slot = index % s_cache if dims.window else index
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), slot, axis=1)
+    if dims.window:
+        # ring buffer: absolute position of slot j given write head at `slot`
+        j = jnp.arange(s_cache)
+        k_pos = index - ((slot - j) % s_cache)
+        valid = (k_pos >= 0) & (k_pos >= index - dims.window + 1)
+    else:
+        j = jnp.arange(s_cache)
+        k_pos = j
+        valid = j <= index
+    valid_b = jnp.broadcast_to(valid[None, :], (b, s_cache))
+    out = attention(q, cache_k.astype(q.dtype), cache_v.astype(q.dtype),
+                    pos, k_pos, window=0, kv_valid=valid_b, kv_chunk=kv_chunk)
+    out = out.reshape(b, 1, dims.num_heads * dims.head_dim)
+    return dense_apply(p["wo"], out, compute_dtype), (cache_k, cache_v)

@@ -1,0 +1,138 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV are compressed to a rank-``kv_lora_rank`` latent c_kv plus a shared
+decoupled-RoPE key k_rope. Two execution forms:
+
+  * **expanded** (train/prefill): latents are up-projected to full per-head
+    K/V and standard attention runs — best for long-sequence matmul shapes.
+  * **absorbed** (decode): W_uk is absorbed into the query and W_uv into the
+    output so attention runs *in latent space* against the cached
+    (S, kv_lora + rope_dim) latents — the cache is ~an order of magnitude
+    smaller than GQA's and no per-step latent expansion is needed. This is
+    the production decode path (DeepSeek-V2 §2.1.2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (NEG_INF, apply_rope, attention, dense_apply,
+                                 dense_init, dense_specs, rmsnorm_apply,
+                                 rmsnorm_init, rmsnorm_specs)
+from repro.sharding.specs import Lg
+
+
+def mla_init(key, d: int, num_heads: int, head_dim: int, cfg, dtype=jnp.float32):
+    """cfg: MLAConfig. head_dim is the nope (non-rope) per-head dim."""
+    ks = jax.random.split(key, 6)
+    rk, rh = cfg.kv_lora_rank, cfg.rope_head_dim
+    vh = cfg.v_head_dim or head_dim
+    qd = num_heads * (head_dim + rh)
+    return {
+        "wq": dense_init(ks[0], d, qd, dtype),                 # full-rank q (V2-Lite)
+        "w_dkv": dense_init(ks[1], d, rk + rh, dtype),         # downproj + rope k
+        "kv_norm": rmsnorm_init(rk, dtype),
+        "w_uk": (jax.random.normal(ks[2], (num_heads, rk, head_dim), jnp.float32)
+                 * rk ** -0.5).astype(dtype),
+        "w_uv": (jax.random.normal(ks[3], (num_heads, rk, vh), jnp.float32)
+                 * rk ** -0.5).astype(dtype),
+        "wo": dense_init(ks[4], num_heads * vh, d, dtype,
+                         scale=(num_heads * vh) ** -0.5),
+    }
+
+
+def mla_specs(cfg):
+    return {
+        "wq": dense_specs("embed", "mlp"),
+        "w_dkv": dense_specs("embed", None),
+        "kv_norm": rmsnorm_specs(),
+        "w_uk": Lg("heads", None, None),
+        "w_uv": Lg("heads", None, None),
+        "wo": dense_specs("mlp", "embed"),
+    }
+
+
+def _split_q(q, num_heads, head_dim, rh):
+    b, s, _ = q.shape
+    q = q.reshape(b, s, num_heads, head_dim + rh)
+    return q[..., :head_dim], q[..., head_dim:]
+
+
+def mla_latents(p, x, positions, cfg, rope_theta, compute_dtype=None):
+    """Compress x -> (c_kv normalized, k_rope with rope applied)."""
+    rk, rh = cfg.kv_lora_rank, cfg.rope_head_dim
+    dkv = dense_apply(p["w_dkv"], x, compute_dtype)
+    c_kv, k_rope = dkv[..., :rk], dkv[..., rk:]
+    c_kv = rmsnorm_apply(p["kv_norm"], c_kv)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_apply(p, x, num_heads, head_dim, cfg, positions=None,
+              rope_theta=10000.0, compute_dtype=None):
+    """Expanded-form self-attention for train/prefill. x: (B, S, d)."""
+    b, s, _ = x.shape
+    rh = cfg.rope_head_dim
+    vh = cfg.v_head_dim or head_dim
+    if positions is None:
+        positions = jnp.arange(s)
+    q = dense_apply(p["wq"], x, compute_dtype)
+    q_nope, q_rope = _split_q(q, num_heads, head_dim, rh)
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+    c_kv, k_rope = mla_latents(p, x, positions, cfg, rope_theta, compute_dtype)
+
+    cd = compute_dtype or x.dtype
+    k_nope = jnp.einsum("bsr,hrd->bshd", c_kv.astype(cd), p["w_uk"].astype(cd))
+    v = jnp.einsum("bsr,hrv->bshv", c_kv.astype(cd), p["w_uv"].astype(cd))
+
+    # Expanded MLA == standard MHA with per-head K=[k_nope, k_rope(shared)],
+    # Q=[q_nope, q_rope]; reuse the (chunked, memory-safe) attention core.
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kf = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (*k_nope.shape[:3], rh)).astype(cd)], axis=-1)
+    out = attention(qf, kf, v, positions, positions)
+    out = out.reshape(b, s, num_heads * vh)
+    return dense_apply(p["wo"], out, compute_dtype), (c_kv, k_rope)
+
+
+def mla_decode(p, x, cache_ckv, cache_krope, index, num_heads, head_dim, cfg,
+               rope_theta=10000.0, compute_dtype=None):
+    """Absorbed-form single-token decode.
+
+    cache_ckv: (B, S, rk); cache_krope: (B, S, rh). Attention runs in latent
+    space: q_lat = q_nope @ W_uk, scores = q_lat . c_kv + q_rope . k_rope,
+    out = (probs @ c_kv) @ W_uv.
+    """
+    b = x.shape[0]
+    rk, rh = cfg.kv_lora_rank, cfg.rope_head_dim
+    vh = cfg.v_head_dim or head_dim
+    pos = jnp.full((1,), index, jnp.int32)
+    q = dense_apply(p["wq"], x, compute_dtype)
+    q_nope, q_rope = _split_q(q, num_heads, head_dim, rh)     # (B,1,H,*)
+    q_rope = apply_rope(q_rope, pos, rope_theta)
+    c_kv, k_rope = mla_latents(p, x, pos, cfg, rope_theta, compute_dtype)
+
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, c_kv.astype(cache_ckv.dtype), index, axis=1)
+    cache_krope = jax.lax.dynamic_update_slice_in_dim(
+        cache_krope, k_rope.astype(cache_krope.dtype), index, axis=1)
+
+    cd = compute_dtype or x.dtype
+    # absorb W_uk into q: (B,1,H,dh) x (H,rk,dh) -> (B,H,rk)
+    q_lat = jnp.einsum("bqhd,hrd->bhr", q_nope.astype(jnp.float32),
+                       p["w_uk"].astype(jnp.float32))
+    scale = (head_dim + rh) ** -0.5
+    logits = (jnp.einsum("bhr,bsr->bhs", q_lat,
+                         cache_ckv.astype(jnp.float32))
+              + jnp.einsum("bqhd,bsd->bhs", q_rope.astype(jnp.float32),
+                           cache_krope.astype(jnp.float32))) * scale
+    s_cache = cache_ckv.shape[1]
+    valid = jnp.arange(s_cache) <= index
+    logits = jnp.where(valid[None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # out latent: (B,H,rk); absorb W_uv on the way out
+    o_lat = jnp.einsum("bhs,bsr->bhr", probs, cache_ckv.astype(jnp.float32))
+    out = jnp.einsum("bhr,hrv->bhv", o_lat, p["w_uv"].astype(jnp.float32))
+    out = out.reshape(b, 1, num_heads * vh).astype(cd)
+    return dense_apply(p["wo"], out, compute_dtype), (cache_ckv, cache_krope)

@@ -1,0 +1,149 @@
+"""Mixture-of-Experts layer (DeepSeek-V2-Lite, OLMoE).
+
+Dropless-ish dispatch via *sort-by-expert*: token->expert assignments are
+argsorted so each expert sees a contiguous (E, C, d) slab, computed with one
+batched matmul per projection — the TPU-native formulation (all-to-all falls
+out of the expert-sharded einsum under GSPMD, rather than being emulated with
+point-to-point sends as a GPU port would).
+
+Capacity C = ceil(T * top_k / E * capacity_factor); overflow tokens are
+dropped from expert compute (their combine weight contribution is zero) —
+standard GShard/Switch semantics. ``capacity_factor=0`` selects a generous
+default of 2.0 so drops are rare at smoke scale.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_apply, dense_init, dense_specs, mlp_apply, mlp_init, mlp_specs
+from repro.sharding.specs import Lg, constrain
+
+
+def moe_init(key, d: int, cfg, dtype=jnp.float32):
+    """cfg: MoEConfig."""
+    ks = jax.random.split(key, 4)
+    e, ff = cfg.num_experts, cfg.d_ff_expert
+    p = {
+        "router": dense_init(ks[0], d, e, dtype, scale=0.02),
+        "experts": {
+            "gate": (jax.random.normal(ks[1], (e, d, ff), jnp.float32)
+                     * d ** -0.5).astype(dtype),
+            "up": (jax.random.normal(ks[2], (e, d, ff), jnp.float32)
+                   * d ** -0.5).astype(dtype),
+            "down": (jax.random.normal(ks[3], (e, ff, d), jnp.float32)
+                     * ff ** -0.5).astype(dtype),
+        },
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = mlp_init(jax.random.fold_in(key, 7), d,
+                               ff * cfg.num_shared_experts, "silu", dtype)
+    return p
+
+
+def moe_specs(cfg):
+    p = {
+        "router": dense_specs("embed", None),
+        "experts": {
+            "gate": Lg("experts", "embed", "mlp"),
+            "up": Lg("experts", "embed", "mlp"),
+            "down": Lg("experts", "mlp", "embed"),
+        },
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = mlp_specs("silu")
+    return p
+
+
+def router_probs(p, x, cfg, compute_dtype=None):
+    """Softmax router over experts; returns (probs, logits) in fp32."""
+    logits = dense_apply(p["router"], x, compute_dtype).astype(jnp.float32)
+    return jax.nn.softmax(logits, axis=-1), logits
+
+
+def load_balance_loss(probs: jnp.ndarray, top_idx: jnp.ndarray, e: int
+                      ) -> jnp.ndarray:
+    """Switch-style aux loss: E * sum_e f_e * P_e over the token batch."""
+    # probs: (T, E); top_idx: (T, k)
+    t = probs.shape[0]
+    counts = jnp.zeros((e,), jnp.float32).at[top_idx.reshape(-1)].add(1.0)
+    f = counts / (top_idx.size + 1e-9)                 # fraction routed
+    pbar = jnp.mean(probs, axis=0)                     # mean router prob
+    return e * jnp.sum(f * pbar)
+
+
+def _dispatch_groups(t: int, k: int, target: int = 32) -> int:
+    """Largest divisor of t that is <= target and leaves >= 4k tokens/group."""
+    g = 1
+    for cand in range(1, target + 1):
+        if t % cand == 0 and t // cand >= 4 * k:
+            g = cand
+    return g
+
+
+def _local_moe(xt, p, cfg, cd):
+    """Dispatch + expert compute for ONE token group. xt: (Tg, d)."""
+    tg, d = xt.shape
+    e, k = cfg.num_experts, cfg.top_k
+    cf = cfg.capacity_factor or 2.0
+    cap = int(max(k, ((tg * k * cf) / e) // 1 + 1))
+
+    probs, _ = router_probs(p, xt, cfg, cd)
+    top_p, top_i = jax.lax.top_k(probs, k)             # (Tg, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    aux = load_balance_loss(probs, top_i, e) * cfg.router_aux_coef
+
+    # sort token-slots by expert id (local to the group)
+    flat_e = top_i.reshape(-1)                         # (Tg*k,)
+    flat_w = top_p.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(tg), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, sw, stok = flat_e[order], flat_w[order], flat_tok[order]
+    first_of_e = jnp.full((e,), tg * k, jnp.int32).at[se].min(
+        jnp.arange(tg * k, dtype=jnp.int32))
+    pos_in_e = jnp.arange(tg * k) - first_of_e[se]
+    keep = pos_in_e < cap                              # overflow drop
+    slot = se * cap + jnp.where(keep, pos_in_e, 0)
+
+    buf = jnp.zeros((e * cap, d), xt.dtype)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], xt[stok], 0))
+    xe = buf.reshape(e, cap, d)
+
+    we = p["experts"]
+    g = jnp.einsum("ecd,edf->ecf", xe.astype(cd), we["gate"].astype(cd))
+    u = jnp.einsum("ecd,edf->ecf", xe.astype(cd), we["up"].astype(cd))
+    h = jax.nn.silu(g) * u
+    ye = jnp.einsum("ecf,efd->ecd", h, we["down"].astype(cd))
+    ye = ye.reshape(e * cap, d)
+
+    out = jnp.zeros((tg, d), jnp.float32)
+    out = out.at[stok].add(ye[slot].astype(jnp.float32)
+                           * (sw * keep)[:, None])
+    return out.astype(xt.dtype), aux
+
+
+def moe_apply(p, x, cfg, compute_dtype=None):
+    """x: (B, S, d) -> (y, aux_loss).
+
+    Hierarchical (GShard-style) dispatch: tokens are split into G groups
+    (G <= 32, a divisor of T) and each group routes/sorts/scatters *locally*
+    via vmap. The group dim shards over (pod, data) and the expert dim over
+    model, so the only cross-shard movement is the group<->expert all-to-all
+    around the expert einsum — a global argsort/scatter (the previous
+    formulation) forced GSPMD to replicate the T*k-row dispatch buffers
+    (EXPERIMENTS §Perf hc1: 70 GiB -> measured below).
+    """
+    b, s, d = x.shape
+    t = b * s
+    cd = compute_dtype or x.dtype
+    groups = _dispatch_groups(t, cfg.top_k)
+    xt = x.reshape(groups, t // groups, d)
+    xt = constrain(xt, ("batch", None, None))
+    y, aux = jax.vmap(lambda xg: _local_moe(xg, p, cfg, cd))(xt)
+    y = constrain(y, ("batch", None, None))
+    aux = jnp.mean(aux)
+    y = y.reshape(b, s, d)
+
+    if cfg.num_shared_experts:
+        y = y + mlp_apply(p["shared"], x, "silu", compute_dtype)
+    return y, aux

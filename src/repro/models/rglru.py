@@ -1,0 +1,108 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block: x -> [linear -> GeLU] gate branch, [linear -> causal conv1d(4) ->
+RG-LRU] recurrent branch, merge by product, project back to d_model.
+
+RG-LRU (per channel, fp32):
+    r_t = sigmoid(a_x x_t + a_b)          recurrence gate
+    i_t = sigmoid(i_x x_t + i_b)          input gate
+    a_t = a_base ** (c * r_t)             with a_base = sigmoid(lambda), c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Gates are per-channel (diagonal) — the parameter-count-faithful reading of
+the paper's block-diagonal gates (DESIGN.md §4 notes this simplification).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_apply, dense_init, dense_specs
+from repro.sharding.specs import Lg
+
+_C = 8.0  # Griffin's fixed temperature on the recurrence gate
+
+
+def rglru_block_init(key, d: int, cfg, dtype=jnp.float32):
+    """cfg: RGLRUConfig. Returns the full recurrent block params."""
+    lw = cfg.lru_width or d
+    ks = jax.random.split(key, 5)
+    # lambda init so a_base^c spans ~(0.9, 0.999) as in the paper
+    lam = jax.random.uniform(ks[0], (lw,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(lam ** (1.0 / _C) / (1 - lam ** (1.0 / _C)))
+    return {
+        "w_gate": dense_init(ks[1], d, lw, dtype),       # GeLU branch
+        "w_rec": dense_init(ks[2], d, lw, dtype),        # recurrent branch
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_width, lw), jnp.float32)
+                   * cfg.conv_width ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((lw,), dtype),
+        "lam": lam.astype(dtype),
+        "a_x": jnp.zeros((lw,), dtype), "a_b": jnp.zeros((lw,), dtype),
+        "i_x": jnp.zeros((lw,), dtype), "i_b": jnp.zeros((lw,), dtype),
+        "w_out": dense_init(ks[4], lw, d, dtype),
+    }
+
+
+def rglru_block_specs(cfg):
+    return {
+        "w_gate": dense_specs("embed", "mlp"),
+        "w_rec": dense_specs("embed", "mlp"),
+        "conv_w": Lg(None, "mlp"), "conv_b": Lg("mlp"),
+        "lam": Lg("mlp"),
+        "a_x": Lg("mlp"), "a_b": Lg("mlp"),
+        "i_x": Lg("mlp"), "i_b": Lg("mlp"),
+        "w_out": dense_specs("mlp", "embed"),
+    }
+
+
+def causal_conv1d(x, w, b, state=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv. x: (B,T,C); w: (W,C); state: (B,W-1,C)."""
+    bsz, t, c = x.shape
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((bsz, width - 1, c), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = jnp.zeros((bsz, t, c), jnp.float32)
+    for i in range(width):
+        out = out + xp[:, i:i + t, :].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    return out.astype(x.dtype), xp[:, -(width - 1):, :]
+
+
+def rglru_scan(x, r_gate, i_gate, a_base, h0=None):
+    """The LRU recurrence. x, r_gate, i_gate: (B,T,C) fp32; a_base: (C,)."""
+    b, t, c = x.shape
+    log_a = _C * r_gate * jax.nn.log_sigmoid(a_base)[None, None, :]  # (B,T,C) <= 0
+    a = jnp.exp(log_a)
+    gated = i_gate * x
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    if h0 is None:
+        h0 = jnp.zeros((b, c), jnp.float32)
+
+    def step(h, xs):
+        at, ut = xs
+        h = at * h + ut
+        return h, h
+
+    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(beta * gated, 1, 0))
+    hT, hs = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(hs, 0, 1), hT
+
+
+def rglru_block_apply(p, x, cfg, conv_state=None, h0=None, compute_dtype=None):
+    """x: (B,T,d) -> (y, (conv_state, h_state))."""
+    gate = jax.nn.gelu(dense_apply(p["w_gate"], x, compute_dtype)
+                       .astype(jnp.float32))
+    rec = dense_apply(p["w_rec"], x, compute_dtype)
+    rec, conv_state = causal_conv1d(rec, p["conv_w"], p["conv_b"], conv_state)
+    rec32 = rec.astype(jnp.float32)
+    r = jax.nn.sigmoid(rec32 * p["a_x"].astype(jnp.float32)
+                       + p["a_b"].astype(jnp.float32))
+    i = jax.nn.sigmoid(rec32 * p["i_x"].astype(jnp.float32)
+                       + p["i_b"].astype(jnp.float32))
+    h, hT = rglru_scan(rec32, r, i, p["lam"].astype(jnp.float32), h0)
+    y = (h * gate).astype(x.dtype)
+    return dense_apply(p["w_out"], y, compute_dtype), (conv_state, hT)

@@ -1,0 +1,207 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free time-mix with
+data-dependent decay, ddlerp token shift, and squared-ReLU channel mix.
+
+Per head (head_dim n):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (state: n x n, fp32)
+    o_t = r_t^T (diag(u) k_t v_t^T + S_{t-1})
+with w_t = exp(-exp(decay_t)) computed per channel from the token via a
+LoRA ("data-dependent decay" — the Finch contribution over RWKV-5).
+
+The jnp implementation here is the *oracle*; the Pallas kernel in
+``repro.kernels.wkv6`` chunks the same recurrence for TPU.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_apply, dense_init, dense_specs
+from repro.sharding.specs import Lg
+
+MIX_NAMES = ("r", "k", "v", "w", "g")   # receptance, key, value, decay, gate
+
+
+def _lora(key, d: int, rank: int, out: int, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"a": (jax.random.normal(k1, (d, rank), jnp.float32) * d ** -0.5
+                  ).astype(dtype),
+            "b": jnp.zeros((rank, out), dtype)}
+
+
+def _lora_specs():
+    return {"a": Lg("embed", None), "b": Lg(None, None)}
+
+
+def _lora_apply(p, x, act=jnp.tanh):
+    h = act(x.astype(jnp.float32) @ p["a"].astype(jnp.float32))
+    return h @ p["b"].astype(jnp.float32)
+
+
+def timemix_init(key, d: int, cfg, dtype=jnp.float32):
+    """cfg: RWKVConfig."""
+    ks = jax.random.split(key, 12)
+    p: Dict = {
+        "mu_x": jnp.zeros((d,), dtype),            # base lerp for the shared ddlerp
+        "mu": jnp.zeros((len(MIX_NAMES), d), dtype),
+        "ts_lora": {n: _lora(ks[i], d, cfg.token_shift_lora, d, dtype)
+                    for i, n in enumerate(MIX_NAMES)},
+        "wr": dense_init(ks[5], d, d, dtype),
+        "wk": dense_init(ks[6], d, d, dtype),
+        "wv": dense_init(ks[7], d, d, dtype),
+        "wg": dense_init(ks[8], d, d, dtype),
+        "wo": dense_init(ks[9], d, d, dtype),
+        "decay_base": jnp.zeros((d,), dtype),      # per-channel base decay
+        "decay_lora": _lora(ks[10], d, cfg.decay_lora, d, dtype),
+        "bonus_u": jnp.zeros((d,), dtype),         # per-channel "first token" bonus
+    }
+    return p
+
+
+def timemix_specs(cfg):
+    return {
+        "mu_x": Lg(None),
+        "mu": Lg(None, None),
+        "ts_lora": {n: _lora_specs() for n in MIX_NAMES},
+        "wr": dense_specs("embed", "mlp"),
+        "wk": dense_specs("embed", "mlp"),
+        "wv": dense_specs("embed", "mlp"),
+        "wg": dense_specs("embed", "mlp"),
+        "wo": dense_specs("mlp", "embed"),
+        "decay_base": Lg(None),
+        "decay_lora": _lora_specs(),
+        "bonus_u": Lg(None),
+    }
+
+
+def ddlerp(p, x, x_prev):
+    """Data-dependent lerp (Finch token shift) -> dict of mixed inputs."""
+    xx = (x_prev - x).astype(jnp.float32)
+    base = x.astype(jnp.float32) + xx * jax.nn.sigmoid(
+        p["mu_x"].astype(jnp.float32))
+    out = {}
+    for i, n in enumerate(MIX_NAMES):
+        mix = p["mu"][i].astype(jnp.float32) + _lora_apply(p["ts_lora"][n], base)
+        out[n] = x.astype(jnp.float32) + xx * jax.nn.sigmoid(mix)
+    return out
+
+
+def wkv6_scan(r, k, v, w, u, head_dim: int,
+              state0: jnp.ndarray | None = None,
+              chunk: int = 256) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The WKV-6 recurrence over time (pure-jnp oracle).
+
+    r,k,v,w: (B, T, H, n); u: (H, n). Returns (out (B,T,H,n), final state
+    (B,H,n,n)). State rows indexed by k-channel, cols by v-channel.
+
+    The time scan is *chunk-rematerialised*: a plain lax.scan saves the
+    (B,H,n,n) state for every timestep for the backward pass (103 GiB/chip
+    at train_4k scale — EXPERIMENTS §Perf it5); scanning over
+    jax.checkpoint'ed chunks saves only chunk-boundary states and recomputes
+    inside, the standard RWKV training trade (T/chunk x smaller residency
+    for ~2x chunk recompute).
+    """
+    b, t, h, n = r.shape
+    if state0 is None:
+        state0 = jnp.zeros((b, h, n, n), jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs                       # (B,H,n) each
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,n,n)
+        out = jnp.einsum("bhn,bhnm->bhm", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, out
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, w))
+    if t <= chunk or t % chunk != 0:
+        S, outs = jax.lax.scan(step, state0, xs)
+        return jnp.moveaxis(outs, 0, 1), S        # (B,T,H,n), (B,H,n,n)
+
+    n_chunks = t // chunk
+    xs_c = tuple(a.reshape(n_chunks, chunk, *a.shape[1:]) for a in xs)
+
+    @jax.checkpoint
+    def chunk_body(S, xs_chunk):
+        S, outs = jax.lax.scan(step, S, xs_chunk)
+        return S, outs
+
+    S, outs = jax.lax.scan(chunk_body, state0, xs_c)
+    outs = outs.reshape(t, b, h, n)
+    return jnp.moveaxis(outs, 0, 1), S
+
+
+def timemix_apply(p, x, cfg, x_prev_last=None, state0=None,
+                  compute_dtype=None, use_kernel: bool = False):
+    """x: (B, T, d). x_prev_last: (B, d) carry for decode/chunking.
+
+    Returns (y, (last_x, state)) so decode can stream token by token.
+    """
+    b, t, d = x.shape
+    n = cfg.head_dim
+    h = d // n
+    if x_prev_last is None:
+        x_prev_last = jnp.zeros((b, d), x.dtype)
+    x_prev = jnp.concatenate([x_prev_last[:, None, :], x[:, :-1, :]], axis=1)
+    m = ddlerp(p, x, x_prev)
+
+    r = dense_apply(p["wr"], m["r"].astype(x.dtype), compute_dtype)
+    k = dense_apply(p["wk"], m["k"].astype(x.dtype), compute_dtype)
+    v = dense_apply(p["wv"], m["v"].astype(x.dtype), compute_dtype)
+    g = dense_apply(p["wg"], m["g"].astype(x.dtype), compute_dtype)
+    # data-dependent decay (fp32 for stability)
+    dec = (p["decay_base"].astype(jnp.float32)
+           + _lora_apply(p["decay_lora"], m["w"]))
+    w = jnp.exp(-jnp.exp(dec))                    # (B,T,d) in (0,1)
+
+    rs = r.reshape(b, t, h, n).astype(jnp.float32)
+    ks = k.reshape(b, t, h, n).astype(jnp.float32)
+    vs = v.reshape(b, t, h, n).astype(jnp.float32)
+    ws = w.reshape(b, t, h, n)
+    u = p["bonus_u"].astype(jnp.float32).reshape(h, n)
+
+    if use_kernel:
+        from repro.kernels.wkv6.ops import wkv6 as wkv6_kernel
+        out, state = wkv6_kernel(rs, ks, vs, ws, u, state0=state0)
+    else:
+        out, state = wkv6_scan(rs, ks, vs, ws, u, n, state0)
+    out = out.reshape(b, t, d)
+    # group-norm per head (RWKV normalizes heads); plain rms here per head
+    out = out.reshape(b, t, h, n)
+    out = out * jax.lax.rsqrt(jnp.mean(out * out, -1, keepdims=True) + 1e-5)
+    out = out.reshape(b, t, d).astype(x.dtype)
+    y = dense_apply(p["wo"], (out * jax.nn.silu(g.astype(out.dtype))),
+                    compute_dtype)
+    return y, (x[:, -1, :], state)
+
+
+def channelmix_init(key, d: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {"mu_k": jnp.zeros((d,), dtype),
+            "mu_r": jnp.zeros((d,), dtype),
+            "wk": dense_init(ks[0], d, d_ff, dtype),
+            "wv": dense_init(ks[1], d_ff, d, dtype),
+            "wr": dense_init(ks[2], d, d, dtype)}
+
+
+def channelmix_specs():
+    return {"mu_k": Lg(None), "mu_r": Lg(None),
+            "wk": dense_specs("embed", "mlp"),
+            "wv": dense_specs("mlp", "embed"),
+            "wr": dense_specs("embed", "embed")}
+
+
+def channelmix_apply(p, x, x_prev_last=None, compute_dtype=None):
+    b, t, d = x.shape
+    if x_prev_last is None:
+        x_prev_last = jnp.zeros((b, d), x.dtype)
+    x_prev = jnp.concatenate([x_prev_last[:, None, :], x[:, :-1, :]], axis=1)
+    xx = (x_prev - x).astype(jnp.float32)
+    xk = (x.astype(jnp.float32)
+          + xx * jax.nn.sigmoid(p["mu_k"].astype(jnp.float32))).astype(x.dtype)
+    xr = (x.astype(jnp.float32)
+          + xx * jax.nn.sigmoid(p["mu_r"].astype(jnp.float32))).astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(dense_apply(p["wk"], xk, compute_dtype)))
+    rr = jax.nn.sigmoid(dense_apply(p["wr"], xr, compute_dtype)
+                        .astype(jnp.float32)).astype(x.dtype)
+    return rr * dense_apply(p["wv"], kk, compute_dtype), x[:, -1, :]

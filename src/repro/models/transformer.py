@@ -1,0 +1,379 @@
+"""Language-model assembly: embeddings -> period-scanned block stack -> head.
+
+Supports every assigned family: decoder-only (dense/moe/ssm/hybrid/vlm) and
+encoder-decoder (whisper). Layers are stacked per *period* (see blocks.py)
+and executed with ``jax.lax.scan`` + remat so the HLO stays O(one period)
+regardless of depth — essential both for 126-layer dry-run compiles on one
+CPU core and for real compile times on a pod.
+
+Public API
+----------
+  lm_init(key, m, dtype)                  real params (smoke scale)
+  lm_param_shapes(m, dtype)               ShapeDtypeStruct tree (dry-run scale)
+  lm_specs(m)                             logical-axis tree (matches params)
+  lm_apply(params, batch, m, ...)         -> (logits, aux_loss)
+  lm_loss(params, batch, m, ...)          -> (loss, metrics)
+  init_decode_state(m, batch, cache_len)  stacked decode state
+  decode_state_specs(m)                   logical-axis tree for the state
+  lm_prefill(params, batch, m, ...)       -> (logits_last, state, index)
+  lm_decode_step(params, token, state, index, m, ...) -> (logits, state)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import AUDIO, ModelConfig
+from repro.models import layers as L
+from repro.models.blocks import (block_apply, block_decode, block_init,
+                                 block_specs, block_state_init,
+                                 block_state_specs, layer_kinds, period_of,
+                                 split_periods)
+from repro.sharding.specs import Lg, constrain
+
+
+# ---------------------------------------------------------------------------
+# init / specs / shapes
+# ---------------------------------------------------------------------------
+
+def _stack_init(key, m: ModelConfig, dtype):
+    period = period_of(m)
+    n_full, rem = split_periods(m)
+    pkeys = jax.random.split(key, max(n_full, 1))
+
+    def one_period(k):
+        ks = jax.random.split(k, len(period))
+        return {f"b{i}": block_init(ks[i], kind, m, dtype)
+                for i, kind in enumerate(period)}
+
+    per = [one_period(pkeys[i]) for i in range(n_full)]
+    stack = jax.tree.map(lambda *xs: jnp.stack(xs), *per) if per else {}
+    tail = {f"t{i}": block_init(jax.random.fold_in(key, 1000 + i), kind, m,
+                                dtype)
+            for i, kind in enumerate(rem)}
+    return stack, tail
+
+
+def _stack_specs(m: ModelConfig):
+    period = period_of(m)
+    n_full, rem = split_periods(m)
+    one = {f"b{i}": block_specs(kind, m) for i, kind in enumerate(period)}
+    # prepend the stacked "layers" axis to every Lg leaf
+    stack = jax.tree.map(lambda lg: Lg("layers", *lg), one,
+                         is_leaf=lambda x: isinstance(x, Lg)) if n_full else {}
+    tail = {f"t{i}": block_specs(kind, m) for i, kind in enumerate(rem)}
+    return stack, tail
+
+
+def lm_init(key, m: ModelConfig, dtype=jnp.float32) -> Dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {}
+    p["embed"] = L.embedding_init(ks[0], m.vocab_size, m.d_model, dtype)
+    p["stack"], p["tail"] = _stack_init(ks[1], m, dtype)
+    p["final_norm"] = (L.layernorm_init(m.d_model, dtype) if m.family == AUDIO
+                       else L.rmsnorm_init(m.d_model, dtype))
+    if not m.tie_embeddings:
+        p["head"] = {"w": (jax.random.normal(ks[2],
+                                             (m.d_model, m.vocab_size),
+                                             jnp.float32)
+                           * m.d_model ** -0.5).astype(dtype)}
+    if m.encdec.enabled:
+        enc_m = _encoder_model_cfg(m)
+        e_stack, e_tail = _stack_init(ks[3], enc_m, dtype)
+        p["encoder"] = {"stack": e_stack, "tail": e_tail,
+                        "norm": L.layernorm_init(m.d_model, dtype)}
+    return p
+
+
+def lm_param_shapes(m: ModelConfig, dtype=jnp.float32):
+    """Parameter tree as ShapeDtypeStructs — no allocation (dry-run path)."""
+    return jax.eval_shape(
+        lambda k: lm_init(k, m, dtype),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def lm_specs(m: ModelConfig) -> Dict[str, Any]:
+    p: Dict[str, Any] = {}
+    p["embed"] = L.embedding_specs()
+    p["stack"], p["tail"] = _stack_specs(m)
+    p["final_norm"] = (L.layernorm_specs() if m.family == AUDIO
+                       else L.rmsnorm_specs())
+    if not m.tie_embeddings:
+        p["head"] = {"w": Lg("embed", "vocab")}
+    if m.encdec.enabled:
+        enc_m = _encoder_model_cfg(m)
+        e_stack, e_tail = _stack_specs(enc_m)
+        p["encoder"] = {"stack": e_stack, "tail": e_tail,
+                        "norm": L.layernorm_specs()}
+    return p
+
+
+def _encoder_model_cfg(m: ModelConfig) -> ModelConfig:
+    """Encoder stack config: same dims, 'enc' blocks, encoder depth."""
+    import dataclasses
+    enc = dataclasses.replace(m, num_layers=m.encdec.encoder_layers,
+                              family="dense")
+    enc._force_kind = "enc"  # type: ignore[attr-defined]  (see blocks.layer_kinds)
+    return enc
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _run_stack(stack, tail, x, m: ModelConfig, positions, cd, enc_out,
+               remat: str, use_kernel: bool, cache_len: int = 0,
+               cache_dtype=jnp.bfloat16, scan_layers: bool = True):
+    """Run the period-scanned stack. If cache_len > 0, also collect the
+    decode cache produced by prefill (returned in init_decode_state layout).
+    """
+    period = period_of(m)
+    n_full, rem = split_periods(m)
+
+    def period_fn(x, pparams):
+        aux = jnp.zeros((), jnp.float32)
+        caches = {}
+        for i, kind in enumerate(period):
+            # layer-boundary residual sharding (sequence-parallel when the
+            # runtime policy enables it; identity otherwise)
+            x = constrain(x, ("batch", "seq", None))
+            x, a, c = block_apply(kind, pparams[f"b{i}"], x, m, positions, cd,
+                                  enc_out, use_kernel, cache_len, cache_dtype)
+            aux = aux + a
+            if cache_len:
+                caches[f"b{i}"] = c
+        return x, (aux, caches) if cache_len else (aux, None)
+
+    f = period_fn
+    if remat == "full":
+        f = jax.checkpoint(period_fn, prevent_cse=False)
+    elif remat == "dots":
+        f = jax.checkpoint(
+            period_fn, prevent_cse=False,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    stack_cache = {}
+    if n_full and scan_layers:
+        x, (auxs, stack_cache) = jax.lax.scan(lambda c, xs: f(c, xs), x, stack)
+        aux_total = aux_total + jnp.sum(auxs)
+    elif n_full:
+        # unrolled (probe/accounting mode): python loop over period slices
+        per_caches = []
+        for i in range(n_full):
+            sl = jax.tree.map(lambda a: a[i], stack)
+            x, (a, cch) = f(x, sl)
+            aux_total = aux_total + a
+            per_caches.append(cch)
+        if cache_len and per_caches:
+            stack_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *per_caches)
+    tail_cache = {}
+    for i, kind in enumerate(rem):
+        x, a, c = block_apply(kind, tail[f"t{i}"], x, m, positions, cd,
+                              enc_out, use_kernel, cache_len, cache_dtype)
+        aux_total = aux_total + a
+        if cache_len:
+            tail_cache[f"t{i}"] = c
+    if cache_len:
+        return x, aux_total, {"stack": stack_cache or {}, "tail": tail_cache}
+    return x, aux_total, None
+
+
+def encode(params, enc_embeds, m: ModelConfig, cd=None, remat: str = "full",
+           scan_layers: bool = True):
+    """Whisper encoder over stub frame embeddings (B, S_enc, d)."""
+    se, d = enc_embeds.shape[1], m.d_model
+    x = enc_embeds + L.sinusoidal_positions(se, d).astype(enc_embeds.dtype)
+    enc_m = _encoder_model_cfg(m)
+    enc = params["encoder"]
+    x, _, _ = _run_stack(enc["stack"], enc["tail"], x, enc_m,
+                         jnp.arange(se), cd, None, remat, False,
+                         scan_layers=scan_layers)
+    return L.layernorm_apply(enc["norm"], x)
+
+
+def lm_apply(params, batch: Dict[str, jnp.ndarray], m: ModelConfig,
+             cd=None, remat: str = "full", use_kernel: bool = False,
+             positions=None, scan_layers: bool = True
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """batch: {"tokens": (B,S) int32, ["enc_embeds": (B,Se,d)]}."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = L.embedding_apply(params["embed"], tokens, cd)
+    if m.family == "hybrid":                 # gemma-style embed scaling
+        x = x * jnp.asarray(m.d_model ** 0.5, x.dtype)
+    if m.encdec.enabled:                     # whisper: sinusoidal positions
+        x = x + L.sinusoidal_positions(s, m.d_model).astype(x.dtype)
+    if positions is None:
+        positions = jnp.arange(s)
+    enc_out = None
+    if m.encdec.enabled:
+        enc_out = encode(params, batch["enc_embeds"], m, cd, remat,
+                         scan_layers)
+    x, aux, _ = _run_stack(params["stack"], params["tail"], x, m, positions,
+                           cd, enc_out, remat, use_kernel,
+                           scan_layers=scan_layers)
+    x = (L.layernorm_apply(params["final_norm"], x) if m.family == AUDIO
+         else L.rmsnorm_apply(params["final_norm"], x, m.norm_eps))
+    if m.tie_embeddings:
+        logits = L.unembed_apply(params["embed"], x)
+    else:
+        # bf16 operands + f32 accumulation: keeps the (d, V) gather and the
+        # dW/dx cotangents in bf16 (half the collective bytes vs f32
+        # upcasting; EXPERIMENTS §Perf hc2)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"]["w"],
+                            preferred_element_type=jnp.float32)
+    return logits, aux
+
+
+def lm_loss(params, batch: Dict[str, jnp.ndarray], m: ModelConfig,
+            cd=None, remat: str = "full", use_kernel: bool = False,
+            scan_layers: bool = True
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Next-token xent. batch["labels"]: (B,S) with -1 = ignore."""
+    logits, aux = lm_apply(params, batch, m, cd, remat, use_kernel,
+                           scan_layers=scan_layers)
+    labels = batch["labels"]
+    valid = labels >= 0
+    lab = jnp.maximum(labels, 0)
+    # xent without gathering along the (model-sharded) vocab axis:
+    # nll = logsumexp(logits) - logits[label], picked via a one-hot
+    # contraction that GSPMD partitions cleanly (no vocab all-gather).
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(lab, logits.shape[-1], dtype=logits.dtype)
+    picked = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = lse - picked
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    loss = jnp.sum(nll * valid) / denom
+    total = loss + aux
+    return total, {"loss": loss, "aux_loss": aux,
+                   "tokens": jnp.sum(valid).astype(jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(m: ModelConfig, batch: int, cache_len: int,
+                      dtype=jnp.bfloat16):
+    period = period_of(m)
+    n_full, rem = split_periods(m)
+
+    def one(kind):
+        return block_state_init(kind, m, batch, cache_len, dtype)
+
+    stack = {}
+    if n_full:
+        one_p = {f"b{i}": one(kind) for i, kind in enumerate(period)}
+        stack = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_full, *x.shape)), one_p)
+    tail = {f"t{i}": one(kind) for i, kind in enumerate(rem)}
+    return {"stack": stack, "tail": tail}
+
+
+def decode_state_shapes(m: ModelConfig, batch: int, cache_len: int,
+                        dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: init_decode_state(m, batch, cache_len, dtype))
+
+
+def decode_state_specs(m: ModelConfig):
+    period = period_of(m)
+    n_full, rem = split_periods(m)
+    stack = {}
+    if n_full:
+        one_p = {f"b{i}": block_state_specs(kind, m)
+                 for i, kind in enumerate(period)}
+        stack = jax.tree.map(lambda lg: Lg("layers", *lg), one_p,
+                             is_leaf=lambda x: isinstance(x, Lg))
+    tail = {f"t{i}": block_state_specs(kind, m) for i, kind in enumerate(rem)}
+    return {"stack": stack, "tail": tail}
+
+
+def lm_decode_step(params, token: jnp.ndarray, state, index, m: ModelConfig,
+                   cd=None, scan_layers: bool = True
+                   ) -> Tuple[jnp.ndarray, Any]:
+    """token: (B,) int32; index: scalar int32 current position."""
+    period = period_of(m)
+    n_full, rem = split_periods(m)
+    x = L.embedding_apply(params["embed"], token[:, None], cd)
+    if m.family == "hybrid":
+        x = x * jnp.asarray(m.d_model ** 0.5, x.dtype)
+    if m.encdec.enabled:
+        pos_emb = jax.lax.dynamic_slice_in_dim(
+            L.sinusoidal_positions(m.encdec.max_target_positions, m.d_model),
+            jnp.minimum(index, m.encdec.max_target_positions - 1), 1, axis=0)
+        x = x + pos_emb.astype(x.dtype)[None]
+
+    new_state: Dict[str, Any] = {"stack": {}, "tail": {}}
+    if n_full:
+        def body(x, xs):
+            pparams, pstate = xs
+            ns = {}
+            for i, kind in enumerate(period):
+                x, s = block_decode(kind, pparams[f"b{i}"], x,
+                                    pstate[f"b{i}"], index, m, cd)
+                ns[f"b{i}"] = s
+            return x, ns
+        if scan_layers:
+            x, ns = jax.lax.scan(body, x, (params["stack"], state["stack"]))
+        else:
+            per = []
+            for i in range(n_full):
+                sl = jax.tree.map(lambda a: a[i],
+                                  (params["stack"], state["stack"]))
+                x, nsi = body(x, sl)
+                per.append(nsi)
+            ns = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+        new_state["stack"] = ns
+    for i, kind in enumerate(rem):
+        x, s = block_decode(kind, params["tail"][f"t{i}"], x,
+                            state["tail"][f"t{i}"], index, m, cd)
+        new_state["tail"][f"t{i}"] = s
+
+    x = (L.layernorm_apply(params["final_norm"], x) if m.family == AUDIO
+         else L.rmsnorm_apply(params["final_norm"], x, m.norm_eps))
+    if m.tie_embeddings:
+        logits = L.unembed_apply(params["embed"], x)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"]["w"],
+                            preferred_element_type=jnp.float32)
+    return logits[:, 0], new_state
+
+
+def lm_prefill(params, batch: Dict[str, jnp.ndarray], m: ModelConfig,
+               cache_len: int, cd=None, cache_dtype=jnp.bfloat16,
+               remat: str = "none", scan_layers: bool = True
+               ) -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
+    """Process the full prompt, returning (last-token logits, decode state,
+    next index). The cache is populated *inside* the forward scan (each
+    block contributes its K/V / recurrent state), so prefill is one pass.
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = L.embedding_apply(params["embed"], tokens, cd)
+    if m.family == "hybrid":
+        x = x * jnp.asarray(m.d_model ** 0.5, x.dtype)
+    if m.encdec.enabled:
+        x = x + L.sinusoidal_positions(s, m.d_model).astype(x.dtype)
+    enc_out = None
+    if m.encdec.enabled:
+        enc_out = encode(params, batch["enc_embeds"], m, cd, remat,
+                         scan_layers)
+    positions = jnp.arange(s)
+    x, _, state = _run_stack(params["stack"], params["tail"], x, m, positions,
+                             cd, enc_out, remat, False,
+                             cache_len=cache_len, cache_dtype=cache_dtype,
+                             scan_layers=scan_layers)
+    x = (L.layernorm_apply(params["final_norm"], x) if m.family == AUDIO
+         else L.rmsnorm_apply(params["final_norm"], x, m.norm_eps))
+    x_last = x[:, -1:]
+    if m.tie_embeddings:
+        logits = L.unembed_apply(params["embed"], x_last)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x_last, params["head"]["w"],
+                            preferred_element_type=jnp.float32)
+    return logits[:, 0], state, jnp.asarray(s, jnp.int32)

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adamw, sgd, make_optimizer, global_norm, clip_by_global_norm,
+)
+from repro.optim.schedule import make_schedule  # noqa: F401

@@ -1,0 +1,114 @@
+"""Optimizers as pure (init, update) pairs over parameter pytrees.
+
+AdamW and SGD+momentum, with global-norm clipping and a state-dtype knob
+(bf16 moments for the ZeRO-style memory accounting of the biggest archs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    # update(grads, state, params, lr) -> (new_params, new_state)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), tree), norm
+
+
+def adamw(beta1=0.9, beta2=0.95, eps=1e-8, weight_decay=0.0,
+          grad_clip=0.0, state_dtype=None) -> Optimizer:
+    def init(params):
+        def zeros_like(p):
+            dt = state_dtype or p.dtype
+            return jnp.zeros(p.shape, dt)
+        return {"m": jax.tree.map(zeros_like, params),
+                "v": jax.tree.map(zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        if grad_clip:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1 - beta1 ** t
+        bc2 = 1 - beta2 ** t
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = beta1 * m.astype(jnp.float32) + (1 - beta1) * g32
+            v32 = beta2 * v.astype(jnp.float32) + (1 - beta2) * g32 * g32
+            mh = m32 / bc1
+            vh = v32 / bc2
+            delta = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr * delta
+            return (newp.astype(p.dtype), m32.astype(m.dtype),
+                    v32.astype(v.dtype))
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "step": step}
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(momentum=0.9, grad_clip=0.0, state_dtype=None) -> Optimizer:
+    def init(params):
+        def zeros_like(p):
+            dt = state_dtype or p.dtype
+            return jnp.zeros(p.shape, dt)
+        return {"mom": jax.tree.map(zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        if grad_clip:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+
+        def upd(g, mo, p):
+            m32 = momentum * mo.astype(jnp.float32) + g.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr * m32
+            return (newp.astype(p.dtype), m32.astype(mo.dtype))
+
+        out = jax.tree.map(upd, grads, state["mom"], params)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"mom": new_m, "step": state["step"] + 1}
+
+    return Optimizer(init=init, update=update)
+
+
+def make_optimizer(cfg) -> Optimizer:
+    """cfg: OptimConfig."""
+    sd = jnp.dtype(cfg.state_dtype) if cfg.state_dtype else None
+    if cfg.name in ("adam", "adamw"):
+        return adamw(cfg.beta1, cfg.beta2, cfg.eps,
+                     cfg.weight_decay if cfg.name == "adamw" else 0.0,
+                     cfg.grad_clip, sd)
+    if cfg.name == "sgd":
+        return sgd(cfg.beta1, cfg.grad_clip, sd)
+    raise ValueError(f"unknown optimizer {cfg.name!r}")

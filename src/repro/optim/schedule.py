@@ -1,0 +1,26 @@
+"""Learning-rate schedules (hand-rolled; no optax in this environment)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(name: str, base_lr: float, warmup_steps: int = 0,
+                  total_steps: int = 1000, final_frac: float = 0.1):
+    """Returns step -> lr (jnp scalar). Supports constant/linear/cosine."""
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1) / jnp.maximum(warmup_steps, 1))
+        if name == "constant":
+            decay = 1.0
+        elif name == "linear":
+            t = jnp.clip((step - warmup_steps)
+                         / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+            decay = 1.0 - (1.0 - final_frac) * t
+        elif name == "cosine":
+            t = jnp.clip((step - warmup_steps)
+                         / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+            decay = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        else:
+            raise ValueError(f"unknown schedule {name!r}")
+        return base_lr * warm * decay
+    return sched

@@ -1,0 +1,4 @@
+from repro.roofline.hw import TPU_V5E  # noqa: F401
+from repro.roofline.analysis import (  # noqa: F401
+    RooflineReport, analyze_compiled, collective_bytes_from_hlo,
+)

@@ -1,0 +1,140 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+    compute_term    = per_chip_HLO_FLOPs / peak_FLOP/s
+    memory_term     = per_chip_HLO_bytes_accessed / HBM_bw
+    collective_term = per_chip_collective_bytes / link_bw
+
+FLOPs/bytes come from ``compiled.cost_analysis()``. The compiled module is
+the post-GSPMD *per-device* program, so its totals are already per chip
+(verified against a hand-computed sharded matmul). Collective bytes are NOT
+in cost_analysis: they are summed from the optimized HLO text, one entry per
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+using the op's *output* tensor bytes as the wire-bytes convention
+(documented in EXPERIMENTS.md §Roofline; ring-algorithm factors of
+2(n-1)/n are ignored uniformly so comparisons between iterations are
+apples-to-apples).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.roofline.hw import TPU_V5E, HwSpec
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %ag = bf16[2,1024,512]{2,1,0} all-gather(...)
+_SHAPE_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum output-tensor bytes per collective kind from optimized HLO."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for m in _SHAPE_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        out[kind] += _shape_bytes(dtype, dims)
+        out["count"] += 1
+    # tuple-result collectives (multiple operands) — grab tuple elements
+    tuple_re = re.compile(
+        r"=\s*\(([^)]*)\)\s+"
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+        r"(?:-start)?\(")
+    elem_re = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+    for m in tuple_re.finditer(hlo_text):
+        kind = m.group(2)
+        for e in elem_re.finditer(m.group(1)):
+            out[kind] += _shape_bytes(e.group(1), e.group(2))
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    collectives: Dict[str, int] = field(default_factory=dict)
+    model_flops: float = 0.0            # 6*N*D (or 6*N_active*D for MoE)
+    compute_term_s: float = 0.0
+    memory_term_s: float = 0.0
+    collective_term_s: float = 0.0
+    arg_bytes_per_device: float = 0.0
+    temp_bytes_per_device: float = 0.0
+    out_bytes_per_device: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_term_s, "memory": self.memory_term_s,
+                 "collective": self.collective_term_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS (global 6ND, divided per chip) / per-chip HLO FLOPs."""
+        if not self.hlo_flops:
+            return 0.0
+        return (self.model_flops / self.chips) / self.hlo_flops
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["dominant"] = self.dominant
+        d["useful_flops_ratio"] = self.useful_flops_ratio
+        return d
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2)
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                     chips: int, model_flops: float,
+                     hw: HwSpec = TPU_V5E,
+                     hlo_text: Optional[str] = None) -> RooflineReport:
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes_from_hlo(text)
+    mem = compiled.memory_analysis()
+    rep = RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts,
+        collective_bytes=float(coll["total"]), collectives=coll,
+        model_flops=model_flops,
+        compute_term_s=flops / hw.peak_flops_bf16,
+        memory_term_s=byts / hw.hbm_bw,
+        # per-chip wire bytes: collectives are already per-participant in
+        # the SPMD module (shapes are per-shard), links per chip ~= 4 on a
+        # 2D torus; use one link as the conservative convention.
+        collective_term_s=float(coll["total"]) / hw.ici_bw_per_link,
+        arg_bytes_per_device=getattr(mem, "argument_size_in_bytes", 0),
+        temp_bytes_per_device=getattr(mem, "temp_size_in_bytes", 0),
+        out_bytes_per_device=getattr(mem, "output_size_in_bytes", 0),
+    )
+    return rep

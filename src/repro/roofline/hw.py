@@ -1,0 +1,22 @@
+"""Target-hardware constants (TPU v5e, per chip)."""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HwSpec:
+    name: str
+    peak_flops_bf16: float     # FLOP/s
+    hbm_bw: float              # bytes/s
+    ici_bw_per_link: float     # bytes/s per link
+    hbm_bytes: float
+    vmem_bytes: float
+
+
+TPU_V5E = HwSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_bw_per_link=50e9,
+    hbm_bytes=16 * 1024 ** 3,
+    vmem_bytes=128 * 1024 ** 2,
+)

@@ -1,0 +1,2 @@
+from repro.runtime.train import make_fsl_train_step, make_train_step  # noqa: F401
+from repro.runtime.serve import make_decode_step, make_prefill_step  # noqa: F401

@@ -1,0 +1,49 @@
+"""Serving-step builders: prefill and single-token decode.
+
+``decode`` is the step the decode_32k / long_500k dry-run shapes lower:
+ONE new token against a populated cache of ``shape.seq_len`` positions.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import RunConfig
+from repro.models.transformer import lm_decode_step, lm_prefill
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+def cache_length(cfg: RunConfig) -> int:
+    """Decode-cache length for the configured shape (window-aware archs clip
+    inside block_state_init; whisper clips to max_target_positions)."""
+    return cfg.shape.seq_len
+
+
+def make_prefill_step(cfg: RunConfig) -> Callable:
+    m = cfg.model
+    cd = _dtype(cfg.parallel.compute_dtype)
+    cache_dt = _dtype(cfg.parallel.cache_dtype)
+    clen = cache_length(cfg)
+
+    def prefill(params, batch):
+        return lm_prefill(params, batch, m, clen, cd, cache_dt,
+                          remat=cfg.parallel.remat,
+                          scan_layers=cfg.parallel.scan_layers)
+
+    return prefill
+
+
+def make_decode_step(cfg: RunConfig) -> Callable:
+    m = cfg.model
+    cd = _dtype(cfg.parallel.compute_dtype)
+
+    def decode(params, token, state, index):
+        return lm_decode_step(params, token, state, index, m, cd,
+                              scan_layers=cfg.parallel.scan_layers)
+
+    return decode

@@ -1,0 +1,123 @@
+"""Training-step builders.
+
+Two step shapes:
+
+  * ``make_train_step``      standard data-parallel training (gradient sync
+                             every step — the paper's ``local_steps=1`` case;
+                             pjit derives the gradient all-reduce from the
+                             global-mean loss).
+  * ``make_fsl_train_step``  FSL mode: one discriminator/model replica per
+                             FL client (leading client axis, sharded over
+                             ``data``), `local_steps` local updates between
+                             FedAvg rounds — parameter averaging is a single
+                             collective on the client axis. This is the
+                             paper's FedAvg cadence as a first-class mesh
+                             feature; cadence>1 divides parameter-sync
+                             collective bytes by the cadence (EXPERIMENTS
+                             §Perf quantifies this).
+
+Both accumulate over ``parallel.microbatches`` with a `lax.scan` (bounding
+live activations) and remat inside the layer scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import RunConfig
+from repro.models.transformer import lm_loss
+from repro.optim import make_optimizer
+from repro.optim.schedule import make_schedule
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+def make_train_step(cfg: RunConfig) -> Callable:
+    """-> step(params, opt_state, batch, step_idx) -> (params, opt, metrics)."""
+    m = cfg.model
+    par = cfg.parallel
+    opt = make_optimizer(cfg.optim)
+    sched = make_schedule(cfg.optim.schedule, cfg.optim.lr,
+                          cfg.optim.warmup_steps, cfg.optim.total_steps)
+    cd = _dtype(par.compute_dtype)
+    acc_dt = _dtype(par.accum_dtype)
+    nmb = max(1, par.microbatches)
+
+    def loss_fn(params, mb):
+        return lm_loss(params, mb, m, cd, par.remat, par.use_flash_kernel,
+                       scan_layers=par.scan_layers)
+
+    def train_step(params, opt_state, batch, step_idx):
+        bsz = batch["tokens"].shape[0]
+        assert bsz % nmb == 0, (bsz, nmb)
+
+        def split_mb(x):
+            return x.reshape(nmb, bsz // nmb, *x.shape[1:])
+
+        mbs = jax.tree.map(split_mb, batch)
+
+        def mb_body(carry, mb):
+            gacc, lsum, auxsum = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            gacc = jax.tree.map(lambda a, g: a + g.astype(a.dtype),
+                                gacc, grads)
+            return (gacc, lsum + metrics["loss"],
+                    auxsum + metrics["aux_loss"]), None
+
+        gz = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+        carry0 = (gz, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+        if par.unroll_microbatches or nmb == 1:
+            carry = carry0
+            for i in range(nmb):
+                carry, _ = mb_body(carry, jax.tree.map(lambda x: x[i], mbs))
+            gacc, lsum, auxsum = carry
+        else:
+            (gacc, lsum, auxsum), _ = jax.lax.scan(mb_body, carry0, mbs)
+        grads = jax.tree.map(lambda g: g / nmb, gacc)
+        lr = sched(step_idx)
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        metrics = {"loss": lsum / nmb, "aux_loss": auxsum / nmb, "lr": lr}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_fsl_train_step(cfg: RunConfig, num_clients: int) -> Callable:
+    """FSL-mode step over stacked per-client replicas.
+
+    params/opt leaves carry a leading (num_clients,) axis; batch leaves a
+    leading client axis. Every ``cfg.fsl.local_steps`` steps the replicas
+    are FedAvg'd (uniform mean — weighted form in core.fedavg).
+    """
+    base_step = make_train_step(cfg)
+    local_steps = max(1, cfg.fsl.local_steps)
+
+    def fsl_step(cparams, copt, cbatch, step_idx):
+        cparams, copt, metrics = jax.vmap(
+            lambda p, o, b: base_step(p, o, b, step_idx))(cparams, copt,
+                                                          cbatch)
+        do_avg = (step_idx + 1) % local_steps == 0
+
+        def avg_all(t):
+            return jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True),
+                    x.shape).astype(x.dtype), t)
+
+        # lax.cond (not where): the FedAvg collective only *executes* on
+        # cadence steps, so cadence k really divides sync traffic by k
+        # (EXPERIMENTS §Perf hc3). k=1 takes the static path (no cond).
+        if local_steps == 1:
+            cparams = avg_all(cparams)
+        else:
+            cparams = jax.lax.cond(do_avg, avg_all, lambda t: t, cparams)
+        metrics = jax.tree.map(lambda x: jnp.mean(x), metrics)
+        return cparams, copt, metrics
+
+    return fsl_step

@@ -1,0 +1,4 @@
+from repro.sharding.specs import (  # noqa: F401
+    LOGICAL, AxisRules, Lg, default_rules, is_lg, logical_spec,
+    mesh_axis_size, spec_for_param, tree_shardings,
+)

@@ -1,0 +1,106 @@
+"""Config system: registry resolution, param counts, overrides, smoke
+reduction, validation."""
+import pytest
+
+from repro.config import INPUT_SHAPES, RunConfig, reduce_for_smoke
+from repro.configs.registry import (ASSIGNED_ARCHS, SHAPES, SkippedShape,
+                                    get_config, iter_pairs, list_archs)
+
+# target param counts (billions) from the assignment, +/- tolerance
+EXPECTED_B = {
+    "qwen3-14b": (14.8, 1.5),
+    "recurrentgemma-9b": (9.6, 1.5),
+    "rwkv6-1.6b": (1.6, 0.3),
+    "deepseek-v2-lite-16b": (16.2, 2.0),
+    "chameleon-34b": (34.3, 3.0),
+    "olmoe-1b-7b": (6.9, 0.8),
+    "whisper-base": (0.10, 0.05),
+    "granite-20b": (28.2, 9.0),   # assignment dims give 28B (see config note)
+    "qwen2-72b": (72.7, 4.0),
+    "llama3-405b": (405.9, 10.0),
+}
+
+
+def test_all_archs_registered():
+    assert len(ASSIGNED_ARCHS) == 10
+    assert "dcgan-mnist" in list_archs()
+    assert len(SHAPES) == 4
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_counts(arch):
+    cfg = get_config(arch)
+    n = cfg.model.param_count() / 1e9
+    mid, tol = EXPECTED_B[arch]
+    assert abs(n - mid) <= tol, f"{arch}: {n:.2f}B vs expected {mid}B"
+
+
+def test_moe_active_params_smaller():
+    for arch in ("deepseek-v2-lite-16b", "olmoe-1b-7b"):
+        cfg = get_config(arch)
+        assert cfg.model.active_param_count() < 0.5 * cfg.model.param_count()
+
+
+def test_pairs_matrix_covers_40():
+    pairs = list(iter_pairs(include_skipped=True))
+    assert len(pairs) == 40
+    skipped = [(a, s) for a, s, c in pairs if c is None]
+    assert skipped == [("whisper-base", "long_500k")]
+
+
+def test_long500k_dense_gets_sliding_window():
+    cfg = get_config("qwen3-14b", "long_500k")
+    assert cfg.model.attention == "sliding"
+    assert cfg.model.sliding_window == 4096
+
+
+def test_long500k_native_for_ssm():
+    cfg = get_config("rwkv6-1.6b", "long_500k")
+    assert cfg.model.attention == "none"
+    cfg = get_config("recurrentgemma-9b", "long_500k")
+    assert cfg.model.rglru.enabled
+
+
+def test_whisper_long_skipped():
+    with pytest.raises(SkippedShape):
+        get_config("whisper-base", "long_500k")
+
+
+def test_override_types_and_unknown_key():
+    cfg = get_config("qwen3-14b")
+    c2 = cfg.override({"model.d_model": "1024", "optim.lr": "0.01"})
+    assert c2.model.d_model == 1024 and isinstance(c2.model.d_model, int)
+    assert abs(c2.optim.lr - 0.01) < 1e-12
+    with pytest.raises(KeyError):
+        cfg.override({"model.not_a_key": 1})
+
+
+def test_roundtrip_dict():
+    cfg = get_config("deepseek-v2-lite-16b", "train_4k")
+    c2 = RunConfig.from_dict(cfg.to_dict())
+    assert c2.to_dict() == cfg.to_dict()
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_reduction_bounds(arch):
+    cfg = reduce_for_smoke(get_config(arch))
+    m = cfg.model
+    assert m.num_layers == 2
+    assert m.d_model <= 512
+    assert m.moe.num_experts <= 4
+    assert m.num_heads % max(1, m.num_kv_heads) == 0
+
+
+def test_validation_rejects_dense_long_decode():
+    cfg = get_config("qwen3-14b")
+    bad = cfg.override({"shape.mode": "decode", "shape.seq_len": 524288})
+    with pytest.raises(ValueError):
+        bad.validate()
+
+
+def test_input_shapes_assignment():
+    s = INPUT_SHAPES
+    assert (s["train_4k"].seq_len, s["train_4k"].global_batch) == (4096, 256)
+    assert (s["prefill_32k"].seq_len, s["prefill_32k"].global_batch) == (32768, 32)
+    assert (s["decode_32k"].seq_len, s["decode_32k"].global_batch) == (32768, 128)
+    assert (s["long_500k"].seq_len, s["long_500k"].global_batch) == (524288, 1)

@@ -1,0 +1,59 @@
+"""FedAvg aggregation properties (host + property-based)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.fedavg import fedavg
+
+
+def _tree(seed, scale=1.0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": scale * jax.random.normal(k, (4, 5)),
+            "b": {"x": scale * jax.random.normal(jax.random.fold_in(k, 1),
+                                                 (3,))}}
+
+
+def test_fedavg_equal_weights_is_mean():
+    trees = [_tree(i) for i in range(4)]
+    avg = fedavg(trees)
+    want = jax.tree.map(lambda *xs: sum(xs) / 4, *trees)
+    for a, b in zip(jax.tree.leaves(avg), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(ws=st.lists(st.floats(min_value=0.01, max_value=100.0),
+                   min_size=2, max_size=6))
+def test_fedavg_weighted_properties(ws):
+    trees = [_tree(i) for i in range(len(ws))]
+    avg = fedavg(trees, ws)
+    # convexity: avg within [min, max] elementwise
+    stacked = np.stack([np.asarray(t["w"]) for t in trees])
+    a = np.asarray(avg["w"])
+    assert (a >= stacked.min(0) - 1e-5).all()
+    assert (a <= stacked.max(0) + 1e-5).all()
+    # scale invariance of weights
+    avg2 = fedavg(trees, [w * 7.5 for w in ws])
+    np.testing.assert_allclose(np.asarray(avg2["w"]), a, atol=1e-5)
+
+
+def test_fedavg_idempotent_on_identical_clients():
+    t = _tree(0)
+    avg = fedavg([t, t, t], [1, 2, 3])
+    for a, b in zip(jax.tree.leaves(avg), jax.tree.leaves(t)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_fedavg_structure_mismatch_raises():
+    with pytest.raises(ValueError):
+        fedavg([{"a": jnp.ones(3)}, {"b": jnp.ones(3)}])
+
+
+def test_fedavg_dominant_weight_limits():
+    t0, t1 = _tree(0), _tree(1)
+    avg = fedavg([t0, t1], [1e6, 1e-6])
+    np.testing.assert_allclose(np.asarray(avg["w"]), np.asarray(t0["w"]),
+                               atol=1e-4)

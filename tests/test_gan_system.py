@@ -1,0 +1,65 @@
+"""End-to-end FSL-GAN system behaviour (paper reproduction at smoke scale)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.gan import FSLGANTrainer, bce_logits
+from repro.data import partition_dirichlet, synthetic_mnist
+
+
+def test_bce_logits_stable_extremes():
+    assert float(bce_logits(jnp.asarray([1000.0]), 1.0)) < 1e-3
+    assert float(bce_logits(jnp.asarray([-1000.0]), 0.0)) < 1e-3
+    assert np.isfinite(float(bce_logits(jnp.asarray([-1000.0]), 1.0)))
+    assert float(bce_logits(jnp.asarray([-1000.0]), 1.0)) > 100.0
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = get_config("dcgan-mnist").override({
+        "shape.global_batch": 16, "fsl.num_clients": 2,
+        "model.dcgan.base_filters": 8})
+    imgs, labels = synthetic_mnist(200, seed=0)
+    parts = partition_dirichlet(imgs, labels, 2, alpha=0.5, seed=0)
+    tr = FSLGANTrainer(cfg, parts, seed=0)
+    metrics = [tr.train_epoch(batches_per_client=2) for _ in range(3)]
+    return tr, metrics
+
+
+def test_gan_trains_and_improves(trained):
+    tr, metrics = trained
+    assert metrics[-1]["d_loss"] < metrics[0]["d_loss"]
+    assert all(np.isfinite(m["g_loss"]) for m in metrics)
+
+
+def test_gan_generates_valid_images(trained):
+    tr, _ = trained
+    gen = tr.generate(4)
+    assert gen.shape == (4, 28, 28, 1)
+    assert gen.min() >= -1.0 and gen.max() <= 1.0
+
+
+def test_gan_clients_have_plans(trained):
+    tr, _ = trained
+    for cid, plan in tr.plans.items():
+        names = plan.layers_in_order()
+        assert names == ["conv0", "conv1", "conv2", "classifier"]
+
+
+def test_discriminators_synced_after_round(trained):
+    tr, _ = trained
+    ids = list(tr.state.d_params)
+    for a, b in zip(jax.tree.leaves(tr.state.d_params[ids[0]]),
+                    jax.tree.leaves(tr.state.d_params[ids[1]])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_privacy_boundary_server_never_sees_real_data():
+    """Structural check: generator update consumes only z and D params."""
+    import inspect
+    from repro.core import gan
+    src = inspect.getsource(gan.FSLGANTrainer._build_steps)
+    # the g_step signature has no `real` argument
+    assert "def g_step(g_params, g_opt, d_params, z):" in src

@@ -1,0 +1,107 @@
+"""Core layers: norms, rope, attention equivalences, GQA."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def test_rmsnorm_unit_scale_output_norm(key):
+    p = L.rmsnorm_init(64)
+    x = jax.random.normal(key, (4, 8, 64)) * 5.0
+    y = L.rmsnorm_apply(p, x)
+    rms = jnp.sqrt(jnp.mean(y.astype(jnp.float32) ** 2, -1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, rtol=1e-3)
+
+
+def test_layernorm_zero_mean(key):
+    p = L.layernorm_init(32)
+    x = jax.random.normal(key, (2, 5, 32)) + 3.0
+    y = L.layernorm_apply(p, x)
+    np.testing.assert_allclose(np.asarray(jnp.mean(y, -1)), 0.0, atol=1e-5)
+
+
+def test_rope_preserves_norm_and_relative(key):
+    x = jax.random.normal(key, (1, 6, 2, 32))
+    pos = jnp.arange(6)
+    y = L.apply_rope(x, pos, 10000.0)
+    # rotation preserves per-head norms
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+    # dot products depend only on relative distance
+    q = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (1, 1, 1, 32))
+    def dot_at(pq, pk):
+        qr = L.apply_rope(q, jnp.asarray([pq]), 10000.0)
+        kr = L.apply_rope(k, jnp.asarray([pk]), 10000.0)
+        return float(jnp.sum(qr * kr))
+    assert abs(dot_at(5, 3) - dot_at(7, 5)) < 1e-4
+
+
+def test_attention_chunked_matches_full(key):
+    b, s, h, d = 2, 96, 4, 32
+    q = jax.random.normal(key, (b, s, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, 2, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, 2, d))
+    pos = jnp.arange(s)
+    full = L.attention_full(q, k, v, pos, pos)
+    chunked = L.attention_chunked(q, k, v, pos, pos, kv_chunk=32)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                               atol=1e-5)
+
+
+def test_attention_chunked_sliding_window(key):
+    b, s, h, d = 1, 64, 2, 16
+    q = jax.random.normal(key, (b, s, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, d))
+    pos = jnp.arange(s)
+    full = L.attention_full(q, k, v, pos, pos, window=8)
+    chunked = L.attention_chunked(q, k, v, pos, pos, window=8, kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                               atol=1e-5)
+
+
+def test_attention_causality(key):
+    """Changing future K/V must not change past outputs."""
+    b, s, h, d = 1, 32, 2, 16
+    q = jax.random.normal(key, (b, s, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, d))
+    pos = jnp.arange(s)
+    out1 = L.attention_full(q, k, v, pos, pos)
+    k2 = k.at[:, 20:].set(99.0)
+    v2 = v.at[:, 20:].set(-99.0)
+    out2 = L.attention_full(q, k2, v2, pos, pos)
+    np.testing.assert_allclose(np.asarray(out1[:, :20]),
+                               np.asarray(out2[:, :20]), atol=1e-5)
+    assert not np.allclose(np.asarray(out1[:, 20:]), np.asarray(out2[:, 20:]))
+
+
+def test_gqa_kv_repetition_matches_mha(key):
+    """GQA with kv groups == explicit repetition."""
+    dims = L.AttnDims(d_model=64, num_heads=4, num_kv_heads=2, head_dim=16)
+    p = L.gqa_init(key, dims)
+    x = jax.random.normal(jax.random.fold_in(key, 3), (2, 24, 64))
+    out, (k, v) = L.gqa_apply(p, x, dims)
+    assert out.shape == (2, 24, 64)
+    assert k.shape == (2, 24, 2, 16)
+
+
+def test_mlp_swiglu_shapes(key):
+    p = L.mlp_init(key, 32, 64, "silu")
+    x = jax.random.normal(key, (2, 5, 32))
+    assert L.mlp_apply(p, x, "silu").shape == (2, 5, 32)
+
+
+def test_sinusoidal_positions_range():
+    e = L.sinusoidal_positions(100, 64)
+    assert e.shape == (100, 64)
+    assert float(jnp.max(jnp.abs(e))) <= 1.0 + 1e-6

@@ -1,0 +1,70 @@
+"""Optimizers, schedules, clipping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import OptimConfig
+from repro.optim import clip_by_global_norm, global_norm, make_optimizer
+from repro.optim.schedule import make_schedule
+
+
+def _minimize(opt, steps=200, lr=0.1):
+    params = {"x": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum((p["x"] - jnp.asarray([1.0, 1.0])) ** 2)
+
+    for _ in range(steps):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, jnp.asarray(lr))
+    return float(loss(params))
+
+
+def test_adamw_converges_quadratic():
+    opt = make_optimizer(OptimConfig(name="adam", lr=0.1))
+    assert _minimize(opt) < 1e-3
+
+
+def test_sgd_converges_quadratic():
+    opt = make_optimizer(OptimConfig(name="sgd", beta1=0.9))
+    assert _minimize(opt, lr=0.05) < 1e-3
+
+
+def test_weight_decay_shrinks_params():
+    p = {"x": jnp.asarray([10.0])}
+    zero_g = {"x": jnp.zeros(1)}
+    o_wd = make_optimizer(OptimConfig(name="adamw", weight_decay=0.1))
+    s = o_wd.init(p)
+    p2, _ = o_wd.update(zero_g, s, p, jnp.asarray(0.1))
+    assert float(p2["x"][0]) < 10.0
+
+
+def test_grad_clip_norm():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-4)
+    small = {"a": jnp.full((4,), 0.01)}
+    c2, _ = clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(c2["a"]), 0.01, rtol=1e-5)
+
+
+def test_bf16_state_dtype():
+    opt = make_optimizer(OptimConfig(name="adamw", state_dtype="bfloat16"))
+    p = {"x": jnp.ones((4,), jnp.bfloat16)}
+    s = opt.init(p)
+    assert s["m"]["x"].dtype == jnp.bfloat16
+
+
+@pytest.mark.parametrize("name", ["constant", "linear", "cosine"])
+def test_schedules(name):
+    sch = make_schedule(name, 1.0, warmup_steps=10, total_steps=100)
+    # warmup ramps
+    assert float(sch(0)) < float(sch(9)) or name == "constant" and True
+    assert float(sch(9)) == pytest.approx(1.0, rel=0.15)
+    if name != "constant":
+        assert float(sch(99)) < float(sch(20))
+    # never negative
+    for s in [0, 10, 50, 99, 150]:
+        assert float(sch(s)) >= 0.0

@@ -1,0 +1,104 @@
+"""Sharding rules + roofline HLO parsing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.roofline.analysis import collective_bytes_from_hlo
+from repro.sharding.specs import (AxisRules, Lg, default_rules, logical_spec,
+                                  tree_shardings)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # container has 1 device; a 1x1 mesh still exercises the rule machinery
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _mesh_multi():
+    """Fake a larger mesh via Mesh of the same device repeated? Not possible;
+    use rule-level tests with a synthetic mesh-shape object instead."""
+
+
+def test_logical_spec_divisibility(mesh):
+    rules = default_rules(mesh)
+    # 1-sized axes always divide; spec materializes mapped axes
+    spec = logical_spec(mesh, rules, (16, 32), ("embed", "mlp"))
+    assert isinstance(spec, P)
+
+
+def test_logical_spec_drops_nondivisible():
+    # synthetic rules against a real 1x1 mesh but manual divisibility check
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    rules = AxisRules(rules={"embed": "data", "mlp": "model",
+                             "batch": ("pod", "data")})
+    spec = logical_spec(FakeMesh(), rules, (30, 64), ("embed", "mlp"))
+    # 30 % 16 != 0 -> dropped; 64 % 16 == 0 -> kept
+    assert spec == P(None, "model")
+
+
+def test_logical_spec_no_axis_reuse():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 4}
+    rules = AxisRules(rules={"embed": "data", "mlp": "data"})
+    spec = logical_spec(FakeMesh(), rules, (8, 8), ("embed", "mlp"))
+    assert spec == P("data")  # second use of 'data' dropped (trailing None trimmed)
+
+
+def test_tree_shardings_structure_mismatch_raises(mesh):
+    rules = default_rules(mesh)
+    params = {"a": jnp.ones((4, 4))}
+    specs = {"b": Lg("embed", "mlp")}
+    with pytest.raises((ValueError, KeyError)):
+        tree_shardings(mesh, rules, params, specs)
+
+
+def test_collective_parser_counts_bytes():
+    hlo = """
+  %ag = bf16[2,1024,512]{2,1,0} all-gather(%x), replica_groups={}
+  %ar = f32[128]{0} all-reduce(%y), to_apply=%add
+  %rs = f32[64,32]{1,0} reduce-scatter(%z), dimensions={0}
+  %cp = bf16[16,16]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %a2a = f32[8,8]{1,0} all-to-all(%v), dimensions={0}
+"""
+    out = collective_bytes_from_hlo(hlo)
+    assert out["all-gather"] == 2 * 1024 * 512 * 2
+    assert out["all-reduce"] == 128 * 4
+    assert out["reduce-scatter"] == 64 * 32 * 4
+    assert out["collective-permute"] == 16 * 16 * 2
+    assert out["all-to-all"] == 8 * 8 * 4
+    assert out["count"] == 5
+    assert out["total"] == sum(out[k] for k in
+                               ("all-gather", "all-reduce", "reduce-scatter",
+                                "all-to-all", "collective-permute"))
+
+
+def test_collective_parser_on_real_module():
+    """Lower a psum on a 1-device mesh; parser must not crash (0 or more
+    collectives depending on optimization)."""
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    from jax.sharding import NamedSharding
+
+    def f(x):
+        return x * 2
+
+    with mesh:
+        c = jax.jit(f, in_shardings=NamedSharding(mesh, P("data"))).lower(
+            jax.ShapeDtypeStruct((8,), jnp.float32)).compile()
+    out = collective_bytes_from_hlo(c.as_text())
+    assert out["total"] >= 0
+
+
+def test_roofline_report_dominant():
+    from repro.roofline.analysis import RooflineReport
+    r = RooflineReport(arch="x", shape="y", mesh="m", chips=256,
+                       hlo_flops=1e15, hlo_bytes=1e9, collective_bytes=1e9,
+                       model_flops=2.56e17)
+    assert r.dominant == "compute"
+    assert 0.9 < r.useful_flops_ratio < 1.1

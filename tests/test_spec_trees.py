@@ -1,0 +1,77 @@
+"""Spec-tree/param-tree structural consistency for ALL assigned archs at
+FULL size (eval_shape — no allocation), plus frontend stubs.
+
+This is the cheap version of the dry-run's hardest failure mode: a param
+tree and its logical-axis spec tree drifting apart.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ASSIGNED_ARCHS, get_config
+from repro.models.frontends import audio_frame_embeddings, vlm_interleave
+from repro.models.transformer import (decode_state_shapes,
+                                      decode_state_specs, lm_param_shapes,
+                                      lm_specs)
+from repro.sharding.specs import Lg, is_lg
+
+
+def _structure(tree, is_leaf=None):
+    return jax.tree.structure(
+        jax.tree.map(lambda x: 0, tree, is_leaf=is_leaf))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_specs_match_param_shapes_full_size(arch):
+    cfg = get_config(arch)
+    shapes = lm_param_shapes(cfg.model)
+    specs = lm_specs(cfg.model)
+    assert _structure(shapes) == _structure(specs, is_leaf=is_lg), arch
+    # every spec leaf has the same rank as its parameter
+    flat_p = jax.tree.leaves(shapes)
+    flat_s = jax.tree.leaves(specs, is_leaf=is_lg)
+    for p, s in zip(flat_p, flat_s):
+        assert len(s) == len(p.shape), (arch, p.shape, tuple(s))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_decode_state_specs_match_shapes(arch):
+    cfg = get_config(arch)
+    shapes = decode_state_shapes(cfg.model, 4, 128)
+    specs = decode_state_specs(cfg.model)
+    assert _structure(shapes) == _structure(specs, is_leaf=is_lg), arch
+    for p, s in zip(jax.tree.leaves(shapes),
+                    jax.tree.leaves(specs, is_leaf=is_lg)):
+        assert len(s) == len(p.shape), (arch, p.shape, tuple(s))
+
+
+def test_vlm_interleave_properties():
+    cfg = get_config("chameleon-34b")
+    m = cfg.model
+    toks, mask = vlm_interleave(jax.random.PRNGKey(0), 4, 512, m,
+                                image_span=64)
+    assert toks.shape == (4, 512) and mask.shape == (4, 512)
+    assert int(toks.max()) < m.vocab_size and int(toks.min()) >= 0
+    text_hi = int(m.vocab_size * 0.75)
+    # image-span tokens come from the VQ range, text tokens below it
+    assert bool((jnp.where(mask, toks, text_hi) >= text_hi).all())
+    assert bool((jnp.where(mask, 0, toks) < text_hi).all())
+    assert int(mask.sum(1)[0]) == 64
+
+
+def test_audio_frontend_shape():
+    cfg = get_config("whisper-base")
+    e = audio_frame_embeddings(jax.random.PRNGKey(0), 3, cfg.model)
+    assert e.shape == (3, cfg.model.encdec.encoder_seq, cfg.model.d_model)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_full_param_shapes_match_analytic_count(arch):
+    """eval_shape param totals vs the analytic param_count() (±8%)."""
+    cfg = get_config(arch)
+    shapes = lm_param_shapes(cfg.model)
+    total = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+    analytic = cfg.model.param_count()
+    assert abs(total - analytic) / analytic < 0.08, \
+        f"{arch}: eval_shape {total/1e9:.2f}B vs analytic {analytic/1e9:.2f}B"

@@ -1,0 +1,116 @@
+"""FSL split + device-selection: property-based tests (hypothesis) over the
+paper's §4 invariants."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.config import DCGANConfig
+from repro.core.devices import Client, Device, make_pool
+from repro.core.selection import STRATEGIES, make_plan, plan_all_clients
+from repro.core.simulate import epoch_time_report, strategy_sweep
+from repro.core.split import InfeasibleSplit, SplitPlan, split_forward
+from repro.models.dcgan import (disc_apply, disc_init, disc_apply_layer,
+                                disc_layer_costs, disc_layer_names)
+
+LAYERS = [("l0", 1.0), ("l1", 2.0), ("l2", 4.0), ("l3", 1.0), ("l4", 0.5)]
+
+
+def _client(caps, tfs):
+    return Client("c0", [Device(f"d{i}", tf, cap)
+                         for i, (cap, tf) in enumerate(zip(caps, tfs))])
+
+
+devices_strategy = st.lists(
+    st.tuples(st.integers(min_value=1, max_value=6),
+              st.floats(min_value=0.1, max_value=10.0)),
+    min_size=1, max_size=8)
+
+
+@settings(max_examples=50, deadline=None)
+@given(devs=devices_strategy,
+       strategy=st.sampled_from(STRATEGIES),
+       seed=st.integers(min_value=0, max_value=99))
+def test_plan_invariants(devs, strategy, seed):
+    """Any feasible plan covers the model exactly, in order, within capacity."""
+    client = _client([c for c, _ in devs], [t for _, t in devs])
+    total_cap = sum(c for c, _ in devs)
+    if total_cap < len(LAYERS):
+        with pytest.raises(InfeasibleSplit):
+            make_plan(client, LAYERS, strategy, seed)
+        return
+    plan = make_plan(client, LAYERS, strategy, seed)
+    # covers model in order
+    assert plan.layers_in_order() == [n for n, _ in LAYERS]
+    # capacity respected: units assigned to a device <= its capacity
+    units = {}
+    for p in plan.portions:
+        units[p.device_id] = units.get(p.device_id, 0) + len(p.layer_names)
+    caps = {d.device_id: d.capacity for d in client.devices}
+    for did, u in units.items():
+        assert u <= caps[did], (did, u, caps[did])
+
+
+def test_sorted_multi_prefers_efficient_devices():
+    client = _client([4, 4], [0.1, 10.0])   # d0 fast, d1 slow
+    plan = make_plan(client, LAYERS[:4], "sorted_multi", seed=0)
+    # all four units fit on the efficient device
+    assert all(p.device_id == "d0" for p in plan.portions)
+
+
+def test_single_spreads_multi_concentrates():
+    client = _client([5, 5, 5], [1.0, 1.0, 1.0])
+    single = make_plan(client, LAYERS, "sorted_single", seed=0)
+    multi = make_plan(client, LAYERS, "sorted_multi", seed=0)
+    assert single.num_boundaries >= multi.num_boundaries
+
+
+def test_infeasible_client_dropped_from_round():
+    ok = _client([10], [1.0])
+    bad = Client("c1", [Device("d0", 1.0, 1)])   # capacity 1 < 5 layers
+    plans = plan_all_clients([ok, bad], LAYERS, "sorted_multi")
+    assert set(plans) == {"c0"}
+
+
+def test_fig2_ordering_paper_pool():
+    """The paper's qualitative Fig 2 result: sorted_multi best, random_multi
+    worst (compute-dominated regime with slow-but-roomy devices)."""
+    pool = make_pool("paper", 5, 4, seed=0)
+    c = DCGANConfig()
+    costs = disc_layer_costs(c)
+    total = sum(costs.values())
+    layers = [(n, 4 * costs[n] / total) for n in disc_layer_names(c)]
+    res = strategy_sweep(pool, layers, seeds=range(6), compute_unit_s=0.2)
+    assert res["sorted_multi"][0] < res["sorted_single"][0]
+    assert res["sorted_multi"][0] < res["random_single"][0]
+    assert res["random_multi"][0] > res["sorted_multi"][0]
+    # random strategies have nonzero variance, sorted_multi is deterministic
+    assert res["random_multi"][1] > 0
+
+
+def test_split_forward_identical_to_monolithic():
+    """The paper's split changes WHERE layers run, never WHAT they compute."""
+    c = DCGANConfig(base_filters=8)
+    key = jax.random.PRNGKey(0)
+    params = disc_init(key, c)
+    imgs = jax.random.normal(key, (4, 28, 28, 1))
+    mono = disc_apply(params, imgs, c)
+    costs = disc_layer_costs(c)
+    layers = [(n, costs[n]) for n in disc_layer_names(c)]
+    client = _client([2, 2], [1.0, 2.0])
+    for strategy in STRATEGIES:
+        plan = make_plan(client, layers, strategy, seed=3)
+        out = split_forward(imgs, plan,
+                            lambda name, x: disc_apply_layer(name, params, x, c))
+        np.testing.assert_array_equal(np.asarray(mono), np.asarray(out))
+
+
+def test_time_model_hops_priced():
+    client = _client([1, 1, 1, 1, 1], [1.0] * 5)
+    plan = make_plan(client, LAYERS, "sorted_single", seed=0)
+    from repro.core.simulate import plan_epoch_time
+    t_with = plan_epoch_time(plan, client, batches_per_epoch=1,
+                             lan_latency_s=0.05, compute_unit_s=0.0)
+    assert t_with == pytest.approx(plan.num_boundaries * 2 * 0.05)
