@@ -1,0 +1,102 @@
+"""Federation runtime benchmarks (fed/ subsystem).
+
+Three questions the runtime makes measurable:
+
+  1. **Dispatch**: vectorized (one jitted vmap program) vs sequential
+     per-client Python loop for the multi-client D round — the speed
+     headline of fed/vectorized.py.
+  2. **Wire**: per-round uplink bytes and virtual round time under each
+     codec (none / fp16 / int8 / topk) — what actually crosses the network
+     per PS-FedGAN's accounting.
+  3. **Scheduling**: sync barrier vs FedAsync vs FedBuff virtual wall-clock
+     per round, with and without a straggler deadline.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.gan import FSLGANTrainer
+from repro.data import partition_dirichlet, synthetic_mnist
+
+
+def _cfg(clients: int, **over):
+    base = {"shape.global_batch": 16, "fsl.num_clients": clients,
+            "model.dcgan.base_filters": 8}
+    base.update(over)
+    return get_config("dcgan-mnist").override(base)
+
+
+def _parts(clients: int):
+    imgs, labels = synthetic_mnist(200 * clients, seed=0)
+    return partition_dirichlet(imgs, labels, clients, alpha=0.5, seed=0)
+
+
+def _time_epochs(step, reps: int) -> float:
+    step()                                   # warm-up / compile
+    t0 = time.time()
+    for _ in range(reps):
+        step()
+    return (time.time() - t0) * 1e6 / reps   # us per epoch
+
+
+def run(fast: bool = False) -> List[Tuple[str, float, str]]:
+    clients = 3 if fast else 4
+    batches = 2 if fast else 4
+    reps = 2 if fast else 3
+    parts = _parts(clients)
+    rows: List[Tuple[str, float, str]] = []
+
+    # 1. vectorized vs sequential dispatch ---------------------------------
+    tr_seq = FSLGANTrainer(_cfg(clients), parts, seed=0)
+    us_seq = _time_epochs(
+        lambda: tr_seq.train_epoch_sequential(batches_per_client=batches),
+        reps)
+    tr_vec = FSLGANTrainer(_cfg(clients), parts, seed=0)
+    us_vec = _time_epochs(
+        lambda: tr_vec.train_epoch_vectorized(batches_per_client=batches),
+        reps)
+    rows.append(("fed_round_sequential", us_seq,
+                 f"clients={clients} batches={batches}"))
+    rows.append(("fed_round_vectorized", us_vec,
+                 f"speedup={us_seq / max(us_vec, 1e-9):.2f}x "
+                 "(one jitted vmap program)"))
+
+    # 2. codec sweep: uplink bytes + virtual round time --------------------
+    for codec in ("none", "fp16", "int8", "topk"):
+        tr = FSLGANTrainer(_cfg(clients, **{"fed.codec": codec,
+                                            "fed.topk_frac": 0.05}),
+                           parts, seed=0)
+        t0 = time.time()
+        m = tr.train_epoch(batches_per_client=batches)
+        rows.append((f"fed_codec[{codec}]", (time.time() - t0) * 1e6,
+                     f"up_mb={m['up_mbytes']:.4f} "
+                     f"down_mb={m['down_mbytes']:.4f} "
+                     f"round_s={m['round_time_s']:.1f} "
+                     f"d_loss={m['d_loss']:.3f}"))
+
+    # 3. scheduling: sync vs async vs buffered, straggler deadline ---------
+    scenarios = {
+        "sync": {},
+        "sync_deadline": {"fed.deadline_s": 2.5e4},
+        "fedasync": {"fed.mode": "fedasync", "fed.async_cycles": 2},
+        "fedbuff": {"fed.mode": "fedbuff", "fed.buffer_size": 2,
+                    "fed.async_cycles": 2},
+    }
+    for name, over in scenarios.items():
+        tr = FSLGANTrainer(_cfg(clients, **over), parts, seed=0)
+        t0 = time.time()
+        ms = [tr.train_epoch(batches_per_client=batches)
+              for _ in range(2 if fast else 3)]
+        m = ms[-1]
+        rows.append((f"fed_sched[{name}]",
+                     (time.time() - t0) * 1e6 / len(ms),
+                     f"round_s={m['round_time_s']:.1f} "
+                     f"clients={m['num_clients']:.0f} "
+                     f"stragglers={m['stragglers']:.0f} "
+                     f"staleness={m['mean_staleness']:.2f} "
+                     f"d_loss={m['d_loss']:.3f}"))
+    return rows

@@ -9,6 +9,8 @@ pass (fewer epochs/seeds).
   bench_kernels       —      Pallas kernels vs oracles (+ µs, interpret)
   bench_lm_train      —      LM substrate + FSL cadence
   bench_roofline      —      roofline table from dry-run artifacts
+  bench_fed_runtime   —      federation runtime: vectorized vs sequential
+                             dispatch, codec wire bytes, sync/async rounds
 """
 from __future__ import annotations
 
@@ -20,11 +22,12 @@ import traceback
 
 def main() -> None:
     fast = os.environ.get("BENCH_FAST", "0") == "1"
-    from benchmarks import (bench_convergence, bench_heterogeneity,
-                            bench_images, bench_kernels, bench_lm_train,
-                            bench_roofline, bench_time)
+    from benchmarks import (bench_convergence, bench_fed_runtime,
+                            bench_heterogeneity, bench_images, bench_kernels,
+                            bench_lm_train, bench_roofline, bench_time)
     modules = [
         ("bench_time", bench_time),
+        ("bench_fed_runtime", bench_fed_runtime),
         ("bench_kernels", bench_kernels),
         ("bench_lm_train", bench_lm_train),
         ("bench_images", bench_images),

@@ -314,6 +314,38 @@ class FSLConfig:
 
 
 @dataclass
+class FedConfig:
+    """Federation runtime knobs (fed/ subsystem): what crosses the wire,
+    how it is compressed, and how/when the server aggregates.
+
+    ``mode='sync'`` with ``codec='none'``, full availability and no deadline
+    reproduces the paper's sequential simulation bit-for-bit (pinned test).
+    """
+    mode: str = "sync"                 # sync | fedasync | fedbuff
+    # uplink compression (discriminator params / deltas)
+    codec: str = "none"                # none | fp16 | int8 | topk
+    topk_frac: float = 0.01            # fraction of entries topk keeps
+    error_feedback: bool = True        # topk residual carry-over
+    # transport (WAN between server and clients; LAN inside a client is
+    # priced by core/simulate.py)
+    uplink_bps: float = 10e6           # client -> server
+    downlink_bps: float = 50e6         # server -> client
+    wan_latency_s: float = 0.050
+    # scheduling
+    deadline_s: float = 0.0            # sync: drop updates landing later (0=off)
+    availability: float = 1.0          # per-round client up-probability
+    availability_seed: int = 0
+    async_cycles: int = 1              # local rounds per client per epoch (async)
+    # async aggregation
+    fedasync_alpha: float = 0.6        # server mixing rate
+    staleness_power: float = 0.5       # alpha_t = alpha * (1+staleness)^-power
+    buffer_size: int = 2               # fedbuff aggregation threshold K
+    # aggregation hot path
+    kernel_aggregation: bool = False   # use the fedavg Pallas kernel
+    kernel_interpret: bool = False     # Pallas interpret mode (CPU tests)
+
+
+@dataclass
 class ShapeConfig:
     name: str = "train_4k"
     seq_len: int = 4096
@@ -336,6 +368,7 @@ class RunConfig:
     parallel: ParallelConfig = field(default_factory=ParallelConfig)
     optim: OptimConfig = field(default_factory=OptimConfig)
     fsl: FSLConfig = field(default_factory=FSLConfig)
+    fed: FedConfig = field(default_factory=FedConfig)
     shape: ShapeConfig = field(default_factory=lambda: INPUT_SHAPES["train_4k"])
     seed: int = 0
 
@@ -408,7 +441,8 @@ _NESTED = {
     ModelConfig: {"moe": MoEConfig, "mla": MLAConfig, "rwkv": RWKVConfig,
                   "rglru": RGLRUConfig, "encdec": EncDecConfig, "dcgan": DCGANConfig},
     RunConfig: {"model": ModelConfig, "parallel": ParallelConfig,
-                "optim": OptimConfig, "fsl": FSLConfig, "shape": ShapeConfig},
+                "optim": OptimConfig, "fsl": FSLConfig, "fed": FedConfig,
+                "shape": ShapeConfig},
 }
 
 

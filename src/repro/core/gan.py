@@ -15,6 +15,14 @@ Roles:
 Losses: non-saturating DCGAN BCE.
     L_D = BCE(D(x_real), 1) + BCE(D(G(z)), 0)
     L_G = BCE(D(G(z)), 1)
+
+Scheduling is delegated to the federation runtime (fed/engine.py):
+``train_epoch`` runs one engine round per epoch — synchronous FedAvg by
+default (``cfg.fed``), which reproduces the original sequential loop
+bit-for-bit (``train_epoch_sequential`` keeps that loop as the pinned
+reference), or FedAsync / FedBuff with codecs, stragglers and availability
+churn.  ``train_epoch_vectorized`` replaces the per-client Python loop with
+one jitted vmap-over-clients program (fed/vectorized.py).
 """
 from __future__ import annotations
 
@@ -30,7 +38,12 @@ from repro.config import RunConfig
 from repro.core.devices import make_pool
 from repro.core.fedavg import fedavg
 from repro.core.selection import plan_all_clients
+from repro.core.simulate import plan_epoch_time
 from repro.core.split import SplitPlan
+from repro.fed.engine import ClientSpec, FederationEngine
+from repro.fed.transport import fake_batch_bytes
+from repro.fed.vectorized import (fedavg_stacked, make_multi_client_d_step,
+                                  stack_trees, unstack_tree)
 from repro.models.dcgan import (disc_apply, disc_init, disc_layer_costs,
                                 disc_layer_names, gen_apply, gen_init)
 from repro.optim import make_optimizer
@@ -88,14 +101,18 @@ class FSLGANTrainer:
             d_opt={cid: self.d_optimizer.init(d0) for cid in self.client_ids},
         )
         # split planning (prices the wall-time; see simulate.py)
-        pool = make_pool(cfg.fsl.heterogeneity, cfg.fsl.num_clients,
-                         cfg.fsl.devices_per_client, cfg.fsl.seed)
+        self.pool = make_pool(cfg.fsl.heterogeneity, cfg.fsl.num_clients,
+                              cfg.fsl.devices_per_client, cfg.fsl.seed)
         costs = disc_layer_costs(self.c)
         layers = [(n, costs[n]) for n in disc_layer_names(self.c)]
         self.plans: Dict[str, SplitPlan] = plan_all_clients(
-            pool, layers, cfg.fsl.selection, cfg.fsl.seed)
+            self.pool, layers, cfg.fsl.selection, cfg.fsl.seed)
         self._rng = np.random.default_rng(seed)
         self._build_steps()
+        # federation runtime (built on first train_epoch — compute times
+        # depend on batches_per_client)
+        self.engine: Optional[FederationEngine] = None
+        self._engine_batches: Optional[int] = None
 
     # ------------------------------------------------------------------
     def _build_steps(self):
@@ -120,6 +137,9 @@ class FSLGANTrainer:
             return gen_apply(g_params, z, c)
 
         self._d_step, self._g_step, self._gen = d_step, g_step, gen_batch
+        # single-program multi-client round (fed/vectorized.py)
+        self._v_round = make_multi_client_d_step(
+            self.d_optimizer, functools.partial(d_loss_fn, c=c), lr)
 
     def _sample_real(self, cid: str, n: int) -> jnp.ndarray:
         data = self.client_data[cid]
@@ -131,12 +151,122 @@ class FSLGANTrainer:
             (n, self.c.latent_dim), dtype=np.float32))
 
     # ------------------------------------------------------------------
+    # federation-runtime glue
+    # ------------------------------------------------------------------
+    def _active_clients(self) -> List[str]:
+        """Clients with a feasible split plan (paper: infeasible clients are
+        dropped); all clients if planning found none feasible."""
+        return [cid for cid in self.client_ids if cid in self.plans] \
+            or self.client_ids
+
+    def _ensure_engine(self, batches_per_client: int) -> FederationEngine:
+        """(Re)build the engine when the local-round length changes — client
+        compute times are priced per round.  Rebuilding resets the virtual
+        clock and codec residuals, not any training state."""
+        if self.engine is not None \
+                and self._engine_batches == batches_per_client:
+            return self.engine
+        by_id = {cl.client_id: cl for cl in self.pool}
+        specs = []
+        for cid in self._active_clients():
+            if cid in self.plans and cid in by_id:
+                ct = plan_epoch_time(self.plans[cid], by_id[cid],
+                                     batches_per_epoch=batches_per_client,
+                                     lan_latency_s=self.cfg.fsl.lan_latency_s)
+            else:
+                ct = 0.0
+            specs.append(ClientSpec(cid, float(len(self.client_data[cid])),
+                                    ct))
+        self.engine = FederationEngine(
+            self.cfg.fed, specs, weighted=self.cfg.fsl.weighted_average)
+        self._engine_batches = batches_per_client
+        return self.engine
+
+    def _local_update_fn(self, batches_per_client: int):
+        """Client-side work the engine schedules: ``batches_per_client``
+        D-steps from the downloaded params, on local reals + server fakes."""
+        st = self.state
+
+        def local_update(cid: str, start_params):
+            dp, do = start_params, st.d_opt[cid]
+            losses = []
+            for _ in range(batches_per_client):
+                real = self._sample_real(cid, self.batch_size)
+                fake = self._gen(st.g_params, self._z(self.batch_size))
+                # server ships fakes; client never shares `real`
+                dp, do, dl = self._d_step(dp, do, real,
+                                          jax.lax.stop_gradient(fake))
+                losses.append(float(dl))
+            st.d_opt[cid] = do
+            return dp, {"losses": losses}
+
+        return local_update
+
+    def _g_updates(self, d_avg, batches: int) -> List[float]:
+        """Server G update against the averaged D (never touches real data)."""
+        st = self.state
+        g_losses = []
+        for _ in range(batches):
+            st.g_params, st.g_opt, gl = self._g_step(
+                st.g_params, st.g_opt, d_avg, self._z(self.batch_size))
+            g_losses.append(float(gl))
+        return g_losses
+
+    def _record(self, metrics: Dict[str, float]) -> Dict[str, float]:
+        for k, v in metrics.items():
+            self.state.history.setdefault(k, []).append(v)
+        return metrics
+
+    # ------------------------------------------------------------------
     def train_epoch(self, batches_per_client: int = 24) -> Dict[str, float]:
-        """One FL round = paper epoch: local D training then FedAvg then G."""
+        """One FL round on the federation engine.
+
+        ``cfg.fed`` selects scheduling (sync / fedasync / fedbuff), uplink
+        codec, straggler deadline and availability churn.  The default
+        (sync, codec none, full availability) reproduces the seed's
+        sequential loop bit-for-bit — ``train_epoch_sequential`` below keeps
+        that loop as the pinned reference.
+        """
+        st = self.state
+        eng = self._ensure_engine(batches_per_client)
+        down_b = batches_per_client * fake_batch_bytes(
+            self.batch_size,
+            (self.c.image_size, self.c.image_size, self.c.channels))
+        # the global D: every replica equals the last broadcast average
+        global_d = st.d_params[self._active_clients()[0]]
+        rep = eng.run_round(global_d,
+                            self._local_update_fn(batches_per_client),
+                            down_bytes=down_b)
+        d_avg = rep.global_params
+        for cid in self.client_ids:
+            st.d_params[cid] = jax.tree.map(jnp.copy, d_avg)
+
+        d_losses = [l for _, info in rep.client_infos
+                    for l in info["losses"]]
+        g_losses = self._g_updates(d_avg, batches_per_client)
+        st.step += 1
+        metrics = {
+            "d_loss": float(np.mean(d_losses)) if d_losses else float("nan"),
+            "g_loss": float(np.mean(g_losses)),
+            "num_clients": float(len(rep.participated)),
+            "round_time_s": rep.round_time_s,
+            "clock_s": rep.clock_s,
+            "up_mbytes": rep.traffic.total_up / 1e6,
+            "down_mbytes": rep.traffic.total_down / 1e6,
+            "stragglers": float(len(rep.stragglers)),
+            "mean_staleness": rep.mean_staleness,
+        }
+        return self._record(metrics)
+
+    # ------------------------------------------------------------------
+    def train_epoch_sequential(self, batches_per_client: int = 24
+                               ) -> Dict[str, float]:
+        """The seed's sequential client loop, kept verbatim as the numeric
+        reference: engine sync mode must match this bit-for-bit (pinned in
+        tests/test_fed_runtime.py)."""
         st = self.state
         d_losses = []
-        active = [cid for cid in self.client_ids if cid in self.plans] \
-            or self.client_ids
+        active = self._active_clients()
         for cid in active:
             dp, do = st.d_params[cid], st.d_opt[cid]
             for b in range(batches_per_client):
@@ -155,19 +285,65 @@ class FSLGANTrainer:
         for cid in self.client_ids:
             st.d_params[cid] = jax.tree.map(jnp.copy, d_avg)
 
-        # server G update against the averaged D (never touches real data)
-        g_losses = []
-        for _ in range(batches_per_client):
-            st.g_params, st.g_opt, gl = self._g_step(
-                st.g_params, st.g_opt, d_avg, self._z(self.batch_size))
-            g_losses.append(float(gl))
+        g_losses = self._g_updates(d_avg, batches_per_client)
         st.step += 1
         metrics = {"d_loss": float(np.mean(d_losses)),
                    "g_loss": float(np.mean(g_losses)),
                    "num_clients": float(len(active))}
-        for k, v in metrics.items():
-            st.history.setdefault(k, []).append(v)
-        return metrics
+        return self._record(metrics)
+
+    # ------------------------------------------------------------------
+    def train_epoch_vectorized(self, batches_per_client: int = 24
+                               ) -> Dict[str, float]:
+        """Speed path: every client's whole local round in ONE jitted
+        program (vmap over clients, scan over batches — fed/vectorized.py),
+        then stacked FedAvg (optionally the Pallas kernel via
+        ``cfg.fed.kernel_aggregation``).
+
+        Batches are pre-sampled in the same host-RNG order as the
+        sequential loop, so at a fixed seed this matches the sync engine
+        path to fp32 tolerance (the D-step math is identical; only
+        reduction/batching order differs).  Caveat: conv biases feeding
+        batchnorm are analytically dead (BN mean-subtraction cancels them),
+        so their Adam updates amplify fp noise to O(lr) in either path —
+        live parameters and losses agree tightly.
+        """
+        st = self.state
+        active = self._active_clients()
+        B, T = self.batch_size, batches_per_client
+        reals_l, fakes_l = [], []
+        for cid in active:
+            rs, fs = [], []
+            for _ in range(T):
+                rs.append(self._sample_real(cid, B))
+                fs.append(self._gen(st.g_params, self._z(B)))
+            reals_l.append(jnp.stack(rs))
+            fakes_l.append(jnp.stack(fs))
+        reals, fakes = jnp.stack(reals_l), jnp.stack(fakes_l)
+
+        stacked_p = stack_trees([st.d_params[cid] for cid in active])
+        stacked_o = stack_trees([st.d_opt[cid] for cid in active])
+        stacked_p, stacked_o, losses = self._v_round(
+            stacked_p, stacked_o, reals, fakes)
+
+        weights = ([float(len(self.client_data[cid])) for cid in active]
+                   if self.cfg.fsl.weighted_average
+                   else [1.0] * len(active))
+        d_avg = fedavg_stacked(
+            stacked_p, weights,
+            use_kernel=self.cfg.fed.kernel_aggregation,
+            interpret=self.cfg.fed.kernel_interpret)
+        for cid, opt in zip(active, unstack_tree(stacked_o, len(active))):
+            st.d_opt[cid] = opt
+        for cid in self.client_ids:
+            st.d_params[cid] = jax.tree.map(jnp.copy, d_avg)
+
+        g_losses = self._g_updates(d_avg, T)
+        st.step += 1
+        metrics = {"d_loss": float(jnp.mean(losses)),
+                   "g_loss": float(np.mean(g_losses)),
+                   "num_clients": float(len(active))}
+        return self._record(metrics)
 
     def generate(self, n: int, seed: int = 0) -> np.ndarray:
         z = jax.random.normal(jax.random.PRNGKey(seed),

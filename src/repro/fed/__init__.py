@@ -1,0 +1,23 @@
+"""Event-driven federation runtime (paper §3 made first-class).
+
+  transport   links, byte accounting, compression codecs
+  events      event queue + client availability traces
+  policies    FedAvg / FedAsync / FedBuff aggregation
+  engine      discrete-event round engine (sync + async scheduling)
+  vectorized  single-program multi-client local training + kernel FedAvg
+"""
+from repro.fed.engine import (ClientSpec, FederationEngine,  # noqa: F401
+                              RoundReport)
+from repro.fed.events import (AlwaysAvailable,  # noqa: F401
+                              BernoulliAvailability, EventQueue,
+                              make_availability)
+from repro.fed.policies import (AggregationPolicy, ClientUpdate,  # noqa: F401
+                                FedAsync, FedBuff, SyncFedAvg, make_policy)
+from repro.fed.transport import (Codec, FP16Codec, IdentityCodec,  # noqa: F401
+                                 Int8Codec, LinkModel, TopKCodec,
+                                 TrafficLedger, fake_batch_bytes, make_codec,
+                                 tree_bytes)
+from repro.fed.vectorized import (fedavg_stacked,  # noqa: F401
+                                  make_multi_client_d_step,
+                                  sequential_d_rounds, stack_trees,
+                                  unstack_tree)

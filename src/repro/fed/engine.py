@@ -1,0 +1,246 @@
+"""Discrete-event federation round engine.
+
+Replaces the seed's sequential client loop with an explicit runtime: each
+round, every available client
+
+  1. downloads the server's fake batches      (downlink, LinkModel-priced),
+  2. runs local split-discriminator training  (compute, priced by the
+     paper's analytic model ``core/simulate.plan_epoch_time``),
+  3. uplinks its discriminator update through a compression codec
+     (``fed/transport``), and
+  4. the server aggregates per its policy     (``fed/policies``).
+
+Two scheduling modes:
+
+  * **sync** — barrier semantics, clients execute in roster order (which
+    keeps the host RNG stream identical to the seed trainer: the
+    no-dropout, no-codec sync round is bit-for-bit the seed's
+    ``train_epoch``).  A ``deadline_s`` drops straggler updates whose
+    virtual finish time exceeds it (their LAN+WAN+compute work is still
+    counted — the cost of a dropped client is real).
+  * **async (fedasync | fedbuff)** — a FINISH/ARRIVE event queue: local
+    training executes when the client's compute finishes *on the global
+    snapshot it downloaded*, the update lands after its uplink delay, and
+    staleness = how many global versions advanced in between.  Fast clients
+    can cycle ``async_cycles`` times per round.
+
+The wall-clock the engine advances is *virtual* (the paper's Fig-2 time
+model extended with WAN transfers); the actual tensor math runs on
+whatever accelerator hosts the process, exactly like the seed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.fed.events import ARRIVE, FINISH, EventQueue, make_availability
+from repro.fed.policies import ClientUpdate, make_policy
+from repro.fed.transport import LinkModel, TrafficLedger, make_codec
+
+# local_update(client_id, start_params) -> (trained_params, info_dict)
+LocalUpdateFn = Callable[[str, Any], Tuple[Any, Dict[str, Any]]]
+
+
+@dataclass(frozen=True)
+class ClientSpec:
+    """Static per-client facts the scheduler needs."""
+    client_id: str
+    weight: float                 # FedAvg weight (example count)
+    compute_time_s: float         # one local round (core/simulate)
+
+
+@dataclass
+class RoundReport:
+    global_params: Any
+    participated: List[str] = field(default_factory=list)
+    unavailable: List[str] = field(default_factory=list)
+    stragglers: List[str] = field(default_factory=list)
+    round_time_s: float = 0.0
+    clock_s: float = 0.0          # engine clock after this round
+    traffic: TrafficLedger = field(default_factory=TrafficLedger)
+    client_infos: List[Tuple[str, Dict[str, Any]]] = field(
+        default_factory=list)            # in execution order
+    staleness: Dict[str, int] = field(default_factory=dict)   # last per client
+    staleness_events: List[int] = field(default_factory=list)  # every arrival
+    version: int = 0
+
+    @property
+    def mean_staleness(self) -> float:
+        if not self.staleness_events:
+            return 0.0
+        return sum(self.staleness_events) / len(self.staleness_events)
+
+
+class FederationEngine:
+    def __init__(self, fed_cfg, specs: List[ClientSpec], *,
+                 weighted: bool = True):
+        self.cfg = fed_cfg
+        self.roster = [s.client_id for s in specs]
+        self.specs = {s.client_id: s for s in specs}
+        self.policy = make_policy(fed_cfg, weighted=weighted)
+        self.codecs = {cid: make_codec(fed_cfg.codec,
+                                       topk_frac=fed_cfg.topk_frac,
+                                       error_feedback=fed_cfg.error_feedback)
+                       for cid in self.roster}
+        self.uplink = LinkModel(fed_cfg.wan_latency_s, fed_cfg.uplink_bps)
+        self.downlink = LinkModel(fed_cfg.wan_latency_s, fed_cfg.downlink_bps)
+        self.availability = make_availability(fed_cfg.availability,
+                                              fed_cfg.availability_seed)
+        self.clock = 0.0
+        self.round_idx = 0
+        self.version = 0
+        self.ledger = TrafficLedger()      # cumulative across rounds
+
+    # ------------------------------------------------------------------
+    def _codec_roundtrip(self, cid: str, base_tree, params
+                         ) -> Tuple[Any, int]:
+        """Uplink params through the client's codec; lossy codecs compress
+        the delta vs the tree the client downloaded (``base_tree``)."""
+        codec = self.codecs[cid]
+        if codec.encodes_delta:
+            delta = jax.tree.map(
+                lambda p, b: p.astype(jnp.float32) - b.astype(jnp.float32),
+                params, base_tree)
+            dec, nbytes = codec.roundtrip(delta)
+            decoded = jax.tree.map(
+                lambda b, d: (b.astype(jnp.float32) + d).astype(b.dtype),
+                base_tree, dec)
+            return decoded, nbytes
+        return codec.roundtrip(params)
+
+    def _split_roster(self) -> Tuple[List[str], List[str]]:
+        up, down = [], []
+        for cid in self.roster:
+            (up if self.availability.available(cid, self.round_idx)
+             else down).append(cid)
+        return up, down
+
+    # ------------------------------------------------------------------
+    def run_round(self, global_tree, local_update: LocalUpdateFn, *,
+                  down_bytes: int = 0) -> RoundReport:
+        """One FL round. ``down_bytes``: server->client fake payload."""
+        if self.cfg.mode == "sync":
+            rep = self._run_sync(global_tree, local_update, down_bytes)
+        else:
+            rep = self._run_async(global_tree, local_update, down_bytes)
+        self.round_idx += 1
+        for cid in rep.traffic.up_bytes:
+            self.ledger.record(cid, up=rep.traffic.up_bytes[cid])
+        for cid in rep.traffic.down_bytes:
+            self.ledger.record(cid, down=rep.traffic.down_bytes[cid])
+        return rep
+
+    # ------------------------------------------------------------------
+    def _run_sync(self, global_tree, local_update, down_bytes) -> RoundReport:
+        rep = RoundReport(global_params=global_tree)
+        participants, rep.unavailable = self._split_roster()
+        deadline = self.cfg.deadline_s
+        down_t = self.downlink.transfer_time(down_bytes)
+        finishes: List[float] = []
+
+        for cid in participants:
+            spec = self.specs[cid]
+            if deadline and down_t + spec.compute_time_s > deadline:
+                # provably late before uplink even starts: skip the work
+                rep.stragglers.append(cid)
+                rep.traffic.record(cid, down=down_bytes)
+                continue
+            params, info = local_update(cid, global_tree)
+            decoded, up_b = self._codec_roundtrip(cid, global_tree, params)
+            finish = down_t + spec.compute_time_s \
+                + self.uplink.transfer_time(up_b)
+            rep.traffic.record(cid, up=up_b, down=down_bytes)
+            rep.client_infos.append((cid, info))
+            if deadline and finish > deadline:
+                rep.stragglers.append(cid)     # ran, but its update is late
+                continue
+            rep.participated.append(cid)
+            rep.staleness[cid] = 0
+            rep.staleness_events.append(0)
+            finishes.append(finish)
+            self.policy.on_update(
+                global_tree, ClientUpdate(cid, decoded, spec.weight,
+                                          0, self.clock + finish))
+
+        new_global = self.policy.on_round_end(global_tree)
+        if rep.participated:
+            self.version += 1
+        # the sync barrier releases at the slowest survivor — or at the
+        # deadline when stragglers were waited out that long
+        rep.round_time_s = max(finishes) if finishes else 0.0
+        if deadline and rep.stragglers:
+            rep.round_time_s = max(rep.round_time_s, deadline)
+        self.clock += rep.round_time_s
+        rep.clock_s = self.clock
+        rep.global_params = new_global
+        rep.version = self.version
+        return rep
+
+    # ------------------------------------------------------------------
+    def _run_async(self, global_tree, local_update, down_bytes
+                   ) -> RoundReport:
+        rep = RoundReport(global_params=global_tree)
+        participants, rep.unavailable = self._split_roster()
+        t0 = self.clock
+        deadline = self.cfg.deadline_s
+        down_t = self.downlink.transfer_time(down_bytes)
+        queue = EventQueue()
+        # (snapshot tree, version at download) per in-flight client
+        snapshots: Dict[str, Tuple[Any, int]] = {}
+
+        for cid in participants:
+            snapshots[cid] = (global_tree, self.version)
+            rep.traffic.record(cid, down=down_bytes)
+            queue.push(t0 + down_t + self.specs[cid].compute_time_s,
+                       FINISH, cid, payload={"cycle": 1})
+
+        last_t = t0
+        while queue:
+            ev = queue.pop()
+            last_t = max(last_t, ev.time)
+            cid = ev.client_id
+            spec = self.specs[cid]
+            if ev.kind == FINISH:
+                snap_tree, snap_ver = snapshots[cid]
+                params, info = local_update(cid, snap_tree)
+                decoded, up_b = self._codec_roundtrip(cid, snap_tree, params)
+                rep.traffic.record(cid, up=up_b)
+                rep.client_infos.append((cid, info))
+                queue.push(ev.time + self.uplink.transfer_time(up_b),
+                           ARRIVE, cid,
+                           payload={"decoded": decoded, "snap_ver": snap_ver,
+                                    "cycle": ev.payload["cycle"]})
+                continue
+            # ARRIVE
+            if deadline and ev.time - t0 > deadline:
+                rep.stragglers.append(cid)
+                continue
+            staleness = self.version - ev.payload["snap_ver"]
+            rep.staleness[cid] = staleness
+            rep.staleness_events.append(staleness)
+            global_tree, bumped = self.policy.on_update(
+                global_tree,
+                ClientUpdate(cid, ev.payload["decoded"], spec.weight,
+                             staleness, ev.time))
+            if bumped:
+                self.version += 1
+            if cid not in rep.participated:
+                rep.participated.append(cid)
+            cycle = ev.payload["cycle"]
+            if cycle < self.cfg.async_cycles:
+                snapshots[cid] = (global_tree, self.version)
+                rep.traffic.record(cid, down=down_bytes)
+                queue.push(ev.time + down_t + spec.compute_time_s,
+                           FINISH, cid, payload={"cycle": cycle + 1})
+
+        global_tree = self.policy.on_round_end(global_tree)
+        self.version += 1 if rep.participated else 0
+        rep.round_time_s = last_t - t0
+        self.clock = last_t
+        rep.clock_s = self.clock
+        rep.global_params = global_tree
+        rep.version = self.version
+        return rep

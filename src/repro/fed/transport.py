@@ -1,0 +1,193 @@
+"""Wire model for the federation runtime: links, payloads, codecs.
+
+What actually crosses the network in the paper's protocol (§3) is small and
+asymmetric:
+
+  * **downlink** (server -> client): batches of generated fakes — the server
+    never ships G itself, only its outputs (the privacy argument);
+  * **uplink** (client -> server): the trained discriminator parameters
+    (or parameter *deltas* when a lossy codec is enabled).
+
+PS-FedGAN (PAPERS.md) shows this partially-shared state dominates both the
+communication cost and the privacy surface, so the runtime makes it
+first-class: every transfer is priced by a :class:`LinkModel` and counted in
+a :class:`TrafficLedger`; uplink trees can be run through pluggable
+compression codecs (fp16 / int8 quantize-dequantize / top-k sparsification
+with error feedback).
+
+LAN hops *inside* one client's split chain are a different budget, priced by
+``core/simulate.plan_epoch_time``; this module prices the WAN between the
+server and each client.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_bytes(tree) -> int:
+    """Total payload bytes of a pytree at its native dtypes."""
+    return int(sum(l.size * jnp.dtype(l.dtype).itemsize
+                   for l in jax.tree.leaves(tree)))
+
+
+def fake_batch_bytes(batch: int, image_shape: Tuple[int, ...],
+                     dtype_bytes: int = 4) -> int:
+    """Downlink bytes for one batch of generated fakes."""
+    n = batch
+    for s in image_shape:
+        n *= s
+    return int(n * dtype_bytes)
+
+
+@dataclass(frozen=True)
+class LinkModel:
+    """One-way link: fixed latency plus serialization at ``bandwidth_bps``."""
+    latency_s: float = 0.050
+    bandwidth_bps: float = 10e6
+
+    def transfer_time(self, nbytes: int) -> float:
+        return self.latency_s + 8.0 * nbytes / max(self.bandwidth_bps, 1.0)
+
+
+@dataclass
+class TrafficLedger:
+    """Per-round, per-client byte accounting (benchmarks read this)."""
+    up_bytes: Dict[str, int] = field(default_factory=dict)
+    down_bytes: Dict[str, int] = field(default_factory=dict)
+
+    def record(self, client_id: str, *, up: int = 0, down: int = 0) -> None:
+        self.up_bytes[client_id] = self.up_bytes.get(client_id, 0) + int(up)
+        self.down_bytes[client_id] = (self.down_bytes.get(client_id, 0)
+                                      + int(down))
+
+    @property
+    def total_up(self) -> int:
+        return sum(self.up_bytes.values())
+
+    @property
+    def total_down(self) -> int:
+        return sum(self.down_bytes.values())
+
+
+# ---------------------------------------------------------------------------
+# Codecs — quantize-dequantize transforms over uplink parameter trees
+# ---------------------------------------------------------------------------
+
+class Codec:
+    """Lossy round-trip over an uplink tree.
+
+    ``encodes_delta`` controls what the engine feeds it: raw parameters
+    (identity — keeps the sync path bit-exact) or the update delta
+    ``params - global`` (all lossy codecs: compressing deltas is the
+    standard trick — they are near-zero-mean and tolerate quantization).
+
+    ``roundtrip(tree)`` returns ``(decoded_tree, wire_bytes)``.  Stateful
+    codecs (top-k with error feedback) carry a residual across calls, so the
+    engine keeps ONE codec instance PER CLIENT.
+    """
+    name = "none"
+    encodes_delta = False
+
+    def roundtrip(self, tree) -> Tuple[Any, int]:
+        raise NotImplementedError
+
+
+class IdentityCodec(Codec):
+    """No compression; wire bytes = native tree bytes."""
+    name = "none"
+    encodes_delta = False
+
+    def roundtrip(self, tree) -> Tuple[Any, int]:
+        return tree, tree_bytes(tree)
+
+
+class FP16Codec(Codec):
+    """Cast leaves to fp16 on the wire, back to native dtype on arrival."""
+    name = "fp16"
+    encodes_delta = True
+
+    def roundtrip(self, tree) -> Tuple[Any, int]:
+        dec = jax.tree.map(
+            lambda l: l.astype(jnp.float16).astype(l.dtype), tree)
+        nbytes = sum(l.size * 2 for l in jax.tree.leaves(tree))
+        return dec, int(nbytes)
+
+
+class Int8Codec(Codec):
+    """Per-leaf symmetric int8 quantization: q = round(x / s), s = amax/127.
+
+    Wire cost: 1 byte per element + one fp32 scale per leaf.
+    """
+    name = "int8"
+    encodes_delta = True
+
+    def roundtrip(self, tree) -> Tuple[Any, int]:
+        def qdq(l):
+            x = l.astype(jnp.float32)
+            scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(x / scale), -127, 127)
+            return (q * scale).astype(l.dtype)
+
+        dec = jax.tree.map(qdq, tree)
+        nbytes = sum(l.size + 4 for l in jax.tree.leaves(tree))
+        return dec, int(nbytes)
+
+
+class TopKCodec(Codec):
+    """Magnitude top-k sparsification with error feedback (Stich et al.).
+
+    Keeps the ``frac`` largest-|x| entries per leaf; the dropped mass is
+    carried in a residual and added back before the next round's selection,
+    so nothing is lost permanently — only delayed.  Wire cost: 8 bytes per
+    kept entry (fp32 value + int32 index).
+    """
+    name = "topk"
+    encodes_delta = True
+
+    def __init__(self, frac: float = 0.01, error_feedback: bool = True):
+        self.frac = float(frac)
+        self.error_feedback = bool(error_feedback)
+        self._residual: Optional[Any] = None
+
+    def roundtrip(self, tree) -> Tuple[Any, int]:
+        if self.error_feedback and self._residual is not None:
+            tree = jax.tree.map(lambda l, r: l + r.astype(l.dtype),
+                                tree, self._residual)
+
+        kept_entries = 0
+
+        def sparsify(l):
+            nonlocal kept_entries
+            flat = l.astype(jnp.float32).reshape(-1)
+            k = max(1, int(math.ceil(self.frac * flat.size)))
+            kept_entries += k
+            _, idx = jax.lax.top_k(jnp.abs(flat), k)
+            mask = jnp.zeros_like(flat).at[idx].set(1.0)
+            return (flat * mask).reshape(l.shape).astype(l.dtype)
+
+        dec = jax.tree.map(sparsify, tree)
+        if self.error_feedback:
+            self._residual = jax.tree.map(
+                lambda l, d: l.astype(jnp.float32) - d.astype(jnp.float32),
+                tree, dec)
+        return dec, int(kept_entries * 8)
+
+
+def make_codec(name: str, *, topk_frac: float = 0.01,
+               error_feedback: bool = True) -> Codec:
+    """Factory keyed by ``config.FedConfig.codec``."""
+    if name in ("none", "", "identity"):
+        return IdentityCodec()
+    if name == "fp16":
+        return FP16Codec()
+    if name == "int8":
+        return Int8Codec()
+    if name == "topk":
+        return TopKCodec(topk_frac, error_feedback)
+    raise ValueError(f"unknown codec {name!r}")

@@ -1,0 +1,118 @@
+"""Vectorized multi-client local training.
+
+The seed simulates C clients with a Python loop: C x T dispatches of the
+jitted D-step per round.  For homogeneous-shape clients (every replica is
+the same architecture — the paper's setting) the whole round is one program:
+
+    vmap over clients ( scan over local batches ( D-step ) )
+
+i.e. a single jitted call consuming stacked per-client parameter/optimizer
+trees and (C, T, B, ...) batch tensors.  XLA then batches the per-client
+convolutions into one pass over the stacked leading axis — the Python-loop
+dispatch overhead (the dominant cost at paper scale) disappears.
+
+The aggregation hot path stays on-device too: ``fedavg_stacked`` averages
+the already-stacked trees, optionally through the fedavg Pallas kernel
+(kernels/fedavg) so the whole round never leaves the accelerator.
+
+Cross-references: paper §3 (per-client D training + FedAvg), ROADMAP
+"Federation runtime" open item, ``core/simulate.py`` for the wall-time
+model this speeds past.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# loss_fn(params, real_batch, fake_batch) -> scalar loss
+LossFn = Callable[[Any, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+def stack_trees(trees: Sequence) -> Any:
+    """[tree_0 .. tree_{C-1}] -> one tree with a leading client axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def unstack_tree(stacked, num: int) -> List[Any]:
+    """Inverse of :func:`stack_trees`."""
+    return [jax.tree.map(lambda x: x[i], stacked) for i in range(num)]
+
+
+def make_multi_client_d_step(optimizer, loss_fn: LossFn, lr: float):
+    """Build the jitted vectorized round.
+
+    Returns ``run(stacked_params, stacked_opt, reals, fakes)`` where
+    ``reals``/``fakes`` are (C, T, B, ...) — T local batches for each of C
+    clients — and the result is ``(stacked_params, stacked_opt, losses)``
+    with ``losses`` of shape (C, T).  One XLA program; no Python per-client
+    or per-batch loop.
+    """
+    lr_arr = jnp.asarray(lr)
+
+    def one_step(params, opt, real, fake):
+        loss, grads = jax.value_and_grad(loss_fn)(params, real, fake)
+        params, opt = optimizer.update(grads, opt, params, lr_arr)
+        return params, opt, loss
+
+    def per_client(params, opt, reals, fakes):
+        def body(carry, xs):
+            p, o = carry
+            p, o, loss = one_step(p, o, xs[0], xs[1])
+            return (p, o), loss
+
+        (params, opt), losses = jax.lax.scan(body, (params, opt),
+                                             (reals, fakes))
+        return params, opt, losses
+
+    @jax.jit
+    def run(stacked_params, stacked_opt, reals, fakes):
+        return jax.vmap(per_client)(stacked_params, stacked_opt,
+                                    reals, fakes)
+
+    return run
+
+
+def sequential_d_rounds(d_step, params_list: Sequence, opt_list: Sequence,
+                        reals: jnp.ndarray, fakes: jnp.ndarray):
+    """Reference semantics of the vectorized round: the seed's per-client
+    Python loop over the same (C, T, B, ...) batches.  Used by the pinned
+    equivalence test and the benchmark baseline."""
+    out_p, out_o, out_l = [], [], []
+    for i, (p, o) in enumerate(zip(params_list, opt_list)):
+        losses = []
+        for t in range(reals.shape[1]):
+            p, o, l = d_step(p, o, reals[i, t], fakes[i, t])
+            losses.append(l)
+        out_p.append(p)
+        out_o.append(o)
+        out_l.append(jnp.stack(losses))
+    return out_p, out_o, jnp.stack(out_l)
+
+
+def fedavg_stacked(stacked_tree, weights, *, use_kernel: bool = False,
+                   interpret: bool = False):
+    """Weighted average over the leading client axis of a stacked tree.
+
+    ``use_kernel`` routes each leaf through the fedavg Pallas kernel
+    (one HBM pass per element); the default is a fused tensordot, which XLA
+    emits the same roofline-bound loop for on CPU.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.sum(w)
+
+    if use_kernel:
+        from repro.kernels.fedavg.ops import fedavg_flat
+
+        def avg(leaf):
+            c = leaf.shape[0]
+            flat = leaf.reshape(c, -1).astype(jnp.float32)
+            out = fedavg_flat(flat, w, interpret=interpret)
+            return out.reshape(leaf.shape[1:]).astype(leaf.dtype)
+    else:
+        def avg(leaf):
+            acc = jnp.tensordot(w, leaf.astype(jnp.float32), axes=(0, 0))
+            return acc.astype(leaf.dtype)
+
+    return jax.tree.map(avg, stacked_tree)

@@ -23,17 +23,27 @@ def _fedavg_kernel(x_ref, w_ref, o_ref):
 
 def fedavg_kernel(stacked: jnp.ndarray, weights: jnp.ndarray, *,
                   block_n: int = 4096, interpret: bool = False) -> jnp.ndarray:
-    """stacked: (C, N) client-major flat params; weights: (C,), sums to 1."""
+    """stacked: (C, N) client-major flat params; weights: (C,), sums to 1.
+
+    Arbitrary N: the array is zero-padded up to a block_n multiple (real
+    flattened param counts are never tile-aligned) and the result sliced
+    back; padded lanes average zeros, which is wasted VPU work bounded by
+    one tile.
+    """
     c, n = stacked.shape
-    block_n = min(block_n, n)
-    assert n % block_n == 0
+    block_n = min(block_n, max(n, 1))
+    pad = (-n) % block_n
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+    n_padded = n + pad
     w2 = weights.reshape(c, 1)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         _fedavg_kernel,
-        grid=(n // block_n,),
+        grid=(n_padded // block_n,),
         in_specs=[pl.BlockSpec((c, block_n), lambda i: (0, i)),
                   pl.BlockSpec((c, 1), lambda i: (0, 0))],
         out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((1, n), stacked.dtype),
+        out_shape=jax.ShapeDtypeStruct((1, n_padded), stacked.dtype),
         interpret=interpret,
     )(stacked, w2)[0]
+    return out[:n] if pad else out

@@ -13,13 +13,9 @@ from repro.kernels.fedavg.kernel import fedavg_kernel
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def fedavg_flat(stacked: jnp.ndarray, weights: jnp.ndarray,
                 interpret: bool = False) -> jnp.ndarray:
-    """stacked: (C, N) -> (N,). Pads N to the 4096-wide tile."""
-    c, n = stacked.shape
-    pad = (-n) % 4096
-    if pad:
-        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+    """stacked: (C, N) -> (N,). The kernel pads N to its tile internally."""
     w = weights / jnp.sum(weights)
-    return fedavg_kernel(stacked, w, interpret=interpret)[:n]
+    return fedavg_kernel(stacked, w, interpret=interpret)
 
 
 def fedavg_trees(trees: Sequence, weights: Optional[Sequence[float]] = None,

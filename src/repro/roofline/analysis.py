@@ -33,6 +33,15 @@ _DTYPE_BYTES = {
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """compiled.cost_analysis() returns a dict on jax >= 0.5 but a
+    one-element list of dicts on 0.4.x — normalize to a dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
 # e.g.  %ag = bf16[2,1024,512]{2,1,0} all-gather(...)
 _SHAPE_RE = re.compile(
     r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
@@ -116,7 +125,7 @@ def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
                      chips: int, model_flops: float,
                      hw: HwSpec = TPU_V5E,
                      hlo_text: Optional[str] = None) -> RooflineReport:
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     flops = float(ca.get("flops", 0.0))
     byts = float(ca.get("bytes accessed", 0.0))
     text = hlo_text if hlo_text is not None else compiled.as_text()

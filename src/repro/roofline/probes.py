@@ -33,7 +33,8 @@ import jax.numpy as jnp
 
 from repro.config import RunConfig
 from repro.models.blocks import period_of, split_periods
-from repro.roofline.analysis import collective_bytes_from_hlo
+from repro.roofline.analysis import (collective_bytes_from_hlo,
+                                     cost_analysis_dict)
 
 
 def _probe_cfg(cfg: RunConfig, depth_periods: int, nmb: int,
@@ -56,7 +57,7 @@ def _measure(cfg: RunConfig, mesh) -> Dict[str, float]:
     """Lower+compile one probe, return flops/bytes/collective bytes."""
     from repro.launch.dryrun import lower_one  # late import (env ordering)
     lowered, compiled, _ = lower_one(cfg, mesh)
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     coll = collective_bytes_from_hlo(compiled.as_text())
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0)),

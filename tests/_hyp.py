@@ -1,0 +1,39 @@
+"""Optional-hypothesis shim.
+
+The CI image does not ship ``hypothesis`` (see requirements-dev.txt for the
+full dev environment). Property-based tests import ``given/settings/st`` from
+here: when hypothesis is installed they are the real thing; when it is absent
+each ``@given`` test is skipped at run time while every other test in the
+module still collects and runs.
+"""
+from __future__ import annotations
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAVE_HYPOTHESIS = True
+except ImportError:            # pragma: no cover - exercised in the CI image
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in for hypothesis.strategies: every attribute is callable."""
+
+        def __getattr__(self, name):
+            def _strategy(*args, **kwargs):
+                return None
+            return _strategy
+
+    st = _AnyStrategy()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco

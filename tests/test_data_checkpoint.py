@@ -1,12 +1,11 @@
 """Data pipeline + checkpoint round-trips."""
 import os
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hyp import given, settings, st
 
 from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
 from repro.data import (BatchIterator, partition_dirichlet, partition_iid,

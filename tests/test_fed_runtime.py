@@ -1,0 +1,319 @@
+"""Federation runtime (fed/): codecs, events, engine, vectorized trainer.
+
+Pinned invariants:
+  * engine sync mode == seed sequential loop, bit-for-bit at fixed seed;
+  * vectorized multi-client D-step == sequential per-client D-steps to fp32
+    tolerance (live params; BN-cancelled conv biases are analytically dead
+    and excluded — see core/gan.train_epoch_vectorized docstring);
+  * codec round-trip error bounds; wire-byte accounting sanity.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.gan import FSLGANTrainer
+from repro.data import partition_dirichlet, synthetic_mnist
+from repro.fed.events import (ARRIVE, FINISH, BernoulliAvailability,
+                              EventQueue)
+from repro.fed.policies import ClientUpdate, FedAsync, FedBuff, SyncFedAvg
+from repro.fed.transport import (FP16Codec, IdentityCodec, Int8Codec,
+                                 LinkModel, TopKCodec, TrafficLedger,
+                                 fake_batch_bytes, make_codec, tree_bytes)
+from repro.fed.vectorized import (fedavg_stacked, sequential_d_rounds,
+                                  stack_trees, unstack_tree)
+
+
+def _tree(seed=0, scale=1.0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": scale * jax.random.normal(k, (16, 8)),
+            "b": {"x": scale * jax.random.normal(jax.random.fold_in(k, 1),
+                                                 (32,))}}
+
+
+# ---------------------------------------------------------------------------
+# transport: codecs + byte accounting
+# ---------------------------------------------------------------------------
+
+def test_tree_bytes_counts_native_dtypes():
+    t = {"a": jnp.zeros((4, 4), jnp.float32), "b": jnp.zeros(10, jnp.int8)}
+    assert tree_bytes(t) == 4 * 4 * 4 + 10
+    assert fake_batch_bytes(16, (28, 28, 1)) == 16 * 28 * 28 * 4
+
+
+def test_identity_codec_exact():
+    t = _tree()
+    dec, nbytes = IdentityCodec().roundtrip(t)
+    for a, b in zip(jax.tree.leaves(dec), jax.tree.leaves(t)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert nbytes == tree_bytes(t)
+
+
+def test_fp16_codec_error_bound_and_bytes():
+    t = _tree(scale=2.0)
+    dec, nbytes = FP16Codec().roundtrip(t)
+    for a, b in zip(jax.tree.leaves(dec), jax.tree.leaves(t)):
+        a, b = np.asarray(a), np.asarray(b)
+        # fp16 has 10 mantissa bits: relative error <= 2^-11 per element
+        assert np.max(np.abs(a - b)) <= np.max(np.abs(b)) * 2 ** -10
+    assert nbytes == tree_bytes(t) // 2
+
+
+def test_int8_codec_error_bound_and_bytes():
+    t = _tree(scale=3.0)
+    dec, nbytes = Int8Codec().roundtrip(t)
+    for a, b in zip(jax.tree.leaves(dec), jax.tree.leaves(t)):
+        a, b = np.asarray(a), np.asarray(b)
+        # quantization step is amax/127; round-to-nearest error <= step/2
+        step = np.max(np.abs(b)) / 127.0
+        assert np.max(np.abs(a - b)) <= step * 0.5 + 1e-7
+    # 1 byte/elem + 4-byte scale per leaf
+    n_elem = sum(l.size for l in jax.tree.leaves(t))
+    assert nbytes == n_elem + 4 * len(jax.tree.leaves(t))
+
+
+def test_topk_codec_sparsity_bytes_and_full_frac_exact():
+    t = _tree()
+    dec, nbytes = TopKCodec(frac=0.25, error_feedback=False).roundtrip(t)
+    for a, b in zip(jax.tree.leaves(dec), jax.tree.leaves(t)):
+        a, b = np.asarray(a), np.asarray(b)
+        k = int(np.ceil(0.25 * b.size))
+        assert np.count_nonzero(a) <= k
+        # kept entries are exact; dropped entries are the smallest-|x|
+        kept = a != 0
+        np.testing.assert_allclose(a[kept], b[kept], atol=1e-7)
+    kept_total = sum(int(np.ceil(0.25 * l.size)) for l in jax.tree.leaves(t))
+    assert nbytes == kept_total * 8
+    # frac=1.0 keeps everything
+    dec_full, _ = TopKCodec(frac=1.0, error_feedback=False).roundtrip(t)
+    for a, b in zip(jax.tree.leaves(dec_full), jax.tree.leaves(t)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+
+
+def test_topk_error_feedback_conserves_mass():
+    """decoded + residual == input (+ prior residual): nothing is lost,
+    only delayed to a later round."""
+    codec = TopKCodec(frac=0.1, error_feedback=True)
+    t = _tree()
+    dec, _ = codec.roundtrip(t)
+    for d, r, x in zip(jax.tree.leaves(dec),
+                       jax.tree.leaves(codec._residual),
+                       jax.tree.leaves(t)):
+        np.testing.assert_allclose(np.asarray(d) + np.asarray(r),
+                                   np.asarray(x), atol=1e-6)
+    # second round: the residual re-enters selection
+    zero = jax.tree.map(jnp.zeros_like, t)
+    dec2, _ = codec.roundtrip(zero)
+    assert any(np.count_nonzero(np.asarray(l)) for l in jax.tree.leaves(dec2))
+
+
+def test_make_codec_factory():
+    assert make_codec("none").name == "none"
+    assert make_codec("fp16").name == "fp16"
+    assert make_codec("int8").name == "int8"
+    assert make_codec("topk", topk_frac=0.5).frac == 0.5
+    with pytest.raises(ValueError):
+        make_codec("gzip")
+
+
+def test_link_model_and_ledger():
+    link = LinkModel(latency_s=0.1, bandwidth_bps=8e6)
+    assert link.transfer_time(0) == pytest.approx(0.1)
+    assert link.transfer_time(1_000_000) == pytest.approx(0.1 + 1.0)
+    led = TrafficLedger()
+    led.record("c0", up=10, down=20)
+    led.record("c0", up=5)
+    led.record("c1", down=7)
+    assert led.total_up == 15 and led.total_down == 27
+
+
+# ---------------------------------------------------------------------------
+# events
+# ---------------------------------------------------------------------------
+
+def test_event_queue_orders_by_time_then_insertion():
+    q = EventQueue()
+    q.push(2.0, FINISH, "b")
+    q.push(1.0, FINISH, "a")
+    q.push(1.0, ARRIVE, "c")          # same time: insertion order breaks tie
+    order = [(e.time, e.client_id) for e in q.drain()]
+    assert order == [(1.0, "a"), (1.0, "c"), (2.0, "b")]
+
+
+def test_bernoulli_availability_deterministic_and_varied():
+    tr = BernoulliAvailability(0.5, seed=3)
+    draws = [tr.available(f"c{i}", r) for i in range(4) for r in range(8)]
+    assert draws == [tr.available(f"c{i}", r)
+                     for i in range(4) for r in range(8)]
+    assert any(draws) and not all(draws)
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+
+def test_fedasync_staleness_discounts_rate():
+    pol = FedAsync(alpha=0.5, staleness_power=1.0)
+    assert pol.rate(0) == pytest.approx(0.5)
+    assert pol.rate(3) == pytest.approx(0.5 / 4)
+    g, u = _tree(0), _tree(1)
+    mixed, bumped = pol.on_update(g, ClientUpdate("c0", u, 1.0, staleness=0))
+    assert bumped
+    want = jax.tree.map(lambda a, b: 0.5 * a + 0.5 * b, g, u)
+    for a, b in zip(jax.tree.leaves(mixed), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_fedbuff_fires_at_buffer_size_and_flushes():
+    pol = FedBuff(buffer_size=2, server_lr=1.0, staleness_power=0.0)
+    g = _tree(0)
+    g1, bumped1 = pol.on_update(g, ClientUpdate("c0", _tree(1), 1.0))
+    assert not bumped1           # buffered, global untouched
+    g2, bumped2 = pol.on_update(g1, ClientUpdate("c1", _tree(2), 1.0))
+    assert bumped2               # K=2 reached: buffer mean replaces global
+    want = jax.tree.map(lambda a, b: (a + b) / 2, _tree(1), _tree(2))
+    for a, b in zip(jax.tree.leaves(g2), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    # round-end flush of a partial buffer
+    g3, _ = pol.on_update(g2, ClientUpdate("c2", _tree(3), 1.0))
+    g4 = pol.on_round_end(g3)
+    for a, b in zip(jax.tree.leaves(g4), jax.tree.leaves(_tree(3))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# engine + trainer (smoke scale)
+# ---------------------------------------------------------------------------
+
+def _cfg(**over):
+    base = {"shape.global_batch": 8, "fsl.num_clients": 2,
+            "model.dcgan.base_filters": 8}
+    base.update(over)
+    return get_config("dcgan-mnist").override(base)
+
+
+@pytest.fixture(scope="module")
+def parts():
+    imgs, labels = synthetic_mnist(120, seed=0)
+    return partition_dirichlet(imgs, labels, 2, alpha=0.5, seed=0)
+
+
+def test_engine_sync_reproduces_seed_trainer_bit_for_bit(parts):
+    ta = FSLGANTrainer(_cfg(), parts, seed=0)
+    tb = FSLGANTrainer(_cfg(), parts, seed=0)
+    for _ in range(2):
+        ma = ta.train_epoch(batches_per_client=2)          # engine path
+        mb = tb.train_epoch_sequential(batches_per_client=2)  # seed loop
+        for k in ("d_loss", "g_loss", "num_clients"):
+            assert ma[k] == mb[k]
+    for cid in ta.state.d_params:
+        for a, b in zip(jax.tree.leaves(ta.state.d_params[cid]),
+                        jax.tree.leaves(tb.state.d_params[cid])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(ta.state.g_params),
+                    jax.tree.leaves(tb.state.g_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _dead_bias(path) -> bool:
+    """Conv biases under batchnorm: BN mean-subtraction cancels them, so
+    their gradient is fp cancellation noise that Adam amplifies to O(lr)."""
+    keys = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+    return (len(keys) == 2 and keys[1] == "b"
+            and str(keys[0]).startswith("conv") and keys[0] != "conv0")
+
+
+def test_vectorized_round_matches_sequential(parts):
+    tr = FSLGANTrainer(_cfg(), parts, seed=0)
+    st = tr.state
+    active = tr._active_clients()
+    B, T = tr.batch_size, 2
+    reals = jnp.stack([jnp.stack([tr._sample_real(cid, B) for _ in range(T)])
+                       for cid in active])
+    fakes = jnp.stack([jnp.stack([tr._gen(st.g_params, tr._z(B))
+                                  for _ in range(T)]) for cid in active])
+
+    sp = stack_trees([st.d_params[c] for c in active])
+    so = stack_trees([st.d_opt[c] for c in active])
+    vp, vo, v_losses = tr._v_round(sp, so, reals, fakes)
+    seq_p, seq_o, s_losses = sequential_d_rounds(
+        tr._d_step, [st.d_params[c] for c in active],
+        [st.d_opt[c] for c in active], reals, fakes)
+
+    np.testing.assert_allclose(np.asarray(v_losses), np.asarray(s_losses),
+                               atol=1e-5, rtol=1e-5)
+    for i, cid in enumerate(active):
+        got = jax.tree_util.tree_flatten_with_path(
+            jax.tree.map(lambda x: x[i], vp))[0]
+        want = jax.tree_util.tree_flatten_with_path(seq_p[i])[0]
+        for (path, a), (_, b) in zip(got, want):
+            if _dead_bias(path):
+                continue
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=5e-5, rtol=5e-5,
+                                       err_msg=jax.tree_util.keystr(path))
+        # functional equivalence including dead params: BN cancels them
+        from repro.models.dcgan import disc_apply
+        x = tr._sample_real(active[0], 4)
+        np.testing.assert_allclose(
+            np.asarray(disc_apply(jax.tree.map(lambda v: v[i], vp), x, tr.c)),
+            np.asarray(disc_apply(seq_p[i], x, tr.c)), atol=1e-4, rtol=1e-4)
+
+
+def test_fedavg_stacked_kernel_matches_host():
+    trees = [_tree(i) for i in range(3)]
+    stacked = stack_trees(trees)
+    w = [1.0, 2.0, 3.0]
+    host = fedavg_stacked(stacked, w)
+    kern = fedavg_stacked(stacked, w, use_kernel=True, interpret=True)
+    for a, b in zip(jax.tree.leaves(host), jax.tree.leaves(kern)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    # unstack round-trips
+    back = unstack_tree(stacked, 3)
+    for t, u in zip(trees, back):
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(u)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_byte_accounting_and_codec_compression(parts):
+    t_raw = FSLGANTrainer(_cfg(), parts, seed=0)
+    m_raw = t_raw.train_epoch(batches_per_client=1)
+    t_int8 = FSLGANTrainer(_cfg(**{"fed.codec": "int8"}), parts, seed=0)
+    m_int8 = t_int8.train_epoch(batches_per_client=1)
+    # downlink (fakes) identical; uplink ~4x smaller under int8
+    assert m_int8["down_mbytes"] == m_raw["down_mbytes"]
+    assert m_int8["up_mbytes"] < 0.3 * m_raw["up_mbytes"]
+    # raw uplink == native D param bytes x clients
+    d_bytes = tree_bytes(t_raw.state.d_params["c0"])
+    assert m_raw["up_mbytes"] == pytest.approx(
+        2 * d_bytes / 1e6, rel=1e-6)
+    # engine's cumulative ledger matches the round report
+    assert t_raw.engine.ledger.total_up == int(m_raw["up_mbytes"] * 1e6)
+
+
+def test_straggler_deadline_drops_updates(parts):
+    t = FSLGANTrainer(_cfg(**{"fed.deadline_s": 1.0}), parts, seed=0)
+    m = t.train_epoch(batches_per_client=1)
+    assert m["num_clients"] == 0.0 and m["stragglers"] == 2.0
+    assert m["round_time_s"] == pytest.approx(1.0)
+
+
+def test_async_modes_train_and_record_staleness(parts):
+    for mode in ("fedasync", "fedbuff"):
+        t = FSLGANTrainer(_cfg(**{"fed.mode": mode, "fed.async_cycles": 2}),
+                          parts, seed=0)
+        m = t.train_epoch(batches_per_client=1)
+        assert np.isfinite(m["d_loss"]) and np.isfinite(m["g_loss"])
+        assert m["num_clients"] == 2.0
+        assert m["round_time_s"] > 0.0
+        rep_events = t.engine  # 2 clients x 2 cycles = 4 arrivals expected
+        assert rep_events.round_idx == 1
+
+
+def test_availability_trace_gates_participation(parts):
+    t = FSLGANTrainer(_cfg(**{"fed.availability": 0.5,
+                              "fed.availability_seed": 3}), parts, seed=0)
+    ns = [t.train_epoch(batches_per_client=1)["num_clients"]
+          for _ in range(4)]
+    assert min(ns) < 2.0            # somebody was down at least once

@@ -1,10 +1,9 @@
 """FedAvg aggregation properties (host + property-based)."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hyp import given, settings, st
 
 from repro.core.fedavg import fedavg
 

@@ -13,8 +13,7 @@ from repro.sharding.specs import (AxisRules, Lg, default_rules, logical_spec,
 @pytest.fixture(scope="module")
 def mesh():
     # container has 1 device; a 1x1 mesh still exercises the rule machinery
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((1, 1), ("data", "model"))
 
 
 def _mesh_multi():
@@ -81,8 +80,7 @@ def test_collective_parser_counts_bytes():
 def test_collective_parser_on_real_module():
     """Lower a psum on a 1-device mesh; parser must not crash (0 or more
     collectives depending on optimization)."""
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((1,), ("data",))
     from jax.sharding import NamedSharding
 
     def f(x):

@@ -1,11 +1,10 @@
 """FSL split + device-selection: property-based tests (hypothesis) over the
 paper's §4 invariants."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hyp import given, settings, st
 
 from repro.config import DCGANConfig
 from repro.core.devices import Client, Device, make_pool

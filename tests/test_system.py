@@ -69,7 +69,8 @@ def test_dryrun_path_on_host_mesh():
                            batch=4)
     mesh = make_host_mesh()
     lowered, compiled, secs = lower_one(cfg, mesh)
-    ca = compiled.cost_analysis()
+    from repro.roofline.analysis import cost_analysis_dict
+    ca = cost_analysis_dict(compiled)
     assert float(ca.get("flops", 0)) > 0
     mem = compiled.memory_analysis()
     assert mem.temp_size_in_bytes >= 0
