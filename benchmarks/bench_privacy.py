@@ -1,0 +1,183 @@
+"""Privacy frontier benchmarks (privacy/ subsystem).
+
+Three measured surfaces, mirroring the attack suite:
+
+  1. **Split-depth leakage** — distance correlation between raw inputs and
+     the smashed activation at each discriminator depth, plus the boundary
+     depths each selection strategy actually exposes (the deeper the first
+     LAN hop, the less an on-path device sees).
+  2. **DP frontier** — for a sigma sweep: trained d_loss (utility proxy),
+     accountant epsilon, and gradient-inversion reconstruction PSNR
+     against the uplinked gradient (leakage).  The leakage-vs-accuracy-
+     vs-epsilon trade the ROADMAP asks for.
+  3. **Kernel** — dp_clip Pallas kernel (interpret) vs its pure-JAX
+     reference, like bench_kernels' other entries.
+
+Besides CSV rows, writes machine-readable ``BENCH_privacy.json`` next to
+this file (gitignored), same facts keyed for downstream tooling.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import DCGANConfig
+from repro.configs.registry import get_config
+from repro.core.devices import make_pool
+from repro.core.gan import FSLGANTrainer, d_loss_fn
+from repro.core.selection import plan_all_clients
+from repro.data import partition_dirichlet, synthetic_mnist
+from repro.kernels.dp_clip.ops import dp_clip_noise_tree
+from repro.kernels.dp_clip.ref import dp_clip_noise_ref
+from repro.models.dcgan import disc_init, disc_layer_costs, disc_layer_names
+from repro.privacy import (best_match_psnr, distance_correlation,
+                           invert_gradients, make_prefix_fn,
+                           plan_boundary_depths)
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "BENCH_privacy.json")
+
+
+def _cfg(clients: int, **over):
+    base = {"shape.global_batch": 8, "fsl.num_clients": clients,
+            "model.dcgan.base_filters": 8}
+    base.update(over)
+    return get_config("dcgan-mnist").override(base)
+
+
+def _split_depth_leakage(fast: bool):
+    """dCor(input, activation) per depth + boundary depths per strategy."""
+    c = DCGANConfig(base_filters=8)
+    params = disc_init(jax.random.PRNGKey(0), c)
+    probe, _ = synthetic_mnist(48 if fast else 96, seed=3)
+    probe = jnp.asarray(probe)
+    depth_dcor = {}
+    for depth in range(1, len(disc_layer_names(c))):
+        act = make_prefix_fn(params, c, depth)(probe)
+        depth_dcor[depth] = distance_correlation(probe, act)
+    costs = disc_layer_costs(c)
+    layers = [(n, costs[n]) for n in disc_layer_names(c)]
+    pool = make_pool("paper", 4, 4, seed=0)
+    strat_depths = {}
+    for strategy in ("random_single", "sorted_single", "sorted_multi"):
+        plans = plan_all_clients(pool, layers, strategy, seed=0)
+        depths = [d for p in plans.values() for d in plan_boundary_depths(p)]
+        # min exposed depth == worst case: the shallowest activation any
+        # on-path device observes under this strategy
+        strat_depths[strategy] = {
+            "min_depth": int(min(depths)) if depths else None,
+            "mean_depth": float(np.mean(depths)) if depths else None,
+            "mean_dcor_exposed": float(np.mean(
+                [depth_dcor[min(d, max(depth_dcor))] for d in depths]))
+            if depths else None}
+    return depth_dcor, strat_depths
+
+
+def _dp_frontier(clients: int, batches: int, epochs: int, sigmas, parts):
+    """Train briefly per sigma; measure utility, epsilon, inversion PSNR."""
+    c = DCGANConfig(base_filters=8)
+    loss_fn = functools.partial(d_loss_fn, c=c)
+    imgs, _ = synthetic_mnist(4, seed=1)
+    real = jnp.asarray(imgs[:1])
+    points = []
+    for sigma in sigmas:
+        over = {} if sigma is None else {
+            "privacy.enabled": True, "privacy.noise_multiplier": sigma,
+            "privacy.clip_norm": 1.0, "privacy.sample_rate": 0.1}
+        tr = FSLGANTrainer(_cfg(clients, **over), parts, seed=0)
+        t0 = time.time()
+        for _ in range(epochs):
+            m = tr.train_epoch(batches_per_client=batches)
+        train_us = (time.time() - t0) * 1e6 / epochs
+        # leakage probe: invert the (privatized) gradient of one real image
+        params = tr.state.d_params[tr.client_ids[0]]
+        fake = 0.3 * jax.random.normal(jax.random.PRNGKey(3), real.shape)
+        if sigma is None:
+            g = jax.grad(loss_fn)(params, real, fake)
+        else:
+            per_ex = jax.vmap(
+                lambda r, f: jax.grad(loss_fn)(params, r[None], f[None]),
+                in_axes=(0, 0))(real, fake)
+            g = dp_clip_noise_tree(per_ex, 1.0, float(sigma),
+                                   jax.random.PRNGKey(11), use_kernel=False)
+        rec, _ = invert_gradients(loss_fn, params, g, fake, real.shape,
+                                  steps=150, key=jax.random.PRNGKey(7))
+        points.append({
+            "sigma": 0.0 if sigma is None else float(sigma),
+            "dp": sigma is not None,
+            "d_loss": float(m["d_loss"]),
+            "g_loss": float(m["g_loss"]),
+            "epsilon": float(m.get("dp_epsilon", float("inf"))),
+            "inversion_psnr_db": best_match_psnr(rec, real),
+            "train_us_per_epoch": train_us})
+    return points
+
+
+def _kernel_rows(reps: int) -> List[Tuple[str, float, str]]:
+    b, n = 8, 1 << 16
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, n))
+    z = jax.random.normal(jax.random.PRNGKey(1), (n,))
+
+    ref = jax.jit(lambda: dp_clip_noise_ref(x, 1.0, 0.5, z))
+    ref().block_until_ready()
+    t0 = time.time()
+    for _ in range(reps):
+        ref().block_until_ready()
+    us_ref = (time.time() - t0) * 1e6 / reps
+
+    from repro.kernels.dp_clip.kernel import dp_clip_noise_kernel
+    kern = jax.jit(lambda: dp_clip_noise_kernel(x, 1.0, 0.5, z,
+                                                interpret=True))
+    out = kern().block_until_ready()
+    err = float(jnp.max(jnp.abs(out - ref())))
+    t0 = time.time()
+    for _ in range(reps):
+        kern().block_until_ready()
+    us_k = (time.time() - t0) * 1e6 / reps
+    return [("dp_clip_ref", us_ref, f"B={b} N={n}"),
+            ("dp_clip_kernel[interpret]", us_k,
+             f"max_err={err:.2e} (vs ref)")]
+
+
+def run(fast: bool = False) -> List[Tuple[str, float, str]]:
+    clients = 2
+    batches = 1 if fast else 2
+    epochs = 1 if fast else 2
+    sigmas = [None, 1.0] if fast else [None, 0.5, 1.0, 2.0]
+    rows: List[Tuple[str, float, str]] = []
+
+    t0 = time.time()
+    depth_dcor, strat_depths = _split_depth_leakage(fast)
+    rows.append(("privacy_split_leakage", (time.time() - t0) * 1e6,
+                 " ".join(f"dcor[d{d}]={v:.3f}"
+                          for d, v in sorted(depth_dcor.items()))))
+    for s, info in strat_depths.items():
+        rows.append((f"privacy_boundary[{s}]", 0.0,
+                     f"min_depth={info['min_depth']} "
+                     f"mean_depth={info['mean_depth']:.2f} "
+                     f"mean_dcor={info['mean_dcor_exposed']:.3f}"))
+
+    imgs, labels = synthetic_mnist(60 * clients, seed=0)
+    parts = partition_dirichlet(imgs, labels, clients, alpha=0.5, seed=0)
+    frontier = _dp_frontier(clients, batches, epochs, sigmas, parts)
+    for p in frontier:
+        tag = f"sigma={p['sigma']:.2f}" if p["dp"] else "no_dp"
+        rows.append((f"privacy_frontier[{tag}]", p["train_us_per_epoch"],
+                     f"eps={p['epsilon']:.2f} d_loss={p['d_loss']:.3f} "
+                     f"inv_psnr={p['inversion_psnr_db']:.2f}dB"))
+
+    rows.extend(_kernel_rows(2 if fast else 4))
+
+    with open(JSON_PATH, "w") as f:
+        json.dump({"split_depth_dcor": {str(k): v
+                                        for k, v in depth_dcor.items()},
+                   "strategy_boundaries": strat_depths,
+                   "dp_frontier": frontier}, f, indent=2)
+    rows.append(("privacy_json", 0.0, JSON_PATH))
+    return rows

@@ -11,6 +11,9 @@ pass (fewer epochs/seeds).
   bench_roofline      —      roofline table from dry-run artifacts
   bench_fed_runtime   —      federation runtime: vectorized vs sequential
                              dispatch, codec wire bytes, sync/async rounds
+  bench_privacy       —      privacy frontier: split-depth leakage, DP
+                             sigma sweep (eps/utility/inversion PSNR),
+                             dp_clip kernel; writes BENCH_privacy.json
 """
 from __future__ import annotations
 
@@ -24,10 +27,12 @@ def main() -> None:
     fast = os.environ.get("BENCH_FAST", "0") == "1"
     from benchmarks import (bench_convergence, bench_fed_runtime,
                             bench_heterogeneity, bench_images, bench_kernels,
-                            bench_lm_train, bench_roofline, bench_time)
+                            bench_lm_train, bench_privacy, bench_roofline,
+                            bench_time)
     modules = [
         ("bench_time", bench_time),
         ("bench_fed_runtime", bench_fed_runtime),
+        ("bench_privacy", bench_privacy),
         ("bench_kernels", bench_kernels),
         ("bench_lm_train", bench_lm_train),
         ("bench_images", bench_images),

@@ -2,5 +2,6 @@ from repro.config.base import (  # noqa: F401
     ATTN_FULL, ATTN_NONE, ATTN_SLIDING, AUDIO, DCGAN, DENSE, FAMILIES, HYBRID,
     INPUT_SHAPES, MOE, SSM, VLM, DCGANConfig, EncDecConfig, FedConfig,
     FSLConfig, MLAConfig, ModelConfig, MoEConfig, OptimConfig, ParallelConfig,
-    RGLRUConfig, RWKVConfig, RunConfig, ShapeConfig, reduce_for_smoke,
+    PrivacyConfig, RGLRUConfig, RWKVConfig, RunConfig, ShapeConfig,
+    reduce_for_smoke,
 )

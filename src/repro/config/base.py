@@ -346,6 +346,33 @@ class FedConfig:
 
 
 @dataclass
+class PrivacyConfig:
+    """Privacy subsystem knobs (privacy/ + kernels/dp_clip).
+
+    ``enabled=False`` leaves every training path byte-identical to the
+    non-private build (pinned test).  Two defense placements:
+
+      * ``mode='dp_sgd'`` — per-example clip + Gaussian noise inside the
+        device-side D step (Abadi et al. 2016), accounted per batch;
+      * ``mode='uplink'`` — clip + noise the whole update delta once per
+        round, as a pre-codec transport stage (fed/engine.py), accounted
+        per round.
+    """
+    enabled: bool = False
+    mode: str = "dp_sgd"               # dp_sgd | uplink
+    clip_norm: float = 1.0             # per-example (dp_sgd) / per-delta L2
+    noise_multiplier: float = 0.0      # sigma; noise stddev = sigma * clip
+    delta: float = 1e-5                # accountant's delta target
+    # accountant's per-step Poisson-sampling probability q.  The data
+    # loader samples uniformly with replacement, so set q >= batch/|data|
+    # to claim amplification honestly; the default 1.0 claims none.
+    sample_rate: float = 1.0
+    seed: int = 0                      # DP noise stream
+    use_kernel: bool = False           # dp_clip Pallas kernel for clip+noise
+    kernel_interpret: bool = False     # Pallas interpret mode (CPU tests)
+
+
+@dataclass
 class ShapeConfig:
     name: str = "train_4k"
     seq_len: int = 4096
@@ -369,6 +396,7 @@ class RunConfig:
     optim: OptimConfig = field(default_factory=OptimConfig)
     fsl: FSLConfig = field(default_factory=FSLConfig)
     fed: FedConfig = field(default_factory=FedConfig)
+    privacy: PrivacyConfig = field(default_factory=PrivacyConfig)
     shape: ShapeConfig = field(default_factory=lambda: INPUT_SHAPES["train_4k"])
     seed: int = 0
 
@@ -442,7 +470,7 @@ _NESTED = {
                   "rglru": RGLRUConfig, "encdec": EncDecConfig, "dcgan": DCGANConfig},
     RunConfig: {"model": ModelConfig, "parallel": ParallelConfig,
                 "optim": OptimConfig, "fsl": FSLConfig, "fed": FedConfig,
-                "shape": ShapeConfig},
+                "privacy": PrivacyConfig, "shape": ShapeConfig},
 }
 
 

@@ -47,6 +47,8 @@ from repro.fed.vectorized import (fedavg_stacked, make_multi_client_d_step,
 from repro.models.dcgan import (disc_apply, disc_init, disc_layer_costs,
                                 disc_layer_names, gen_apply, gen_init)
 from repro.optim import make_optimizer
+from repro.privacy.defenses import (RDPAccountant, make_dp_d_step,
+                                    make_uplink_stage)
 
 
 def bce_logits(logits: jnp.ndarray, target: float) -> jnp.ndarray:
@@ -109,6 +111,34 @@ class FSLGANTrainer:
             self.pool, layers, cfg.fsl.selection, cfg.fsl.seed)
         self._rng = np.random.default_rng(seed)
         self._build_steps()
+        # privacy subsystem (cfg.privacy): DP-SGD on the device-side D step
+        # and/or an RDP accountant.  Disabled => every path is bit-exact
+        # with the non-private build (pinned test).
+        priv = cfg.privacy
+        self._dp_step = None
+        self.accountant: Optional[RDPAccountant] = None
+        # ONE uplink stage for the trainer's lifetime: engine rebuilds must
+        # NOT reset its per-client round counters, or the same Gaussian
+        # noise vector would be reused on fresh deltas (noise cancellation
+        # voids the DP guarantee).
+        self._uplink_stage = make_uplink_stage(priv)
+        if priv.enabled:
+            # The accountant's subsampling amplification assumes Poisson
+            # sampling at rate q; our loader samples uniformly with
+            # replacement, so cfg sample_rate <= batch/|data| is the honest
+            # setting and 1.0 (no amplification claimed) the safe default.
+            self.accountant = RDPAccountant(priv.noise_multiplier,
+                                            priv.sample_rate)
+            self._dp_key = jax.random.PRNGKey(priv.seed)
+            if priv.mode == "dp_sgd":
+                self._dp_step = make_dp_d_step(
+                    self.d_optimizer,
+                    functools.partial(d_loss_fn, c=self.c),
+                    self.cfg.optim.lr, priv.clip_norm,
+                    priv.noise_multiplier, use_kernel=priv.use_kernel,
+                    interpret=priv.kernel_interpret)
+            elif priv.mode != "uplink":
+                raise ValueError(f"unknown privacy mode {priv.mode!r}")
         # federation runtime (built on first train_epoch — compute times
         # depend on batches_per_client)
         self.engine: Optional[FederationEngine] = None
@@ -140,6 +170,17 @@ class FSLGANTrainer:
         # single-program multi-client round (fed/vectorized.py)
         self._v_round = make_multi_client_d_step(
             self.d_optimizer, functools.partial(d_loss_fn, c=c), lr)
+
+    def _d_update(self, dp, do, real, fake):
+        """One device-side D step: DP-SGD when ``cfg.privacy`` says so
+        (per-example clip+noise through kernels/dp_clip, accounted per
+        batch), the plain jitted step otherwise (bit-exact seed path)."""
+        if self._dp_step is not None:
+            self._dp_key, k = jax.random.split(self._dp_key)
+            if self.accountant is not None:
+                self.accountant.step()
+            return self._dp_step(dp, do, real, fake, k)
+        return self._d_step(dp, do, real, fake)
 
     def _sample_real(self, cid: str, n: int) -> jnp.ndarray:
         data = self.client_data[cid]
@@ -178,7 +219,8 @@ class FSLGANTrainer:
             specs.append(ClientSpec(cid, float(len(self.client_data[cid])),
                                     ct))
         self.engine = FederationEngine(
-            self.cfg.fed, specs, weighted=self.cfg.fsl.weighted_average)
+            self.cfg.fed, specs, weighted=self.cfg.fsl.weighted_average,
+            uplink_stage=self._uplink_stage)
         self._engine_batches = batches_per_client
         return self.engine
 
@@ -194,8 +236,8 @@ class FSLGANTrainer:
                 real = self._sample_real(cid, self.batch_size)
                 fake = self._gen(st.g_params, self._z(self.batch_size))
                 # server ships fakes; client never shares `real`
-                dp, do, dl = self._d_step(dp, do, real,
-                                          jax.lax.stop_gradient(fake))
+                dp, do, dl = self._d_update(dp, do, real,
+                                            jax.lax.stop_gradient(fake))
                 losses.append(float(dl))
             st.d_opt[cid] = do
             return dp, {"losses": losses}
@@ -245,6 +287,12 @@ class FSLGANTrainer:
                     for l in info["losses"]]
         g_losses = self._g_updates(d_avg, batches_per_client)
         st.step += 1
+        if self.accountant is not None and self.cfg.privacy.mode == "uplink":
+            # one Gaussian-mechanism release per EXECUTED uplink: every
+            # client_infos entry ran _codec_roundtrip once — this counts
+            # async cycles and late-but-shipped straggler updates that
+            # never make rep.participated
+            self.accountant.step(len(rep.client_infos))
         metrics = {
             "d_loss": float(np.mean(d_losses)) if d_losses else float("nan"),
             "g_loss": float(np.mean(g_losses)),
@@ -256,6 +304,9 @@ class FSLGANTrainer:
             "stragglers": float(len(rep.stragglers)),
             "mean_staleness": rep.mean_staleness,
         }
+        if self.accountant is not None:
+            metrics["dp_epsilon"] = self.accountant.epsilon(
+                self.cfg.privacy.delta)[0]
         return self._record(metrics)
 
     # ------------------------------------------------------------------
@@ -264,6 +315,11 @@ class FSLGANTrainer:
         """The seed's sequential client loop, kept verbatim as the numeric
         reference: engine sync mode must match this bit-for-bit (pinned in
         tests/test_fed_runtime.py)."""
+        if self._uplink_stage is not None:
+            raise NotImplementedError(
+                "uplink DP runs in the engine's pre-codec stage; the "
+                "sequential reference loop has no uplink to privatize — "
+                "use train_epoch (or privacy.mode='dp_sgd')")
         st = self.state
         d_losses = []
         active = self._active_clients()
@@ -273,8 +329,8 @@ class FSLGANTrainer:
                 real = self._sample_real(cid, self.batch_size)
                 fake = self._gen(st.g_params, self._z(self.batch_size))
                 # server ships fakes; client never shares `real`
-                dp, do, dl = self._d_step(dp, do, real,
-                                          jax.lax.stop_gradient(fake))
+                dp, do, dl = self._d_update(dp, do, real,
+                                            jax.lax.stop_gradient(fake))
                 d_losses.append(float(dl))
             st.d_params[cid], st.d_opt[cid] = dp, do
 
@@ -308,6 +364,12 @@ class FSLGANTrainer:
         so their Adam updates amplify fp noise to O(lr) in either path —
         live parameters and losses agree tightly.
         """
+        if self.cfg.privacy.enabled:
+            raise NotImplementedError(
+                "train_epoch_vectorized applies neither DP-SGD (no "
+                "per-example clip stage in the scanned step) nor the "
+                "uplink DP stage (no engine) — training here would "
+                "silently void the configured privacy; use train_epoch")
         st = self.state
         active = self._active_clients()
         B, T = self.batch_size, batches_per_client

@@ -67,15 +67,41 @@ class InfeasibleSplit(Exception):
 # ---------------------------------------------------------------------------
 
 def split_forward(x, plan: SplitPlan,
-                  apply_layer: Callable[[str, object], object]):
+                  apply_layer: Callable[[str, object], object],
+                  boundary_hook: Optional[Callable[[int, str, str, object],
+                                                   None]] = None):
     """Run a forward pass portion-by-portion, as the devices would.
 
     ``apply_layer(name, x) -> x`` applies one named layer. On real FSL
     hardware each portion runs on its own device with activations crossing
     the LAN at portion boundaries; here the boundary is a list hop, and the
     result is bit-identical to the monolithic forward (tested property).
+
+    ``boundary_hook(boundary_idx, from_device, to_device, activation)`` is
+    called at every device-to-device hand-off with the smashed activation
+    that would cross the LAN — the observation point of the privacy
+    subsystem's activation-inversion attack (privacy/attacks.py).
     """
-    for portion in plan.portions:
+    n_boundary = 0
+    for pi, portion in enumerate(plan.portions):
         for name in portion.layer_names:
             x = apply_layer(name, x)
+        if boundary_hook is not None and pi + 1 < len(plan.portions):
+            nxt = plan.portions[pi + 1]
+            if nxt.device_id != portion.device_id:
+                boundary_hook(n_boundary, portion.device_id,
+                              nxt.device_id, x)
+                n_boundary += 1
     return x
+
+
+def boundary_activations(x, plan: SplitPlan,
+                         apply_layer: Callable[[str, object], object]
+                         ) -> List[Tuple[int, str, str, object]]:
+    """All (boundary_idx, from_device, to_device, activation) tuples a LAN
+    observer sees during one split forward pass."""
+    seen: List[Tuple[int, str, str, object]] = []
+    split_forward(x, plan, apply_layer,
+                  boundary_hook=lambda i, a, b, act: seen.append(
+                      (i, a, b, act)))
+    return seen

@@ -76,11 +76,16 @@ class RoundReport:
 
 class FederationEngine:
     def __init__(self, fed_cfg, specs: List[ClientSpec], *,
-                 weighted: bool = True):
+                 weighted: bool = True, uplink_stage=None):
         self.cfg = fed_cfg
         self.roster = [s.client_id for s in specs]
         self.specs = {s.client_id: s for s in specs}
         self.policy = make_policy(fed_cfg, weighted=weighted)
+        # pre-codec uplink transform (privacy/defenses.DPUplinkStage):
+        # applied to the update delta BEFORE compression, so the codec —
+        # and everything downstream of it — only ever sees the privatized
+        # delta.  None = no transform (the default, bit-exact path).
+        self.uplink_stage = uplink_stage
         self.codecs = {cid: make_codec(fed_cfg.codec,
                                        topk_frac=fed_cfg.topk_frac,
                                        error_feedback=fed_cfg.error_feedback)
@@ -98,15 +103,21 @@ class FederationEngine:
     def _codec_roundtrip(self, cid: str, base_tree, params
                          ) -> Tuple[Any, int]:
         """Uplink params through the client's codec; lossy codecs compress
-        the delta vs the tree the client downloaded (``base_tree``)."""
+        the delta vs the tree the client downloaded (``base_tree``).  An
+        ``uplink_stage`` (DP clip+noise) runs on the delta first, so lossy
+        codecs compress — and the server only decodes — the privatized
+        update."""
         codec = self.codecs[cid]
-        if codec.encodes_delta:
+        if codec.encodes_delta or self.uplink_stage is not None:
             delta = jax.tree.map(
                 lambda p, b: p.astype(jnp.float32) - b.astype(jnp.float32),
                 params, base_tree)
+            if self.uplink_stage is not None:
+                delta = self.uplink_stage(cid, delta)
             dec, nbytes = codec.roundtrip(delta)
             decoded = jax.tree.map(
-                lambda b, d: (b.astype(jnp.float32) + d).astype(b.dtype),
+                lambda b, d: (b.astype(jnp.float32)
+                              + d.astype(jnp.float32)).astype(b.dtype),
                 base_tree, dec)
             return decoded, nbytes
         return codec.roundtrip(params)

@@ -130,7 +130,11 @@ class Int8Codec(Codec):
     def roundtrip(self, tree) -> Tuple[Any, int]:
         def qdq(l):
             x = l.astype(jnp.float32)
-            scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+            amax = jnp.max(jnp.abs(x))
+            # zero-range (all-constant-zero) delta: any positive scale maps
+            # q=0 back to exact zeros; 1.0 avoids the subnormal division a
+            # tiny epsilon scale would do
+            scale = jnp.where(amax > 0, amax / 127.0, 1.0)
             q = jnp.clip(jnp.round(x / scale), -127, 127)
             return (q * scale).astype(l.dtype)
 
@@ -165,7 +169,9 @@ class TopKCodec(Codec):
         def sparsify(l):
             nonlocal kept_entries
             flat = l.astype(jnp.float32).reshape(-1)
-            k = max(1, int(math.ceil(self.frac * flat.size)))
+            # clamp k into [1, n]: frac >= 1 (or tiny leaves) means keep
+            # everything — lax.top_k raises on k > n
+            k = min(flat.size, max(1, int(math.ceil(self.frac * flat.size))))
             kept_entries += k
             _, idx = jax.lax.top_k(jnp.abs(flat), k)
             mask = jnp.zeros_like(flat).at[idx].set(1.0)

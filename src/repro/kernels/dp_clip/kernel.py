@@ -1,0 +1,90 @@
+"""DP-SGD clip-and-noise as a Pallas kernel.
+
+The device-side DP-SGD step (privacy/defenses.py) reduces stacked
+per-example gradients g of shape (B, N) to
+
+    out[n] = sum_b min(1, C / ||g_b||_2) * g[b, n]  +  noise_scale * z[n]
+
+i.e. per-example L2 norm, clip to C, weighted sum, Gaussian-noise add.
+Done naively that is four passes over the (B, N) stack (square, reduce,
+scale, sum).  The kernel fuses it into a two-phase sequential grid:
+
+  * phase 0 streams (B, bn) tiles through VMEM accumulating per-example
+    partial squared norms into a (B, 1) VMEM scratch that persists across
+    the grid (same pattern as the wkv6 state scratch);
+  * phase 1 re-streams each tile, applies the per-example clip scale from
+    the scratch, reduces over B on the VPU and adds the noise tile.
+
+HBM traffic is therefore 2 reads + 1 write per element — the floor for any
+clip-then-reduce (the norm must be complete before the first scaled element
+is emitted).  Noise is a precomputed input tile (not in-kernel PRNG) so the
+kernel is a deterministic function of its inputs and pins exactly against
+the pure-JAX reference (ref.py) in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NORM_EPS = 1e-12      # shared with ref.py: guard for all-zero examples
+
+
+def _dp_clip_kernel(x_ref, scal_ref, noise_ref, o_ref, norm_scr):
+    phase = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(phase == 0)
+    def _accumulate_norms():
+        @pl.when(j == 0)
+        def _init():
+            norm_scr[...] = jnp.zeros_like(norm_scr)
+        x = x_ref[...].astype(jnp.float32)               # (B, bn)
+        norm_scr[...] += jnp.sum(x * x, axis=1, keepdims=True)
+        o_ref[...] = jnp.zeros_like(o_ref)               # placeholder flush
+
+    @pl.when(phase == 1)
+    def _clip_sum_noise():
+        x = x_ref[...].astype(jnp.float32)               # (B, bn)
+        clip = scal_ref[0, 0]
+        noise_scale = scal_ref[0, 1]
+        norms = jnp.sqrt(norm_scr[...])                  # (B, 1)
+        scale = jnp.minimum(1.0, clip / jnp.maximum(norms, NORM_EPS))
+        acc = jnp.sum(x * scale, axis=0, keepdims=True)  # (1, bn)
+        o_ref[...] = (acc + noise_scale * noise_ref[...]).astype(o_ref.dtype)
+
+
+def dp_clip_noise_kernel(stacked: jnp.ndarray, clip: jnp.ndarray,
+                         noise_scale: jnp.ndarray, noise: jnp.ndarray, *,
+                         block_n: int = 2048,
+                         interpret: bool = False) -> jnp.ndarray:
+    """stacked: (B, N) per-example grads; noise: (N,).  -> (N,) f32.
+
+    Arbitrary N: zero-padded to a block_n multiple (padded lanes add 0 to
+    every norm and emit noise_scale * 0) and sliced back, like the fedavg
+    kernel.  ``clip``/``noise_scale`` ride in one (1, 2) scalar tile.
+    """
+    b, n = stacked.shape
+    block_n = min(block_n, max(n, 1))
+    pad = (-n) % block_n
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+        noise = jnp.pad(noise, (0, pad))
+    n_padded = n + pad
+    scal = jnp.stack([jnp.asarray(clip, jnp.float32).reshape(()),
+                      jnp.asarray(noise_scale, jnp.float32).reshape(())]
+                     ).reshape(1, 2)
+    out = pl.pallas_call(
+        _dp_clip_kernel,
+        grid=(2, n_padded // block_n),
+        in_specs=[pl.BlockSpec((b, block_n), lambda i, j: (0, j)),
+                  pl.BlockSpec((1, 2), lambda i, j: (0, 0)),
+                  pl.BlockSpec((1, block_n), lambda i, j: (0, j))],
+        out_specs=pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, n_padded), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((b, 1), jnp.float32)],
+        interpret=interpret,
+    )(stacked.astype(jnp.float32), scal,
+      noise.astype(jnp.float32).reshape(1, n_padded))[0]
+    return out[:n] if pad else out

@@ -1,0 +1,70 @@
+"""Public dp_clip op: pytree <-> flat glue around the Pallas kernel.
+
+``dp_clip_noise_tree`` is what the DP-SGD step (privacy/defenses.py) calls:
+per-example gradient pytree in, privatized *summed* gradient tree out
+(the caller divides by the batch size).  The whole tree is flattened into
+ONE (B, N) stack so the clip norm is the global L2 over all parameters —
+clipping leaf-by-leaf would be a different (weaker) mechanism.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dp_clip.kernel import dp_clip_noise_kernel
+from repro.kernels.dp_clip.ref import dp_clip_noise_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def dp_clip_noise_flat(stacked: jnp.ndarray, clip, noise_scale,
+                       noise: jnp.ndarray, *, use_kernel: bool = True,
+                       interpret: bool = False) -> jnp.ndarray:
+    """stacked: (B, N) -> (N,) f32 privatized gradient sum."""
+    if use_kernel:
+        return dp_clip_noise_kernel(stacked, clip, noise_scale, noise,
+                                    interpret=interpret)
+    return dp_clip_noise_ref(stacked, clip, noise_scale, noise)
+
+
+def flatten_per_example(tree) -> Tuple[jnp.ndarray, Any]:
+    """Per-example grad tree (every leaf (B, ...)) -> ((B, N) stack, spec)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    b = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [l.reshape(b, -1).astype(jnp.float32) for l in leaves], axis=1)
+    spec = (treedef, [l.shape[1:] for l in leaves],
+            [l.dtype for l in leaves])
+    return flat, spec
+
+
+def unflatten_summed(vec: jnp.ndarray, spec) -> Any:
+    """(N,) privatized sum -> gradient tree with the original leaf shapes."""
+    treedef, shapes, dtypes = spec
+    out, off = [], 0
+    for shape, dtype in zip(shapes, dtypes):
+        size = 1
+        for s in shape:
+            size *= s
+        out.append(vec[off:off + size].reshape(shape).astype(dtype))
+        off += size
+    return jax.tree.unflatten(treedef, out)
+
+
+def dp_clip_noise_tree(per_example_grads, clip, noise_scale, key, *,
+                       use_kernel: bool = True, interpret: bool = False):
+    """Privatize a per-example gradient pytree.
+
+    per_example_grads: tree of (B, ...) leaves.  Returns the tree of
+    ``sum_b clip_b(g_b) + noise_scale * N(0, I)`` — divide by B for the
+    DP-SGD mean gradient.  ``noise_scale`` is sigma * clip for the standard
+    Gaussian mechanism.  One normal draw per parameter, from ``key``.
+    """
+    flat, spec = flatten_per_example(per_example_grads)
+    noise = jax.random.normal(key, (flat.shape[1],), jnp.float32)
+    vec = dp_clip_noise_flat(flat, jnp.asarray(clip, jnp.float32),
+                             jnp.asarray(noise_scale, jnp.float32), noise,
+                             use_kernel=use_kernel, interpret=interpret)
+    return unflatten_summed(vec, spec)

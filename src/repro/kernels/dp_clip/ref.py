@@ -1,0 +1,18 @@
+"""Oracle for the dp_clip kernel: pure-JAX DP-SGD clip-sum-noise."""
+import jax.numpy as jnp
+
+NORM_EPS = 1e-12      # shared with kernel.py
+
+
+def dp_clip_noise_ref(stacked: jnp.ndarray, clip, noise_scale,
+                      noise: jnp.ndarray) -> jnp.ndarray:
+    """stacked: (B, N); noise: (N,) -> (N,) f32.
+
+    out = sum_b min(1, clip/||g_b||) g_b  +  noise_scale * noise
+    """
+    x = stacked.astype(jnp.float32)
+    norms = jnp.sqrt(jnp.sum(x * x, axis=1, keepdims=True))
+    scale = jnp.minimum(1.0, clip / jnp.maximum(norms, NORM_EPS))
+    return (jnp.sum(x * scale, axis=0)
+            + jnp.asarray(noise_scale, jnp.float32)
+            * noise.astype(jnp.float32))

@@ -1,0 +1,28 @@
+"""Privacy subsystem: measure what the fed runtime leaks, and defend it.
+
+attacks.py   — gradient inversion, activation inversion, membership
+               inference against the artifacts that cross the wire.
+metrics.py   — PSNR/SSIM, distance correlation per split depth, attack
+               AUC/advantage.
+defenses.py  — DP-SGD (per-example clip + noise via kernels/dp_clip), a
+               pre-codec uplink DP stage, and an RDP accountant.
+"""
+from repro.privacy.attacks import (ActivationInversionAttack, delta_to_grad,
+                                   invert_gradients, make_prefix_fn,
+                                   membership_inference, membership_scores,
+                                   plan_boundary_depths)
+from repro.privacy.defenses import (DPUplinkStage, RDPAccountant, dp_epsilon,
+                                    make_dp_d_step, make_uplink_stage,
+                                    rdp_sampled_gaussian)
+from repro.privacy.metrics import (attack_advantage, attack_auc,
+                                   best_match_psnr, distance_correlation,
+                                   psnr, ssim)
+
+__all__ = [
+    "ActivationInversionAttack", "delta_to_grad", "invert_gradients",
+    "make_prefix_fn", "membership_inference", "membership_scores",
+    "plan_boundary_depths", "DPUplinkStage", "RDPAccountant", "dp_epsilon",
+    "make_dp_d_step", "make_uplink_stage", "rdp_sampled_gaussian",
+    "attack_advantage", "attack_auc", "best_match_psnr",
+    "distance_correlation", "psnr", "ssim",
+]

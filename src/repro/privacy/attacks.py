@@ -1,0 +1,251 @@
+"""Honest-but-curious attacks on the artifacts the fed runtime ships.
+
+The paper's privacy claim is that raw data never leaves the device — only
+(a) discriminator parameters/deltas go up the WAN and (b) split-boundary
+activations hop the LAN between a client's devices.  Following *Evaluating
+Privacy Leakage in Split Learning* (Qiu et al.) and PS-FedGAN (Wijesinghe
+et al.), this module measures what each artifact gives away:
+
+  * :func:`invert_gradients` — DLG-style gradient inversion (Zhu et al.
+    2019; cosine matching per Geiping et al. 2020): the server knows the
+    global D it broadcast, the fakes it shipped, and the uplinked delta;
+    it optimizes dummy "real" images until the simulated local gradient
+    matches the observed one.  Exact for one SGD local step (delta is
+    -lr * grad); directional for Adam/多-step deltas — cosine matching is
+    scale-free, which is why it is the default objective.
+  * :class:`ActivationInversionAttack` — a decoder trained on auxiliary
+    data to invert the smashed activations crossing one
+    :class:`~repro.core.split.SplitPlan` boundary (the LAN surface inside
+    a client).  Leakage shrinks with split depth — the frontier
+    bench_privacy.py plots.
+  * :func:`membership_inference` — threshold attack on the trained D
+    (Yeom et al. 2018): D's realness logit is systematically higher on its
+    own training reals than on held-out reals; AUC/advantage quantify the
+    exposure.
+
+All attacks are pure functions of artifacts the threat model grants the
+attacker; none touch the victim's raw data except to *score* the attack.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.dcgan import disc_apply, disc_apply_layer, disc_layer_names
+from repro.optim.optimizers import adamw
+from repro.privacy.metrics import attack_advantage, attack_auc
+
+# loss_fn(params, real_batch, fake_batch) -> scalar  (the D loss the victim
+# trains with; core/gan.d_loss_fn partial-applied over the model config)
+DLossFn = Callable[[Any, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# gradient inversion of the uplinked discriminator delta
+# ---------------------------------------------------------------------------
+
+def flat_grads(tree) -> jnp.ndarray:
+    return jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                            for l in jax.tree.leaves(tree)])
+
+
+def delta_to_grad(delta, lr: float):
+    """One local SGD step: uplinked delta = -lr * grad, inverted exactly.
+    (Adam deltas only preserve direction — feed them to the cosine
+    objective as-is instead.)"""
+    return jax.tree.map(lambda d: -d.astype(jnp.float32) / lr, delta)
+
+
+def _total_variation(x: jnp.ndarray) -> jnp.ndarray:
+    return (jnp.mean(jnp.abs(x[:, 1:] - x[:, :-1]))
+            + jnp.mean(jnp.abs(x[:, :, 1:] - x[:, :, :-1])))
+
+
+def invert_gradients(loss_fn: DLossFn, d_params, target_grads, fakes,
+                     batch_shape: Tuple[int, ...], *, steps: int = 300,
+                     lr: float = 0.1, tv_weight: float = 1e-3,
+                     key: Optional[jax.Array] = None, x0=None
+                     ) -> Tuple[jnp.ndarray, List[float]]:
+    """Reconstruct the victim's real batch from an observed D gradient.
+
+    ``target_grads``: the gradient tree the server inferred from the uplink
+    (see :func:`delta_to_grad`).  ``batch_shape``: (B, H, W, C) of the batch
+    being reconstructed.  Minimizes 1 - cos(sim_grad, target) + TV prior
+    with Adam, projecting onto the valid [-1, 1] image box each step.
+
+    Returns (reconstructed batch, matching-loss history).
+    """
+    key = jax.random.PRNGKey(0) if key is None else key
+    tgt = flat_grads(target_grads)
+    tgt_norm = jnp.linalg.norm(tgt)
+
+    def match_loss(x):
+        g = jax.grad(loss_fn)(d_params, x, fakes)
+        gv = flat_grads(g)
+        cos = jnp.dot(gv, tgt) / jnp.maximum(
+            jnp.linalg.norm(gv) * tgt_norm, 1e-12)
+        return (1.0 - cos) + tv_weight * _total_variation(x)
+
+    opt = adamw(0.9, 0.999, 1e-8)
+    x = (0.1 * jax.random.normal(key, batch_shape, jnp.float32)
+         if x0 is None else jnp.asarray(x0, jnp.float32))
+    state = opt.init(x)
+    lr_arr = jnp.asarray(lr)
+
+    @jax.jit
+    def step(x, state):
+        loss, g = jax.value_and_grad(match_loss)(x)
+        x, state = opt.update(g, state, x, lr_arr)
+        return jnp.clip(x, -1.0, 1.0), state, loss
+
+    history: List[float] = []
+    for _ in range(steps):
+        x, state, loss = step(x, state)
+        history.append(float(loss))
+    return x, history
+
+
+# ---------------------------------------------------------------------------
+# activation inversion at a split boundary
+# ---------------------------------------------------------------------------
+
+def make_prefix_fn(d_params, c, depth: int):
+    """Apply the first ``depth`` discriminator layers: the activation a
+    device at that boundary sees. depth=1 => output of conv0, etc."""
+    names = disc_layer_names(c)[:depth]
+
+    def prefix(x):
+        for n in names:
+            x = disc_apply_layer(n, d_params, x, c)
+        return x
+
+    return prefix
+
+
+def plan_boundary_depths(plan) -> List[int]:
+    """Layer depths at which this plan's activations cross devices (the
+    LAN hops an on-path device can observe)."""
+    depths, li = [], 0
+    for a, b in zip(plan.portions, plan.portions[1:]):
+        li += len(a.layer_names)
+        if a.device_id != b.device_id:
+            depths.append(li)
+    return depths
+
+
+def _decoder_init(key, act_shape, out_shape, width: int = 32):
+    """Resize-conv decoder from (H', W', C') activations to (H, W, C)."""
+    h, cin = act_shape[0], act_shape[2]
+    target_h, cout = out_shape[0], out_shape[2]
+    sizes, chans = [], []
+    while h < target_h:
+        h = min(2 * h, target_h)
+        sizes.append(h)
+        chans.append(width)
+    sizes.append(target_h)          # final refinement conv at full res
+    chans.append(cout)
+    params, keys = [], jax.random.split(key, len(chans))
+    for i, (k, ch) in enumerate(zip(keys, chans)):
+        fan = 3 * 3 * cin
+        params.append({
+            "w": jax.random.normal(k, (3, 3, cin, ch), jnp.float32)
+            * (2.0 / fan) ** 0.5,
+            "b": jnp.zeros((ch,), jnp.float32)})
+        cin = ch
+    # sizes are static structure, kept apart from the trainable tree
+    return params, tuple(sizes)
+
+
+def _decoder_apply(layers, sizes, a: jnp.ndarray) -> jnp.ndarray:
+    x = a.astype(jnp.float32)
+    for i, lp in enumerate(layers):
+        if i < len(sizes):
+            x = jax.image.resize(
+                x, (x.shape[0], sizes[i], sizes[i], x.shape[3]), "bilinear")
+        x = jax.lax.conv_general_dilated(
+            x, lp["w"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + lp["b"]
+        if i < len(layers) - 1:
+            x = jax.nn.leaky_relu(x, 0.2)
+    return jnp.tanh(x)
+
+
+class ActivationInversionAttack:
+    """Decoder attack on one split boundary.
+
+    Threat model: an on-path device (or LAN eavesdropper) observes the
+    smashed activations ``prefix(x)`` and can query the prefix on auxiliary
+    data of the same modality (shadow access — the weakest assumption under
+    which Qiu et al.'s attack applies).  ``train`` fits the decoder on
+    (prefix(aux), aux) pairs; ``reconstruct`` inverts victim activations.
+    """
+
+    def __init__(self, prefix_fn, image_shape: Tuple[int, int, int], *,
+                 width: int = 32, seed: int = 0):
+        self.prefix = prefix_fn
+        self.image_shape = tuple(image_shape)
+        probe = prefix_fn(jnp.zeros((1,) + self.image_shape, jnp.float32))
+        self.act_shape = tuple(probe.shape[1:])
+        self.dec, self.sizes = _decoder_init(
+            jax.random.PRNGKey(seed), self.act_shape, self.image_shape,
+            width)
+        self._opt = adamw(0.9, 0.999, 1e-8)
+        self._state = self._opt.init(self.dec)
+
+    def train(self, aux_images: jnp.ndarray, *, steps: int = 200,
+              batch: int = 32, lr: float = 2e-3, seed: int = 0
+              ) -> List[float]:
+        acts = self.prefix(jnp.asarray(aux_images, jnp.float32))
+        sizes = self.sizes
+
+        def loss_fn(dec, a, y):
+            return jnp.mean((_decoder_apply(dec, sizes, a) - y) ** 2)
+
+        lr_arr = jnp.asarray(lr)
+
+        @jax.jit
+        def step(dec, state, a, y):
+            loss, g = jax.value_and_grad(loss_fn)(dec, a, y)
+            dec, state = self._opt.update(g, state, dec, lr_arr)
+            return dec, state, loss
+
+        rng = np.random.default_rng(seed)
+        history = []
+        for _ in range(steps):
+            idx = rng.integers(0, aux_images.shape[0], batch)
+            self.dec, self._state, l = step(
+                self.dec, self._state, acts[idx],
+                jnp.asarray(aux_images[idx], jnp.float32))
+            history.append(float(l))
+        return history
+
+    def reconstruct(self, victim_images: jnp.ndarray) -> jnp.ndarray:
+        """Invert the activations of (unseen) victim inputs."""
+        return _decoder_apply(self.dec, self.sizes, self.prefix(
+            jnp.asarray(victim_images, jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# membership inference against the trained discriminator
+# ---------------------------------------------------------------------------
+
+def membership_scores(d_params, x: jnp.ndarray, c) -> np.ndarray:
+    """Per-example realness logit — D's confidence the example is from its
+    training distribution (the MIA score)."""
+    return np.asarray(disc_apply(d_params, jnp.asarray(x, jnp.float32),
+                                 c)[:, 0])
+
+
+def membership_inference(d_params, c, member_x, nonmember_x
+                         ) -> Dict[str, float]:
+    """Yeom-style threshold attack: returns auc, advantage, threshold."""
+    ms = membership_scores(d_params, member_x, c)
+    ns = membership_scores(d_params, nonmember_x, c)
+    adv, thr = attack_advantage(ms, ns)
+    return {"auc": attack_auc(ms, ns), "advantage": adv, "threshold": thr,
+            "member_mean": float(ms.mean()),
+            "nonmember_mean": float(ns.mean())}

@@ -1,0 +1,221 @@
+"""Tunable defenses for the artifacts that leave the device.
+
+The paper's privacy argument is architectural (raw data never leaves the
+client); privacy/attacks.py shows the artifacts that DO leave — uplinked
+discriminator deltas and split-boundary activations — still leak.  This
+module makes the defense side of that trade measurable:
+
+  * **DP-SGD** (Abadi et al. 2016) on the device-side discriminator update:
+    per-example L2 clipping + Gaussian noise, fused by the
+    ``kernels/dp_clip`` Pallas kernel (or its pure-JAX reference).  NB: the
+    per-example gradient is taken on singleton batches, so batch-norm
+    statistics are per-example — the standard DP-SGD stance on BN (cross-
+    example coupling would break the per-example sensitivity bound).
+  * **Uplink DP** — clip-and-noise the whole update delta once per round,
+    *before* the transport codec compresses it (a pre-codec stage for
+    ``fed/engine.FederationEngine``).  Weaker than DP-SGD (one clip per
+    round, not per example) but composes with any codec and costs nothing
+    on-device.
+  * **RDP accountant** for the (subsampled) Gaussian mechanism (Mironov
+    2017; Mironov et al. 2019): integer Rényi orders, converted to an
+    (epsilon, delta) spend.  Pure math/numpy — no external dependency.
+
+Config surface: ``RunConfig.privacy`` (config/base.py); the trainer
+(core/gan.py) builds the step/stage from it via :func:`make_dp_d_step` and
+:func:`make_uplink_stage`.
+"""
+from __future__ import annotations
+
+import math
+import zlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dp_clip.ops import dp_clip_noise_tree
+from repro.optim.optimizers import global_norm
+
+# ---------------------------------------------------------------------------
+# RDP accountant — subsampled Gaussian mechanism
+# ---------------------------------------------------------------------------
+
+DEFAULT_ORDERS: Tuple[int, ...] = tuple(range(2, 33)) + (40, 48, 56, 64, 128)
+
+
+def _log_comb(n: int, k: int) -> float:
+    return (math.lgamma(n + 1) - math.lgamma(k + 1)
+            - math.lgamma(n - k + 1))
+
+
+def _logsumexp(xs) -> float:
+    m = max(xs)
+    if m == float("-inf"):
+        return m
+    return m + math.log(sum(math.exp(x - m) for x in xs))
+
+
+def rdp_sampled_gaussian(q: float, noise_multiplier: float,
+                         order: int) -> float:
+    """RDP of one step of the sampled Gaussian mechanism at integer order.
+
+    q: sampling probability; noise_multiplier: sigma (noise stddev / clip).
+    q = 1 is the plain Gaussian mechanism: alpha / (2 sigma^2).  For q < 1
+    the exact integer-order expression (Mironov et al. 2019, eq. 3):
+
+        RDP(a) = log( sum_k C(a,k) (1-q)^(a-k) q^k exp((k^2-k)/(2 s^2)) )
+                 / (a - 1)
+    """
+    if q == 0.0 or noise_multiplier == float("inf"):
+        return 0.0
+    if noise_multiplier <= 0.0:
+        return float("inf")
+    if not 0.0 < q <= 1.0:
+        raise ValueError(f"sampling rate {q} outside (0, 1]")
+    if order < 2 or int(order) != order:
+        raise ValueError(f"integer order >= 2 required, got {order}")
+    s2 = float(noise_multiplier) ** 2
+    if q == 1.0:
+        return order / (2.0 * s2)
+    terms = [_log_comb(order, k) + k * math.log(q)
+             + (order - k) * math.log1p(-q) + (k * k - k) / (2.0 * s2)
+             for k in range(order + 1)]
+    return _logsumexp(terms) / (order - 1)
+
+
+class RDPAccountant:
+    """Tracks cumulative RDP over steps; converts to (epsilon, delta).
+
+    One ``step()`` = one application of the mechanism (one DP-SGD batch, or
+    one noised uplink round).  RDP composes additively across steps.
+    """
+
+    def __init__(self, noise_multiplier: float, sample_rate: float = 1.0,
+                 orders: Tuple[int, ...] = DEFAULT_ORDERS):
+        self.noise_multiplier = float(noise_multiplier)
+        self.sample_rate = float(sample_rate)
+        self.orders = tuple(orders)
+        self._rdp_per_step = [rdp_sampled_gaussian(self.sample_rate,
+                                                   self.noise_multiplier, a)
+                              for a in self.orders]
+        self.steps = 0
+
+    def step(self, num_steps: int = 1) -> None:
+        self.steps += int(num_steps)
+
+    def epsilon(self, delta: float = 1e-5) -> Tuple[float, int]:
+        """Best (epsilon, order) over the tracked orders.
+
+        Classic conversion (Mironov 2017 Prop. 3):
+        eps = RDP(a) - log(delta) / (a - 1).
+        """
+        if self.noise_multiplier <= 0.0 or self.steps == 0:
+            return (float("inf") if self.steps and
+                    self.noise_multiplier <= 0.0 else 0.0,
+                    self.orders[0])
+        best_eps, best_order = float("inf"), self.orders[0]
+        for a, r in zip(self.orders, self._rdp_per_step):
+            eps = self.steps * r - math.log(delta) / (a - 1)
+            if eps < best_eps:
+                best_eps, best_order = eps, a
+        return best_eps, best_order
+
+
+def dp_epsilon(noise_multiplier: float, sample_rate: float, steps: int,
+               delta: float = 1e-5) -> float:
+    """One-shot epsilon for a finished run (benchmarks/examples)."""
+    acct = RDPAccountant(noise_multiplier, sample_rate)
+    acct.step(steps)
+    return acct.epsilon(delta)[0]
+
+
+# ---------------------------------------------------------------------------
+# DP-SGD device-side discriminator step
+# ---------------------------------------------------------------------------
+
+def make_dp_d_step(optimizer, loss_fn, lr: float, clip_norm: float,
+                   noise_multiplier: float, *, use_kernel: bool = False,
+                   interpret: bool = False):
+    """Build the jitted DP-SGD discriminator step.
+
+    ``loss_fn(params, real, fake) -> scalar`` is the batch loss; the step
+    re-evaluates it on singleton batches to get per-example gradients
+    (vmap over examples), privatizes them through the dp_clip kernel
+    (per-example L2 clip to ``clip_norm``, Gaussian noise with stddev
+    ``noise_multiplier * clip_norm`` on the SUM), and feeds the mean to the
+    optimizer.
+
+    Returns ``dp_step(params, opt, real, fake, key) -> (params, opt, loss)``.
+    """
+    lr_arr = jnp.asarray(lr)
+    noise_scale = float(noise_multiplier) * float(clip_norm)
+
+    def one_example(p, r, f):
+        return loss_fn(p, r[None], f[None])
+
+    grad_one = jax.value_and_grad(one_example)
+
+    @jax.jit
+    def dp_step(params, opt, real, fake, key):
+        losses, per_ex = jax.vmap(grad_one, in_axes=(None, 0, 0))(
+            params, real, fake)
+        summed = dp_clip_noise_tree(per_ex, clip_norm, noise_scale, key,
+                                    use_kernel=use_kernel,
+                                    interpret=interpret)
+        b = real.shape[0]
+        grads = jax.tree.map(lambda g: g / b, summed)
+        params, opt = optimizer.update(grads, opt, params, lr_arr)
+        return params, opt, jnp.mean(losses)
+
+    return dp_step
+
+
+# ---------------------------------------------------------------------------
+# uplink delta clip-and-noise — a pre-codec transport stage
+# ---------------------------------------------------------------------------
+
+class DPUplinkStage:
+    """Clip + noise the uplink delta once per round, before the codec.
+
+    The engine calls ``stage(client_id, delta_tree)`` between delta
+    computation and codec round-trip (fed/engine.py).  The delta's GLOBAL
+    L2 norm is clipped to ``clip_norm`` and elementwise Gaussian noise of
+    stddev ``noise_multiplier * clip_norm`` is added, so what the codec
+    compresses (and the honest-but-curious server sees) is already
+    privatized.  Noise keys are deterministic per (seed, client, round) —
+    crc32 of the client id, not Python's salted ``hash``.
+    """
+
+    def __init__(self, clip_norm: float, noise_multiplier: float,
+                 seed: int = 0):
+        self.clip_norm = float(clip_norm)
+        self.noise_multiplier = float(noise_multiplier)
+        self.seed = int(seed)
+        self._round: Dict[str, int] = {}
+
+    def _key(self, cid: str):
+        i = self._round.get(cid, 0)
+        self._round[cid] = i + 1
+        base = jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                  zlib.crc32(cid.encode()) & 0x7FFFFFFF)
+        return jax.random.fold_in(base, i)
+
+    def __call__(self, cid: str, delta):
+        leaves, treedef = jax.tree.flatten(delta)
+        norm = global_norm(delta)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(norm, 1e-12))
+        sigma = self.noise_multiplier * self.clip_norm
+        keys = jax.random.split(self._key(cid), len(leaves))
+        out = [((l.astype(jnp.float32) * scale
+                 + sigma * jax.random.normal(k, l.shape, jnp.float32))
+                .astype(l.dtype))
+               for l, k in zip(leaves, keys)]
+        return jax.tree.unflatten(treedef, out)
+
+
+def make_uplink_stage(priv_cfg) -> Optional[DPUplinkStage]:
+    """cfg.privacy -> pre-codec stage, or None when not in uplink mode."""
+    if priv_cfg is None or not priv_cfg.enabled or priv_cfg.mode != "uplink":
+        return None
+    return DPUplinkStage(priv_cfg.clip_norm, priv_cfg.noise_multiplier,
+                         priv_cfg.seed)

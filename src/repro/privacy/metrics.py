@@ -1,0 +1,131 @@
+"""Leakage metrics: how much did an attack actually recover?
+
+Three families, matching the three attack surfaces (privacy/attacks.py):
+
+  * **reconstruction quality** — PSNR and SSIM between recovered and true
+    images (gradient/activation inversion).  ``best_match_psnr`` handles
+    the permutation ambiguity of batch-level gradient inversion (the
+    attacker recovers the batch as a set, not in order).
+  * **dependence leakage** — distance correlation (Székely et al. 2007)
+    between raw inputs and the smashed activations crossing a split
+    boundary: 0 = independent, 1 = deterministic dependence.  This is the
+    per-split-depth leakage curve of *Evaluating Privacy Leakage in Split
+    Learning*: deeper cuts leak less.
+  * **membership exposure** — attack AUC (rank statistic, threshold-free)
+    and membership advantage max_t (TPR(t) - FPR(t)) (Yeom et al. 2018).
+
+Everything is numpy/jnp only — no sklearn/scipy in the container.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# reconstruction quality
+# ---------------------------------------------------------------------------
+
+def psnr(a: jnp.ndarray, b: jnp.ndarray, data_range: float = 2.0) -> float:
+    """Peak signal-to-noise ratio in dB; images in [-1, 1] => range 2."""
+    mse = float(jnp.mean((jnp.asarray(a, jnp.float32)
+                          - jnp.asarray(b, jnp.float32)) ** 2))
+    if mse <= 0.0:
+        return float("inf")
+    return float(10.0 * np.log10(data_range ** 2 / mse))
+
+
+def _uniform_filter(x: jnp.ndarray, win: int) -> jnp.ndarray:
+    """Mean filter over HxW of (B, H, W, C), VALID windows."""
+    c = x.shape[-1]
+    k = jnp.ones((win, win, 1, 1), jnp.float32) / float(win * win)
+    k = jnp.tile(k, (1, 1, 1, c))
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), k, (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c)
+
+
+def ssim(a: jnp.ndarray, b: jnp.ndarray, data_range: float = 2.0,
+         win: int = 7) -> float:
+    """Mean structural similarity (Wang et al. 2004), uniform window."""
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    c1 = (0.01 * data_range) ** 2
+    c2 = (0.03 * data_range) ** 2
+    mu_a, mu_b = _uniform_filter(a, win), _uniform_filter(b, win)
+    var_a = _uniform_filter(a * a, win) - mu_a * mu_a
+    var_b = _uniform_filter(b * b, win) - mu_b * mu_b
+    cov = _uniform_filter(a * b, win) - mu_a * mu_b
+    num = (2 * mu_a * mu_b + c1) * (2 * cov + c2)
+    den = (mu_a ** 2 + mu_b ** 2 + c1) * (var_a + var_b + c2)
+    return float(jnp.mean(num / den))
+
+
+def best_match_psnr(recon: jnp.ndarray, target: jnp.ndarray,
+                    data_range: float = 2.0) -> float:
+    """Mean over reconstructions of the best PSNR against any target image
+    (gradient inversion recovers the batch up to permutation)."""
+    scores = []
+    for i in range(recon.shape[0]):
+        scores.append(max(psnr(recon[i], target[j], data_range)
+                          for j in range(target.shape[0])))
+    return float(np.mean(scores))
+
+
+# ---------------------------------------------------------------------------
+# dependence leakage at split boundaries
+# ---------------------------------------------------------------------------
+
+def _centered_dist(x: jnp.ndarray) -> jnp.ndarray:
+    """Double-centered pairwise Euclidean distance matrix of (B, D)."""
+    sq = jnp.sum(x * x, axis=1)
+    d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * (x @ x.T), 0.0)
+    d = jnp.sqrt(d2 + 1e-12)
+    return (d - jnp.mean(d, axis=0, keepdims=True)
+            - jnp.mean(d, axis=1, keepdims=True) + jnp.mean(d))
+
+
+def distance_correlation(x: jnp.ndarray, y: jnp.ndarray) -> float:
+    """Sample distance correlation between two batches (leading axis B).
+
+    Leaves are flattened per example; dCor in [0, 1] measures how much the
+    smashed activation y still determines the raw input x.
+    """
+    b = x.shape[0]
+    xa = _centered_dist(jnp.reshape(jnp.asarray(x, jnp.float32), (b, -1)))
+    yb = _centered_dist(jnp.reshape(jnp.asarray(y, jnp.float32), (b, -1)))
+    dcov2 = jnp.mean(xa * yb)
+    dvar_x = jnp.mean(xa * xa)
+    dvar_y = jnp.mean(yb * yb)
+    den = jnp.sqrt(dvar_x * dvar_y)
+    return float(jnp.where(den > 0, jnp.sqrt(jnp.maximum(dcov2, 0.0) /
+                                             jnp.maximum(den, 1e-12)), 0.0))
+
+
+# ---------------------------------------------------------------------------
+# membership exposure
+# ---------------------------------------------------------------------------
+
+def attack_auc(member_scores, nonmember_scores) -> float:
+    """Rank AUC: P(member score > non-member score) + 0.5 P(tie)."""
+    m = np.asarray(member_scores, np.float64).reshape(-1)
+    n = np.asarray(nonmember_scores, np.float64).reshape(-1)
+    gt = (m[:, None] > n[None, :]).sum()
+    eq = (m[:, None] == n[None, :]).sum()
+    return float((gt + 0.5 * eq) / (len(m) * len(n)))
+
+
+def attack_advantage(member_scores, nonmember_scores) -> Tuple[float, float]:
+    """(advantage, threshold): max_t TPR(t) - FPR(t) over all score cuts."""
+    m = np.asarray(member_scores, np.float64).reshape(-1)
+    n = np.asarray(nonmember_scores, np.float64).reshape(-1)
+    best, best_t = 0.0, float("-inf")
+    for t in np.unique(np.concatenate([m, n])):
+        adv = float((m >= t).mean() - (n >= t).mean())
+        if adv > best:
+            best, best_t = adv, float(t)
+    return best, best_t

@@ -108,6 +108,43 @@ def test_topk_error_feedback_conserves_mass():
     assert any(np.count_nonzero(np.asarray(l)) for l in jax.tree.leaves(dec2))
 
 
+def test_int8_codec_zero_range_delta_roundtrips_exact():
+    """All-constant (zero-range) deltas — the common case for frozen or
+    converged leaves — must round-trip without NaN."""
+    zero = {"w": jnp.zeros((8, 8)), "b": jnp.zeros((16,))}
+    dec, nbytes = Int8Codec().roundtrip(zero)
+    for l in jax.tree.leaves(dec):
+        a = np.asarray(l)
+        assert np.all(np.isfinite(a))
+        np.testing.assert_array_equal(a, np.zeros_like(a))
+    assert nbytes == (8 * 8 + 16) + 4 * 2
+    # constant nonzero: q = +/-127 exactly, so the round-trip is exact
+    const = {"w": jnp.full((8, 8), -0.37), "b": jnp.full((16,), 0.5)}
+    dec_c, _ = Int8Codec().roundtrip(const)
+    for a, b in zip(jax.tree.leaves(dec_c), jax.tree.leaves(const)):
+        assert np.all(np.isfinite(np.asarray(a)))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+
+
+def test_topk_codec_k_geq_n_keeps_everything():
+    """frac >= 1 (k >= n per leaf) must not IndexError in lax.top_k and
+    must be the identity on the delta."""
+    t = _tree()
+    for frac in (1.0, 1.5, 7.0):
+        dec, nbytes = TopKCodec(frac=frac, error_feedback=False).roundtrip(t)
+        for a, b in zip(jax.tree.leaves(dec), jax.tree.leaves(t)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-7)
+        # k clamps at n: wire bytes never exceed 8 bytes/element
+        n_elem = sum(l.size for l in jax.tree.leaves(t))
+        assert nbytes == n_elem * 8
+    # tiny leaf (n=1) with tiny frac: k clamps up to 1, not 0
+    tiny = {"s": jnp.asarray([3.0])}
+    dec, nbytes = TopKCodec(frac=1e-6, error_feedback=False).roundtrip(tiny)
+    np.testing.assert_allclose(np.asarray(dec["s"]), [3.0])
+    assert nbytes == 8
+
+
 def test_make_codec_factory():
     assert make_codec("none").name == "none"
     assert make_codec("fp16").name == "fp16"

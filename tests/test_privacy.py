@@ -1,0 +1,440 @@
+"""Privacy subsystem (privacy/ + kernels/dp_clip): attacks, metrics,
+defenses, and the trainer/engine wiring.
+
+Pinned invariants (ISSUE 2 acceptance):
+  * dp_clip Pallas kernel == pure-JAX DP-SGD reference to fp32 tolerance;
+  * gradient-inversion reconstruction PSNR drops measurably when DP noise
+    is enabled, while sync/no-privacy training stays bit-exact with the
+    seed loop.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import DCGANConfig, PrivacyConfig, RunConfig
+from repro.configs.registry import get_config
+from repro.core.devices import Client, Device
+from repro.core.gan import FSLGANTrainer, d_loss_fn
+from repro.core.selection import make_plan
+from repro.core.split import boundary_activations, split_forward
+from repro.data import partition_dirichlet, synthetic_mnist
+from repro.kernels.dp_clip.kernel import dp_clip_noise_kernel
+from repro.kernels.dp_clip.ops import (dp_clip_noise_tree,
+                                       flatten_per_example,
+                                       unflatten_summed)
+from repro.kernels.dp_clip.ref import dp_clip_noise_ref
+from repro.models.dcgan import (disc_apply, disc_apply_layer, disc_init,
+                                disc_layer_costs, disc_layer_names)
+from repro.privacy import (ActivationInversionAttack, RDPAccountant,
+                           attack_advantage, attack_auc, best_match_psnr,
+                           distance_correlation, dp_epsilon,
+                           invert_gradients, make_prefix_fn,
+                           make_uplink_stage, membership_inference,
+                           plan_boundary_depths, psnr,
+                           rdp_sampled_gaussian, ssim)
+from repro.privacy.defenses import DPUplinkStage, make_dp_d_step
+
+KEY = jax.random.PRNGKey(7)
+
+
+# ---------------------------------------------------------------------------
+# kernels/dp_clip: Pallas kernel pinned against the pure-JAX reference
+# ---------------------------------------------------------------------------
+
+DP_CASES = [
+    # (batch, n_params, block_n)
+    (4, 100, 32),          # padding: n % block != 0
+    (8, 5000, 2048),       # multi-block
+    (1, 7, 8),             # single example, tiny leaf
+    (16, 2048, 512),       # aligned
+]
+
+
+@pytest.mark.parametrize("case", DP_CASES)
+def test_dp_clip_kernel_matches_ref(case):
+    b, n, bn = case
+    x = jax.random.normal(KEY, (b, n)) * 3.0
+    z = jax.random.normal(jax.random.fold_in(KEY, 1), (n,))
+    out = dp_clip_noise_kernel(x, 1.0, 0.7, z, block_n=bn, interpret=True)
+    ref = dp_clip_noise_ref(x, 1.0, 0.7, z)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_dp_clip_kernel_zero_grads_and_no_noise():
+    """All-zero per-example grads with sigma=0 emit exact zeros (the
+    NORM_EPS guard must not inject anything)."""
+    out = dp_clip_noise_kernel(jnp.zeros((4, 33)), 1.0, 0.0,
+                               jnp.zeros((33,)), interpret=True)
+    assert np.all(np.isfinite(np.asarray(out)))
+    np.testing.assert_array_equal(np.asarray(out), np.zeros(33, np.float32))
+
+
+def test_dp_clip_semantics_clipping_actually_bounds():
+    """Each example contributes at most clip_norm of L2 mass."""
+    x = jax.random.normal(KEY, (1, 64)) * 100.0      # huge gradient
+    out = dp_clip_noise_ref(x, 0.5, 0.0, jnp.zeros((64,)))
+    assert float(jnp.linalg.norm(out)) == pytest.approx(0.5, rel=1e-5)
+    # small gradients pass through unclipped
+    x2 = jax.random.normal(KEY, (1, 64)) * 1e-3
+    out2 = dp_clip_noise_ref(x2, 0.5, 0.0, jnp.zeros((64,)))
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(x2[0]),
+                               atol=1e-7)
+
+
+def test_dp_clip_tree_kernel_matches_host_path():
+    tree = {"w": jax.random.normal(KEY, (4, 3, 5)),
+            "b": jax.random.normal(jax.random.fold_in(KEY, 2), (4, 7))}
+    t_kernel = dp_clip_noise_tree(tree, 1.0, 0.5, KEY, use_kernel=True,
+                                  interpret=True)
+    t_host = dp_clip_noise_tree(tree, 1.0, 0.5, KEY, use_kernel=False)
+    for a, b in zip(jax.tree.leaves(t_kernel), jax.tree.leaves(t_host)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    # flatten/unflatten round-trips shapes
+    flat, spec = flatten_per_example(tree)
+    assert flat.shape == (4, 3 * 5 + 7)
+    back = unflatten_summed(flat[0], spec)
+    assert jax.tree.structure(back) == jax.tree.structure(tree)
+    assert back["w"].shape == (3, 5) and back["b"].shape == (7,)
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_psnr_ssim_basics():
+    a = jnp.zeros((2, 28, 28, 1))
+    assert psnr(a, a) == float("inf")
+    assert psnr(a, a + 1.0) == pytest.approx(10 * np.log10(4.0))
+    assert ssim(a, a) == pytest.approx(1.0, abs=1e-5)
+    noisy = a + 0.5 * jax.random.normal(KEY, a.shape)
+    assert ssim(a, noisy) < 0.5
+
+
+def test_best_match_psnr_is_permutation_invariant():
+    imgs, _ = synthetic_mnist(4, seed=0)
+    x = jnp.asarray(imgs)
+    perm = x[::-1]
+    assert best_match_psnr(perm, x) == float("inf")
+
+
+def test_distance_correlation_endpoints():
+    x = jax.random.normal(KEY, (32, 10))
+    assert distance_correlation(x, x) == pytest.approx(1.0, abs=1e-4)
+    assert distance_correlation(x, 2.0 * x + 1.0) == pytest.approx(
+        1.0, abs=1e-4)
+    indep = jax.random.normal(jax.random.fold_in(KEY, 1), (32, 10))
+    assert distance_correlation(x, indep) < distance_correlation(x, x)
+
+
+def test_attack_auc_and_advantage():
+    assert attack_auc([3, 4, 5], [0, 1, 2]) == 1.0
+    assert attack_auc([1, 1], [1, 1]) == 0.5
+    adv, thr = attack_advantage([3, 4, 5], [0, 1, 2])
+    assert adv == 1.0 and 2 < thr <= 3
+    adv0, _ = attack_advantage([1, 1], [1, 1])
+    assert adv0 == 0.0
+
+
+# ---------------------------------------------------------------------------
+# RDP accountant
+# ---------------------------------------------------------------------------
+
+def test_rdp_gaussian_q1_closed_form():
+    # plain Gaussian mechanism: RDP(alpha) = alpha / (2 sigma^2)
+    assert rdp_sampled_gaussian(1.0, 2.0, 2) == pytest.approx(2 / 8.0)
+    assert rdp_sampled_gaussian(1.0, 1.0, 8) == pytest.approx(4.0)
+
+
+def test_rdp_subsampling_amplifies():
+    # smaller sampling rate => less RDP per step, at every order
+    for order in (2, 4, 16):
+        full = rdp_sampled_gaussian(1.0, 1.0, order)
+        sub = rdp_sampled_gaussian(0.1, 1.0, order)
+        tiny = rdp_sampled_gaussian(0.01, 1.0, order)
+        assert tiny < sub < full
+
+
+def test_accountant_epsilon_monotonicity():
+    acct = RDPAccountant(1.0, 0.05)
+    acct.step(100)
+    e100 = acct.epsilon(1e-5)[0]
+    acct.step(900)
+    e1000 = acct.epsilon(1e-5)[0]
+    assert 0 < e100 < e1000
+    # more noise => less epsilon at equal steps
+    assert dp_epsilon(2.0, 0.05, 1000) < dp_epsilon(1.0, 0.05, 1000)
+    # no noise => no guarantee
+    assert dp_epsilon(0.0, 0.05, 10) == float("inf")
+    # no steps => nothing spent
+    assert RDPAccountant(1.0, 0.5).epsilon()[0] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# defenses: DP-SGD step + uplink stage
+# ---------------------------------------------------------------------------
+
+def _tiny_loss(params, real, fake):
+    # linear "discriminator" so the DP step's math is inspectable
+    pred_r = jnp.mean(real * params["w"])
+    pred_f = jnp.mean(fake * params["w"])
+    return (pred_r - 1.0) ** 2 + pred_f ** 2
+
+
+def test_dp_step_clip_only_bounds_update():
+    from repro.optim.optimizers import sgd
+    opt = sgd(momentum=0.0)
+    params = {"w": jnp.ones((4, 4))}
+    state = opt.init(params)
+    clip = 0.01
+    step = make_dp_d_step(opt, _tiny_loss, lr=1.0, clip_norm=clip,
+                          noise_multiplier=0.0)
+    real = 10.0 * jax.random.normal(KEY, (8, 4, 4))
+    fake = 10.0 * jax.random.normal(jax.random.fold_in(KEY, 1), (8, 4, 4))
+    new_params, _, loss = step(params, state, real, fake, KEY)
+    # mean of 8 per-example grads each clipped to 0.01 => update <= 0.01
+    upd = float(jnp.linalg.norm(new_params["w"] - params["w"]))
+    assert upd <= clip + 1e-6
+    assert np.isfinite(float(loss))
+
+
+def test_uplink_stage_clips_and_is_deterministic():
+    delta = {"w": 100.0 * jax.random.normal(KEY, (16, 8))}
+    stage = DPUplinkStage(clip_norm=1.0, noise_multiplier=0.0, seed=0)
+    out = stage("c0", delta)
+    assert float(jnp.linalg.norm(out["w"])) == pytest.approx(1.0, rel=1e-4)
+    # same (seed, client, round) => same noise; later round => different
+    s1 = DPUplinkStage(1.0, 0.5, seed=0)
+    s2 = DPUplinkStage(1.0, 0.5, seed=0)
+    a1, a2 = s1("c0", delta), s2("c0", delta)
+    np.testing.assert_array_equal(np.asarray(a1["w"]), np.asarray(a2["w"]))
+    b1 = s1("c0", delta)       # round 1 for s1
+    assert not np.array_equal(np.asarray(a1["w"]), np.asarray(b1["w"]))
+    # factory: disabled / non-uplink configs produce no stage
+    assert make_uplink_stage(PrivacyConfig()) is None
+    assert make_uplink_stage(PrivacyConfig(enabled=True,
+                                           mode="dp_sgd")) is None
+    assert isinstance(make_uplink_stage(
+        PrivacyConfig(enabled=True, mode="uplink")), DPUplinkStage)
+
+
+def test_privacy_config_roundtrips():
+    cfg = RunConfig().override({"privacy.enabled": True,
+                                "privacy.mode": "uplink",
+                                "privacy.noise_multiplier": 1.5})
+    assert cfg.privacy.enabled and cfg.privacy.mode == "uplink"
+    back = RunConfig.from_dict(cfg.to_dict())
+    assert back.privacy.noise_multiplier == 1.5
+
+
+# ---------------------------------------------------------------------------
+# split boundary hook
+# ---------------------------------------------------------------------------
+
+def test_split_forward_hook_sees_each_boundary_and_keeps_output():
+    c = DCGANConfig(base_filters=8)
+    params = disc_init(jax.random.PRNGKey(0), c)
+    costs = disc_layer_costs(c)
+    layers = [(n, costs[n]) for n in disc_layer_names(c)]
+    client = Client("c0", [Device("d0", 1.0, 2), Device("d1", 2.0, 2)])
+    plan = make_plan(client, layers, "sorted_multi", seed=0)
+    x = jax.random.normal(KEY, (2, 28, 28, 1))
+    apply_layer = lambda n, a: disc_apply_layer(n, params, a, c)  # noqa: E731
+    seen = boundary_activations(x, plan, apply_layer)
+    assert len(seen) == plan.num_boundaries
+    depths = plan_boundary_depths(plan)
+    assert len(depths) == plan.num_boundaries
+    for (idx, dev_a, dev_b, act), depth in zip(seen, depths):
+        assert dev_a != dev_b
+        ref = make_prefix_fn(params, c, depth)(x)
+        np.testing.assert_array_equal(np.asarray(act), np.asarray(ref))
+    # the hook must not perturb the forward result
+    out = split_forward(x, plan, apply_layer,
+                        boundary_hook=lambda *a: None)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(disc_apply(params, x, c)))
+
+
+# ---------------------------------------------------------------------------
+# attacks (smoke scale)
+# ---------------------------------------------------------------------------
+
+def test_activation_inversion_leaks_less_with_depth():
+    c = DCGANConfig(base_filters=8)
+    params = disc_init(jax.random.PRNGKey(0), c)
+    aux, _ = synthetic_mnist(128, seed=5)
+    victim, _ = synthetic_mnist(16, seed=9)
+    results = {}
+    for depth in (1, 3):
+        atk = ActivationInversionAttack(make_prefix_fn(params, c, depth),
+                                        (28, 28, 1), seed=0)
+        hist = atk.train(aux, steps=120, batch=32)
+        assert hist[-1] < hist[0]              # the decoder actually learns
+        rec = atk.reconstruct(victim)
+        assert rec.shape == victim.shape
+        results[depth] = {
+            "psnr": psnr(rec, victim),
+            "dcor": distance_correlation(
+                jnp.asarray(victim), atk.prefix(jnp.asarray(victim)))}
+    # deeper cut leaks less, on both the decoder and the dependence metric
+    assert results[3]["psnr"] < results[1]["psnr"]
+    assert results[3]["dcor"] < results[1]["dcor"]
+    # shallow-cut reconstruction is genuinely good
+    assert results[1]["psnr"] > 18.0
+
+
+def test_membership_inference_near_chance_on_fresh_discriminator():
+    c = DCGANConfig(base_filters=8)
+    params = disc_init(jax.random.PRNGKey(0), c)
+    member, _ = synthetic_mnist(64, seed=0)
+    nonmember, _ = synthetic_mnist(64, seed=1)
+    out = membership_inference(params, c, member, nonmember)
+    assert 0.25 < out["auc"] < 0.75           # untrained: no signal
+    assert 0.0 <= out["advantage"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# pinned end-to-end: DP measurably blunts gradient inversion, while the
+# no-privacy path stays bit-exact with the seed loop
+# ---------------------------------------------------------------------------
+
+def _cfg(**over):
+    base = {"shape.global_batch": 8, "fsl.num_clients": 2,
+            "model.dcgan.base_filters": 8}
+    base.update(over)
+    return get_config("dcgan-mnist").override(base)
+
+
+@pytest.fixture(scope="module")
+def parts():
+    imgs, labels = synthetic_mnist(120, seed=0)
+    return partition_dirichlet(imgs, labels, 2, alpha=0.5, seed=0)
+
+
+def test_gradient_inversion_psnr_drops_under_dp_noise():
+    """Acceptance pin: reconstruction PSNR from the uplinked D gradient
+    falls by > 3 dB when DP-SGD clip+noise (sigma=2) privatizes it."""
+    c = DCGANConfig(base_filters=8)
+    params = disc_init(jax.random.PRNGKey(0), c)
+    imgs, _ = synthetic_mnist(4, seed=1)
+    real = jnp.asarray(imgs[:1])
+    fake = 0.3 * jax.random.normal(jax.random.fold_in(KEY, 3),
+                                   (1, 28, 28, 1))
+    loss_fn = functools.partial(d_loss_fn, c=c)
+
+    g_clean = jax.grad(loss_fn)(params, real, fake)
+    rec_clean, hist_clean = invert_gradients(
+        loss_fn, params, g_clean, fake, (1, 28, 28, 1), steps=200,
+        key=jax.random.PRNGKey(7))
+    psnr_clean = best_match_psnr(rec_clean, real)
+
+    per_ex = jax.vmap(lambda r, f: jax.grad(loss_fn)(params, r[None],
+                                                     f[None]),
+                      in_axes=(0, 0))(real, fake)
+    g_dp = dp_clip_noise_tree(per_ex, 1.0, 2.0, jax.random.PRNGKey(11),
+                              use_kernel=True, interpret=True)
+    rec_dp, _ = invert_gradients(
+        loss_fn, params, g_dp, fake, (1, 28, 28, 1), steps=200,
+        key=jax.random.PRNGKey(7))
+    psnr_dp = best_match_psnr(rec_dp, real)
+
+    assert hist_clean[-1] < 0.1              # attack converged on clean grads
+    assert psnr_clean > 10.0                 # and genuinely reconstructs
+    assert psnr_clean - psnr_dp > 3.0        # DP measurably blunts it
+
+
+def test_no_privacy_training_stays_bit_exact_with_seed_loop(parts):
+    """Acceptance pin: the privacy wiring, disabled, changes nothing —
+    engine sync round == seed sequential loop bit-for-bit."""
+    ta = FSLGANTrainer(_cfg(), parts, seed=0)
+    tb = FSLGANTrainer(_cfg(), parts, seed=0)
+    ma = ta.train_epoch(batches_per_client=2)
+    mb = tb.train_epoch_sequential(batches_per_client=2)
+    assert ma["d_loss"] == mb["d_loss"] and ma["g_loss"] == mb["g_loss"]
+    assert "dp_epsilon" not in ma and ta.accountant is None
+    for cid in ta.state.d_params:
+        for a, b in zip(jax.tree.leaves(ta.state.d_params[cid]),
+                        jax.tree.leaves(tb.state.d_params[cid])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_dp_sgd_training_runs_and_accounts(parts):
+    # honest q: batch / smallest client shard (loader samples w/ replacement)
+    q = min(1.0, 8 / min(len(v) for v in parts.values()))
+    t = FSLGANTrainer(_cfg(**{"privacy.enabled": True,
+                              "privacy.noise_multiplier": 0.8,
+                              "privacy.sample_rate": q}), parts, seed=0)
+    m = t.train_epoch(batches_per_client=2)
+    assert np.isfinite(m["d_loss"]) and np.isfinite(m["g_loss"])
+    assert t.accountant.steps == 2 * 2      # 2 clients x 2 batches
+    assert 0 < m["dp_epsilon"] < float("inf")
+    # epsilon grows as training continues
+    m2 = t.train_epoch(batches_per_client=2)
+    assert m2["dp_epsilon"] > m["dp_epsilon"]
+    # vectorized path refuses silently-undefended DP
+    with pytest.raises(NotImplementedError):
+        t.train_epoch_vectorized(batches_per_client=1)
+
+
+def test_uplink_mode_refuses_paths_without_the_stage(parts):
+    """Sequential/vectorized paths have no pre-codec uplink — training
+    there would silently void the configured privacy."""
+    t = FSLGANTrainer(_cfg(**{"privacy.enabled": True,
+                              "privacy.mode": "uplink",
+                              "privacy.noise_multiplier": 0.5}),
+                      parts, seed=0)
+    with pytest.raises(NotImplementedError):
+        t.train_epoch_sequential(batches_per_client=1)
+    with pytest.raises(NotImplementedError):
+        t.train_epoch_vectorized(batches_per_client=1)
+
+
+def test_uplink_stage_survives_engine_rebuild(parts):
+    """Changing batches_per_client rebuilds the engine; the DP stage (and
+    its per-client noise round counters) must persist, or identical noise
+    would be reused across rounds (noise-cancellation attack)."""
+    t = FSLGANTrainer(_cfg(**{"privacy.enabled": True,
+                              "privacy.mode": "uplink",
+                              "privacy.noise_multiplier": 0.5}),
+                      parts, seed=0)
+    t.train_epoch(batches_per_client=1)
+    stage = t.engine.uplink_stage
+    rounds_before = dict(stage._round)
+    t.train_epoch(batches_per_client=2)      # different length => rebuild
+    assert t.engine.uplink_stage is stage
+    for cid, n in rounds_before.items():
+        assert stage._round[cid] > n
+
+
+def test_dp_sgd_with_kernel_runs(parts):
+    t = FSLGANTrainer(_cfg(**{"privacy.enabled": True,
+                              "privacy.noise_multiplier": 0.5,
+                              "privacy.use_kernel": True,
+                              "privacy.kernel_interpret": True}),
+                      parts, seed=0)
+    m = t.train_epoch(batches_per_client=1)
+    assert np.isfinite(m["d_loss"])
+
+
+def test_uplink_dp_composes_with_codec(parts):
+    t = FSLGANTrainer(_cfg(**{"privacy.enabled": True,
+                              "privacy.mode": "uplink",
+                              "privacy.noise_multiplier": 0.3,
+                              "fed.codec": "int8"}), parts, seed=0)
+    t_raw = FSLGANTrainer(_cfg(**{"fed.codec": "int8"}), parts, seed=0)
+    m = t.train_epoch(batches_per_client=1)
+    m_raw = t_raw.train_epoch(batches_per_client=1)
+    assert np.isfinite(m["d_loss"])
+    # the stage rides inside the codec path: wire bytes unchanged
+    assert m["up_mbytes"] == m_raw["up_mbytes"]
+    # per-round accounting: one release per participating client
+    assert t.accountant.steps == 2
+    # ...and the privatized aggregate differs from the raw one
+    diff = max(float(jnp.max(jnp.abs(a - b)))
+               for a, b in zip(
+                   jax.tree.leaves(t.state.d_params["c0"]),
+                   jax.tree.leaves(t_raw.state.d_params["c0"])))
+    assert diff > 0.0

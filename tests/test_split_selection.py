@@ -73,6 +73,32 @@ def test_infeasible_client_dropped_from_round():
     assert set(plans) == {"c0"}
 
 
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_under_capacity_client_raises_infeasible_split(strategy):
+    """Drop rule (paper §4): every strategy refuses a client whose devices
+    cannot hold the whole model, via InfeasibleSplit."""
+    bad = _client([1, 1], [1.0, 0.5])        # capacity 2 < 5 layer units
+    with pytest.raises(InfeasibleSplit):
+        make_plan(bad, LAYERS, strategy, seed=0)
+
+
+def test_plan_all_clients_skips_infeasible_and_keeps_planning():
+    """An infeasible client in the middle of the roster is excluded without
+    aborting the round — later clients still get plans."""
+    ok_a = _client([10], [1.0])
+    bad = Client("c_bad", [Device("d0", 1.0, 1)])
+    ok_b = Client("c_b", [Device("d0", 2.0, 3), Device("d1", 1.0, 3)])
+    plans = plan_all_clients([ok_a, bad, ok_b], LAYERS, "sorted_multi")
+    assert set(plans) == {"c0", "c_b"}
+    for plan in plans.values():
+        assert plan.layers_in_order() == [n for n, _ in LAYERS]
+
+
+def test_plan_all_clients_all_infeasible_returns_empty():
+    bad = [Client(f"c{i}", [Device("d0", 1.0, 1)]) for i in range(3)]
+    assert plan_all_clients(bad, LAYERS, "random_multi") == {}
+
+
 def test_fig2_ordering_paper_pool():
     """The paper's qualitative Fig 2 result: sorted_multi best, random_multi
     worst (compute-dominated regime with slow-but-roomy devices)."""
