@@ -2,17 +2,23 @@
 
 Three questions the runtime makes measurable:
 
-  1. **Dispatch**: vectorized (one jitted vmap program) vs sequential
-     per-client Python loop for the multi-client D round — the speed
-     headline of fed/vectorized.py.
+  1. **Dispatch**: the client program's two backends — per-client loop of
+     jitted steps vs ONE jitted vmap/scan program (fed/programs.py) —
+     against the seed's sequential reference, under the engine.
   2. **Wire**: per-round uplink bytes and virtual round time under each
      codec (none / fp16 / int8 / topk) — what actually crosses the network
      per PS-FedGAN's accounting.
   3. **Scheduling**: sync barrier vs FedAsync vs FedBuff virtual wall-clock
      per round, with and without a straggler deadline.
+
+Besides CSV rows, writes machine-readable ``BENCH_fed_runtime.json`` next
+to this file (gitignored; parity with ``BENCH_privacy.json``) so the
+dispatch/wire/scheduling trajectory is trackable across PRs.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import List, Tuple
 
@@ -21,6 +27,8 @@ import numpy as np
 from repro.configs.registry import get_config
 from repro.core.gan import FSLGANTrainer
 from repro.data import partition_dirichlet, synthetic_mnist
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "BENCH_fed_runtime.json")
 
 
 def _cfg(clients: int, **over):
@@ -49,34 +57,55 @@ def run(fast: bool = False) -> List[Tuple[str, float, str]]:
     reps = 2 if fast else 3
     parts = _parts(clients)
     rows: List[Tuple[str, float, str]] = []
+    results = {"config": {"clients": clients, "batches": batches,
+                          "reps": reps, "fast": fast}}
 
-    # 1. vectorized vs sequential dispatch ---------------------------------
+    # 1. dispatch: seed reference vs engine loop vs engine vectorized -----
     tr_seq = FSLGANTrainer(_cfg(clients), parts, seed=0)
     us_seq = _time_epochs(
         lambda: tr_seq.train_epoch_sequential(batches_per_client=batches),
         reps)
+    tr_loop = FSLGANTrainer(_cfg(clients), parts, seed=0)
+    us_loop = _time_epochs(
+        lambda: tr_loop.train_epoch(batches_per_client=batches,
+                                    backend="loop"), reps)
     tr_vec = FSLGANTrainer(_cfg(clients), parts, seed=0)
     us_vec = _time_epochs(
-        lambda: tr_vec.train_epoch_vectorized(batches_per_client=batches),
-        reps)
+        lambda: tr_vec.train_epoch(batches_per_client=batches,
+                                   backend="vectorized"), reps)
     rows.append(("fed_round_sequential", us_seq,
                  f"clients={clients} batches={batches}"))
-    rows.append(("fed_round_vectorized", us_vec,
-                 f"speedup={us_seq / max(us_vec, 1e-9):.2f}x "
+    rows.append(("fed_round_engine[loop]", us_loop,
+                 "engine sync, per-client jitted steps (bit-exact)"))
+    rows.append(("fed_round_engine[vectorized]", us_vec,
+                 f"speedup={us_loop / max(us_vec, 1e-9):.2f}x vs loop "
                  "(one jitted vmap program)"))
+    results["dispatch"] = {
+        "sequential_us": us_seq, "engine_loop_us": us_loop,
+        "engine_vectorized_us": us_vec,
+        "vectorized_speedup_vs_loop": us_loop / max(us_vec, 1e-9),
+        "vectorized_speedup_vs_sequential": us_seq / max(us_vec, 1e-9)}
 
     # 2. codec sweep: uplink bytes + virtual round time --------------------
+    results["codecs"] = {}
     for codec in ("none", "fp16", "int8", "topk"):
         tr = FSLGANTrainer(_cfg(clients, **{"fed.codec": codec,
                                             "fed.topk_frac": 0.05}),
                            parts, seed=0)
         t0 = time.time()
         m = tr.train_epoch(batches_per_client=batches)
-        rows.append((f"fed_codec[{codec}]", (time.time() - t0) * 1e6,
+        us = (time.time() - t0) * 1e6
+        rows.append((f"fed_codec[{codec}]", us,
                      f"up_mb={m['up_mbytes']:.4f} "
                      f"down_mb={m['down_mbytes']:.4f} "
                      f"round_s={m['round_time_s']:.1f} "
                      f"d_loss={m['d_loss']:.3f}"))
+        results["codecs"][codec] = {
+            "us_per_epoch": us, "up_mbytes": m["up_mbytes"],
+            "down_mbytes": m["down_mbytes"],
+            "round_time_s": m["round_time_s"],
+            "d_loss": None if not np.isfinite(m["d_loss"])
+            else m["d_loss"]}
 
     # 3. scheduling: sync vs async vs buffered, straggler deadline ---------
     scenarios = {
@@ -86,17 +115,29 @@ def run(fast: bool = False) -> List[Tuple[str, float, str]]:
         "fedbuff": {"fed.mode": "fedbuff", "fed.buffer_size": 2,
                     "fed.async_cycles": 2},
     }
+    results["scheduling"] = {}
     for name, over in scenarios.items():
         tr = FSLGANTrainer(_cfg(clients, **over), parts, seed=0)
         t0 = time.time()
         ms = [tr.train_epoch(batches_per_client=batches)
               for _ in range(2 if fast else 3)]
         m = ms[-1]
-        rows.append((f"fed_sched[{name}]",
-                     (time.time() - t0) * 1e6 / len(ms),
+        us = (time.time() - t0) * 1e6 / len(ms)
+        rows.append((f"fed_sched[{name}]", us,
                      f"round_s={m['round_time_s']:.1f} "
                      f"clients={m['num_clients']:.0f} "
                      f"stragglers={m['stragglers']:.0f} "
                      f"staleness={m['mean_staleness']:.2f} "
                      f"d_loss={m['d_loss']:.3f}"))
+        results["scheduling"][name] = {
+            "us_per_epoch": us, "round_time_s": m["round_time_s"],
+            "num_clients": m["num_clients"],
+            "stragglers": m["stragglers"],
+            "mean_staleness": m["mean_staleness"],
+            "d_loss": None if not np.isfinite(m["d_loss"])
+            else m["d_loss"]}
+
+    with open(JSON_PATH, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    rows.append(("fed_runtime_json", 0.0, f"wrote {JSON_PATH}"))
     return rows

@@ -9,8 +9,9 @@ pass (fewer epochs/seeds).
   bench_kernels       —      Pallas kernels vs oracles (+ µs, interpret)
   bench_lm_train      —      LM substrate + FSL cadence
   bench_roofline      —      roofline table from dry-run artifacts
-  bench_fed_runtime   —      federation runtime: vectorized vs sequential
-                             dispatch, codec wire bytes, sync/async rounds
+  bench_fed_runtime   —      federation runtime: loop vs vectorized client-
+                             program dispatch, codec wire bytes, sync/async
+                             rounds; writes BENCH_fed_runtime.json
   bench_privacy       —      privacy frontier: split-depth leakage, DP
                              sigma sweep (eps/utility/inversion PSNR),
                              dp_clip kernel; writes BENCH_privacy.json

@@ -10,7 +10,13 @@ losses:
   fedasync+int8   staleness-weighted async aggregation, int8 uplink codec
   fedbuff+topk    buffered async aggregation, top-k sparsified uplink
 
+``--backend vectorized`` compiles each scenario's client program as one
+jitted vmap-over-clients round instead of the per-client loop (the
+scheduling x backend matrix of fed/programs.py — any scenario composes
+with either backend).
+
 Run: PYTHONPATH=src python examples/fed_async_demo.py [--epochs 4]
+                                                      [--backend loop]
 """
 import argparse
 
@@ -34,6 +40,8 @@ def main():
     ap.add_argument("--epochs", type=int, default=4)
     ap.add_argument("--clients", type=int, default=3)
     ap.add_argument("--batches-per-client", type=int, default=4)
+    ap.add_argument("--backend", choices=("loop", "vectorized"),
+                    default="loop")
     args = ap.parse_args()
 
     imgs, labels = synthetic_mnist(1000, seed=0)
@@ -47,7 +55,8 @@ def main():
         tr = FSLGANTrainer(cfg, parts, seed=0)
         print(f"\n=== {name} ===")
         for ep in range(args.epochs):
-            m = tr.train_epoch(batches_per_client=args.batches_per_client)
+            m = tr.train_epoch(batches_per_client=args.batches_per_client,
+                               backend=args.backend)
             print(f"  ep {ep}: d={m['d_loss']:.3f} g={m['g_loss']:.3f} "
                   f"round={m['round_time_s']:.0f}s "
                   f"clients={m['num_clients']:.0f} "

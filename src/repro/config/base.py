@@ -318,10 +318,22 @@ class FedConfig:
     """Federation runtime knobs (fed/ subsystem): what crosses the wire,
     how it is compressed, and how/when the server aggregates.
 
-    ``mode='sync'`` with ``codec='none'``, full availability and no deadline
-    reproduces the paper's sequential simulation bit-for-bit (pinned test).
+    ``mode='sync'`` with ``codec='none'``, ``backend='loop'``, full
+    availability and no deadline reproduces the paper's sequential
+    simulation bit-for-bit (pinned test).
     """
     mode: str = "sync"                 # sync | fedasync | fedbuff
+    # client-program backend (fed/programs.py): how the local round is
+    # compiled.  "loop" = per-client jitted steps (seed dispatch, bit-exact
+    # reference); "vectorized" = one jitted vmap-over-clients /
+    # scan-over-batches program per dispatch.  Orthogonal to scheduling
+    # and privacy — every mode x backend x privacy cell is supported.
+    backend: str = "loop"              # loop | vectorized
+    # per-client local-round schedules, keyed by client id; unlisted
+    # clients use the defaults (lr_scale 1.0 / the round's
+    # batches_per_client).  Threaded through both backends.
+    client_lr_scales: Dict[str, float] = field(default_factory=dict)
+    client_local_steps: Dict[str, int] = field(default_factory=dict)
     # uplink compression (discriminator params / deltas)
     codec: str = "none"                # none | fp16 | int8 | topk
     topk_frac: float = 0.01            # fraction of entries topk keeps

@@ -5,7 +5,7 @@ Roles:
     generated (fake) images to clients and receives averaged discriminator
     parameters, which is the paper's privacy argument.
   * **Clients** each own a discriminator replica D_c trained on their local
-    real data + the server's fakes. After ``local_steps`` batches the D
+    real data + the server's fakes. After their local round the D
     parameters are FedAvg'd (weighted by client example counts).
   * Within a client, D training is *split* across that client's devices
     per the SplitPlan (core/split.py). The split changes wall-time (priced
@@ -16,13 +16,27 @@ Losses: non-saturating DCGAN BCE.
     L_D = BCE(D(x_real), 1) + BCE(D(G(z)), 0)
     L_G = BCE(D(G(z)), 1)
 
-Scheduling is delegated to the federation runtime (fed/engine.py):
-``train_epoch`` runs one engine round per epoch — synchronous FedAvg by
-default (``cfg.fed``), which reproduces the original sequential loop
-bit-for-bit (``train_epoch_sequential`` keeps that loop as the pinned
-reference), or FedAsync / FedBuff with codecs, stragglers and availability
-churn.  ``train_epoch_vectorized`` replaces the per-client Python loop with
-one jitted vmap-over-clients program (fed/vectorized.py).
+The trainer is composition over three orthogonal axes, all selected by
+config (the scheduling x backend x privacy matrix — see ROADMAP PR-3):
+
+  * **scheduling** (``cfg.fed``): the federation engine runs sync barrier /
+    FedAsync / FedBuff rounds with codecs, straggler deadlines and
+    availability churn (fed/engine.py);
+  * **backend** (``cfg.fed.backend`` or ``train_epoch(backend=...)``): the
+    client-side local round is ONE program (fed/programs.LocalProgram)
+    compiled either as a per-client loop of jitted steps ("loop" — the
+    seed's dispatch pattern, bit-exact) or as a single jitted
+    vmap-over-clients / scan-over-batches program ("vectorized");
+  * **privacy** (``cfg.privacy``): plain step, DP-SGD per-example
+    clip+noise inside the step (either backend), or the pre-codec uplink
+    DP stage in the engine.
+
+Per-client ``lr_scale`` / ``local_steps`` schedules
+(``cfg.fed.client_lr_scales`` / ``client_local_steps``) thread through
+both backends.  ``train_epoch`` runs one engine round per epoch; the
+default (sync, codec none, loop backend, no privacy) reproduces the
+original sequential loop bit-for-bit — ``train_epoch_sequential`` keeps
+that seed loop as the pinned numeric reference.
 """
 from __future__ import annotations
 
@@ -41,9 +55,8 @@ from repro.core.selection import plan_all_clients
 from repro.core.simulate import plan_epoch_time
 from repro.core.split import SplitPlan
 from repro.fed.engine import ClientSpec, FederationEngine
-from repro.fed.transport import fake_batch_bytes
-from repro.fed.vectorized import (fedavg_stacked, make_multi_client_d_step,
-                                  stack_trees, unstack_tree)
+from repro.fed.programs import ClientHyper, LocalProgram, RoundExecutor
+from repro.fed.transport import apply_delta, delta_tree, fake_batch_bytes
 from repro.models.dcgan import (disc_apply, disc_init, disc_layer_costs,
                                 disc_layer_names, gen_apply, gen_init)
 from repro.optim import make_optimizer
@@ -111,9 +124,10 @@ class FSLGANTrainer:
             self.pool, layers, cfg.fsl.selection, cfg.fsl.seed)
         self._rng = np.random.default_rng(seed)
         self._build_steps()
-        # privacy subsystem (cfg.privacy): DP-SGD on the device-side D step
-        # and/or an RDP accountant.  Disabled => every path is bit-exact
-        # with the non-private build (pinned test).
+        # privacy subsystem (cfg.privacy): DP-SGD inside the local step
+        # (either backend — the program compiles it), the pre-codec uplink
+        # stage, and/or an RDP accountant.  Disabled => every path is
+        # bit-exact with the non-private build (pinned test).
         priv = cfg.privacy
         self._dp_step = None
         self.accountant: Optional[RDPAccountant] = None
@@ -131,6 +145,8 @@ class FSLGANTrainer:
                                             priv.sample_rate)
             self._dp_key = jax.random.PRNGKey(priv.seed)
             if priv.mode == "dp_sgd":
+                # sequential-reference DP step (engine backends compile
+                # their own from the same definition in fed/programs)
                 self._dp_step = make_dp_d_step(
                     self.d_optimizer,
                     functools.partial(d_loss_fn, c=self.c),
@@ -167,14 +183,17 @@ class FSLGANTrainer:
             return gen_apply(g_params, z, c)
 
         self._d_step, self._g_step, self._gen = d_step, g_step, gen_batch
-        # single-program multi-client round (fed/vectorized.py)
-        self._v_round = make_multi_client_d_step(
-            self.d_optimizer, functools.partial(d_loss_fn, c=c), lr)
+        # the client program: one local-round definition, compiled as both
+        # the looped and the vectorized backend (fed/programs.py), with the
+        # privacy stage (plain | dp_sgd) selected orthogonally
+        self.program = LocalProgram(
+            self.d_optimizer, functools.partial(d_loss_fn, c=c), lr,
+            privacy=self.cfg.privacy)
 
     def _d_update(self, dp, do, real, fake):
-        """One device-side D step: DP-SGD when ``cfg.privacy`` says so
-        (per-example clip+noise through kernels/dp_clip, accounted per
-        batch), the plain jitted step otherwise (bit-exact seed path)."""
+        """One reference D step for ``train_epoch_sequential``: DP-SGD when
+        ``cfg.privacy`` says so (accounted per batch), the plain jitted
+        step otherwise (bit-exact seed path)."""
         if self._dp_step is not None:
             self._dp_key, k = jax.random.split(self._dp_key)
             if self.accountant is not None:
@@ -200,49 +219,69 @@ class FSLGANTrainer:
         return [cid for cid in self.client_ids if cid in self.plans] \
             or self.client_ids
 
+    def _client_steps(self, cid: str, default: int) -> int:
+        return int(self.cfg.fed.client_local_steps.get(cid, default))
+
     def _ensure_engine(self, batches_per_client: int) -> FederationEngine:
         """(Re)build the engine when the local-round length changes — client
-        compute times are priced per round.  Rebuilding resets the virtual
-        clock and codec residuals, not any training state."""
+        compute times are priced per round (per-client ``local_steps``
+        schedules included).  Rebuilding resets the virtual clock and codec
+        residuals, not any training state."""
         if self.engine is not None \
                 and self._engine_batches == batches_per_client:
             return self.engine
         by_id = {cl.client_id: cl for cl in self.pool}
         specs = []
         for cid in self._active_clients():
+            steps = self._client_steps(cid, batches_per_client)
             if cid in self.plans and cid in by_id:
                 ct = plan_epoch_time(self.plans[cid], by_id[cid],
-                                     batches_per_epoch=batches_per_client,
+                                     batches_per_epoch=steps,
                                      lan_latency_s=self.cfg.fsl.lan_latency_s)
             else:
                 ct = 0.0
-            specs.append(ClientSpec(cid, float(len(self.client_data[cid])),
-                                    ct))
+            specs.append(ClientSpec(
+                cid, float(len(self.client_data[cid])), ct,
+                lr_scale=float(self.cfg.fed.client_lr_scales.get(cid, 1.0)),
+                local_steps=steps))
         self.engine = FederationEngine(
             self.cfg.fed, specs, weighted=self.cfg.fsl.weighted_average,
             uplink_stage=self._uplink_stage)
         self._engine_batches = batches_per_client
         return self.engine
 
-    def _local_update_fn(self, batches_per_client: int):
-        """Client-side work the engine schedules: ``batches_per_client``
-        D-steps from the downloaded params, on local reals + server fakes."""
+    def _sample_round_batches(self, cid: str, steps: int
+                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """``steps`` local batches for one client, sampled in the seed
+        loop's host-RNG order (real_t, z_t alternating): local reals +
+        server fakes.  The server ships fakes; the client never shares
+        ``real``."""
         st = self.state
+        rs, fs = [], []
+        for _ in range(steps):
+            rs.append(self._sample_real(cid, self.batch_size))
+            fs.append(self._gen(st.g_params, self._z(self.batch_size)))
+        return jnp.stack(rs), jnp.stack(fs)
 
-        def local_update(cid: str, start_params):
-            dp, do = start_params, st.d_opt[cid]
-            losses = []
-            for _ in range(batches_per_client):
-                real = self._sample_real(cid, self.batch_size)
-                fake = self._gen(st.g_params, self._z(self.batch_size))
-                # server ships fakes; client never shares `real`
-                dp, do, dl = self._d_update(dp, do, real,
-                                            jax.lax.stop_gradient(fake))
-                losses.append(float(dl))
-            st.d_opt[cid] = do
-            return dp, {"losses": losses}
-
-        return local_update
+    def _bind_round(self, batches_per_client: int, backend: str
+                    ) -> RoundExecutor:
+        """Bind the client program to this round: data sampling, opt-state
+        lookup, per-client hyperparameter schedules, and (under DP-SGD) a
+        fresh round noise key.  Schedules come from the engine's
+        ``ClientSpec``s — the single resolved form of the
+        ``cfg.fed.client_*`` maps (built in ``_ensure_engine``)."""
+        round_key = None
+        if self.program.is_dp:
+            self._dp_key, round_key = jax.random.split(self._dp_key)
+        hyper = {cid: ClientHyper(lr_scale=spec.lr_scale,
+                                  local_steps=spec.local_steps)
+                 for cid, spec in self.engine.specs.items()}
+        return RoundExecutor(
+            self.program, backend=backend,
+            sample=self._sample_round_batches,
+            opt_lookup=lambda cid: self.state.d_opt[cid],
+            default_steps=batches_per_client, hyper=hyper,
+            round_key=round_key)
 
     def _g_updates(self, d_avg, batches: int) -> List[float]:
         """Server G update against the averaged D (never touches real data)."""
@@ -260,26 +299,42 @@ class FSLGANTrainer:
         return metrics
 
     # ------------------------------------------------------------------
-    def train_epoch(self, batches_per_client: int = 24) -> Dict[str, float]:
+    def train_epoch(self, batches_per_client: int = 24,
+                    backend: Optional[str] = None) -> Dict[str, float]:
         """One FL round on the federation engine.
 
         ``cfg.fed`` selects scheduling (sync / fedasync / fedbuff), uplink
-        codec, straggler deadline and availability churn.  The default
-        (sync, codec none, full availability) reproduces the seed's
-        sequential loop bit-for-bit — ``train_epoch_sequential`` below keeps
-        that loop as the pinned reference.
+        codec, straggler deadline and availability churn; ``backend``
+        (default ``cfg.fed.backend``) selects how the client program is
+        compiled — ``"loop"`` (per-client jitted steps; with the default
+        sync/no-codec/no-privacy config this reproduces the seed's
+        sequential loop bit-for-bit) or ``"vectorized"`` (every scheduled
+        client's whole round as ONE jitted vmap/scan program).  Privacy
+        (``cfg.privacy``) composes with either backend: DP-SGD inside the
+        compiled step, uplink DP as the engine's pre-codec stage.
+
+        Optimizer state commits only for clients whose update landed
+        (``RoundReport.opt_states``) — dropped stragglers leave no trace.
         """
+        backend = backend or self.cfg.fed.backend
         st = self.state
         eng = self._ensure_engine(batches_per_client)
-        down_b = batches_per_client * fake_batch_bytes(
+        batch_b = fake_batch_bytes(
             self.batch_size,
             (self.c.image_size, self.c.image_size, self.c.channels))
+        # downlink payload priced per client: a longer local_steps
+        # schedule downloads proportionally more fake batches
+        down_by_client = {cid: spec.local_steps * batch_b
+                          for cid, spec in eng.specs.items()}
         # the global D: every replica equals the last broadcast average
         global_d = st.d_params[self._active_clients()[0]]
         rep = eng.run_round(global_d,
-                            self._local_update_fn(batches_per_client),
-                            down_bytes=down_b)
+                            self._bind_round(batches_per_client, backend),
+                            down_bytes=batches_per_client * batch_b,
+                            down_bytes_by_client=down_by_client)
         d_avg = rep.global_params
+        for cid, opt in rep.opt_states.items():
+            st.d_opt[cid] = opt
         for cid in self.client_ids:
             st.d_params[cid] = jax.tree.map(jnp.copy, d_avg)
 
@@ -287,12 +342,18 @@ class FSLGANTrainer:
                     for l in info["losses"]]
         g_losses = self._g_updates(d_avg, batches_per_client)
         st.step += 1
-        if self.accountant is not None and self.cfg.privacy.mode == "uplink":
-            # one Gaussian-mechanism release per EXECUTED uplink: every
-            # client_infos entry ran _codec_roundtrip once — this counts
-            # async cycles and late-but-shipped straggler updates that
-            # never make rep.participated
-            self.accountant.step(len(rep.client_infos))
+        if self.accountant is not None:
+            if self.cfg.privacy.mode == "dp_sgd":
+                # one Gaussian-mechanism release per EXECUTED DP batch,
+                # whichever backend compiled it — this counts async cycles
+                # and late-but-executed straggler work that never makes
+                # rep.participated
+                self.accountant.step(sum(info.get("steps", 0)
+                                         for _, info in rep.client_infos))
+            elif self.cfg.privacy.mode == "uplink":
+                # one release per executed uplink: every client_infos entry
+                # ran _codec_roundtrip once
+                self.accountant.step(len(rep.client_infos))
         metrics = {
             "d_loss": float(np.mean(d_losses)) if d_losses else float("nan"),
             "g_loss": float(np.mean(g_losses)),
@@ -313,18 +374,17 @@ class FSLGANTrainer:
     def train_epoch_sequential(self, batches_per_client: int = 24
                                ) -> Dict[str, float]:
         """The seed's sequential client loop, kept verbatim as the numeric
-        reference: engine sync mode must match this bit-for-bit (pinned in
-        tests/test_fed_runtime.py)."""
-        if self._uplink_stage is not None:
-            raise NotImplementedError(
-                "uplink DP runs in the engine's pre-codec stage; the "
-                "sequential reference loop has no uplink to privatize — "
-                "use train_epoch (or privacy.mode='dp_sgd')")
+        reference: engine sync mode (loop backend) must match this
+        bit-for-bit (pinned in tests/test_fed_runtime.py).  Uplink DP is
+        applied to each client's round delta exactly as the engine's
+        pre-codec stage would, so the reference also covers
+        ``privacy.mode='uplink'`` with ``codec='none'``."""
         st = self.state
         d_losses = []
         active = self._active_clients()
         for cid in active:
-            dp, do = st.d_params[cid], st.d_opt[cid]
+            start = st.d_params[cid]
+            dp, do = start, st.d_opt[cid]
             for b in range(batches_per_client):
                 real = self._sample_real(cid, self.batch_size)
                 fake = self._gen(st.g_params, self._z(self.batch_size))
@@ -332,7 +392,18 @@ class FSLGANTrainer:
                 dp, do, dl = self._d_update(dp, do, real,
                                             jax.lax.stop_gradient(fake))
                 d_losses.append(float(dl))
+            if self._uplink_stage is not None:
+                # the engine's pre-codec uplink path with the identity
+                # codec: clip+noise the fp32 round delta, then rebase —
+                # the SAME delta_tree/apply_delta arithmetic, so the
+                # engine's sync/no-codec uplink round pins against this
+                # loop structurally
+                dp = apply_delta(
+                    start, self._uplink_stage(cid, delta_tree(dp, start)))
             st.d_params[cid], st.d_opt[cid] = dp, do
+
+        if self.accountant is not None and self.cfg.privacy.mode == "uplink":
+            self.accountant.step(len(active))
 
         # FedAvg over client discriminators (weighted by examples)
         weights = ([len(self.client_data[cid]) for cid in active]
@@ -346,65 +417,9 @@ class FSLGANTrainer:
         metrics = {"d_loss": float(np.mean(d_losses)),
                    "g_loss": float(np.mean(g_losses)),
                    "num_clients": float(len(active))}
-        return self._record(metrics)
-
-    # ------------------------------------------------------------------
-    def train_epoch_vectorized(self, batches_per_client: int = 24
-                               ) -> Dict[str, float]:
-        """Speed path: every client's whole local round in ONE jitted
-        program (vmap over clients, scan over batches — fed/vectorized.py),
-        then stacked FedAvg (optionally the Pallas kernel via
-        ``cfg.fed.kernel_aggregation``).
-
-        Batches are pre-sampled in the same host-RNG order as the
-        sequential loop, so at a fixed seed this matches the sync engine
-        path to fp32 tolerance (the D-step math is identical; only
-        reduction/batching order differs).  Caveat: conv biases feeding
-        batchnorm are analytically dead (BN mean-subtraction cancels them),
-        so their Adam updates amplify fp noise to O(lr) in either path —
-        live parameters and losses agree tightly.
-        """
-        if self.cfg.privacy.enabled:
-            raise NotImplementedError(
-                "train_epoch_vectorized applies neither DP-SGD (no "
-                "per-example clip stage in the scanned step) nor the "
-                "uplink DP stage (no engine) — training here would "
-                "silently void the configured privacy; use train_epoch")
-        st = self.state
-        active = self._active_clients()
-        B, T = self.batch_size, batches_per_client
-        reals_l, fakes_l = [], []
-        for cid in active:
-            rs, fs = [], []
-            for _ in range(T):
-                rs.append(self._sample_real(cid, B))
-                fs.append(self._gen(st.g_params, self._z(B)))
-            reals_l.append(jnp.stack(rs))
-            fakes_l.append(jnp.stack(fs))
-        reals, fakes = jnp.stack(reals_l), jnp.stack(fakes_l)
-
-        stacked_p = stack_trees([st.d_params[cid] for cid in active])
-        stacked_o = stack_trees([st.d_opt[cid] for cid in active])
-        stacked_p, stacked_o, losses = self._v_round(
-            stacked_p, stacked_o, reals, fakes)
-
-        weights = ([float(len(self.client_data[cid])) for cid in active]
-                   if self.cfg.fsl.weighted_average
-                   else [1.0] * len(active))
-        d_avg = fedavg_stacked(
-            stacked_p, weights,
-            use_kernel=self.cfg.fed.kernel_aggregation,
-            interpret=self.cfg.fed.kernel_interpret)
-        for cid, opt in zip(active, unstack_tree(stacked_o, len(active))):
-            st.d_opt[cid] = opt
-        for cid in self.client_ids:
-            st.d_params[cid] = jax.tree.map(jnp.copy, d_avg)
-
-        g_losses = self._g_updates(d_avg, T)
-        st.step += 1
-        metrics = {"d_loss": float(jnp.mean(losses)),
-                   "g_loss": float(np.mean(g_losses)),
-                   "num_clients": float(len(active))}
+        if self.accountant is not None:
+            metrics["dp_epsilon"] = self.accountant.epsilon(
+                self.cfg.privacy.delta)[0]
         return self._record(metrics)
 
     def generate(self, n: int, seed: int = 0) -> np.ndarray:

@@ -3,8 +3,11 @@
   transport   links, byte accounting, compression codecs
   events      event queue + client availability traces
   policies    FedAvg / FedAsync / FedBuff aggregation
-  engine      discrete-event round engine (sync + async scheduling)
-  vectorized  single-program multi-client local training + kernel FedAvg
+  programs    the client-side local round as data: one step definition
+              (plain | DP-SGD), two compilations (loop | vectorized),
+              per-client lr/steps schedules, pure round execution
+  engine      discrete-event round engine (sync + async scheduling) that
+              schedules programs
 """
 from repro.fed.engine import (ClientSpec, FederationEngine,  # noqa: F401
                               RoundReport)
@@ -13,11 +16,12 @@ from repro.fed.events import (AlwaysAvailable,  # noqa: F401
                               make_availability)
 from repro.fed.policies import (AggregationPolicy, ClientUpdate,  # noqa: F401
                                 FedAsync, FedBuff, SyncFedAvg, make_policy)
+from repro.fed.programs import (BACKENDS, CallableProgram,  # noqa: F401
+                                ClientHyper, ClientResult, LocalProgram,
+                                RoundExecutor, as_program, fedavg_stacked,
+                                make_local_step, sequential_d_rounds,
+                                stack_trees, unstack_tree)
 from repro.fed.transport import (Codec, FP16Codec, IdentityCodec,  # noqa: F401
                                  Int8Codec, LinkModel, TopKCodec,
-                                 TrafficLedger, fake_batch_bytes, make_codec,
-                                 tree_bytes)
-from repro.fed.vectorized import (fedavg_stacked,  # noqa: F401
-                                  make_multi_client_d_step,
-                                  sequential_d_rounds, stack_trees,
-                                  unstack_tree)
+                                 TrafficLedger, apply_delta, delta_tree,
+                                 fake_batch_bytes, make_codec, tree_bytes)

@@ -10,19 +10,33 @@ round, every available client
      (``fed/transport``), and
   4. the server aggregates per its policy     (``fed/policies``).
 
+The engine schedules **client programs** (``fed/programs``): an object
+whose ``run(cids, start_params)`` executes the listed clients' local
+rounds and returns pure :class:`~repro.fed.programs.ClientResult` objects
+(params + opt state + info, nothing written back).  Legacy bare
+``local_update(cid, params) -> (params, info)`` callables are adapted
+automatically.
+
 Two scheduling modes:
 
-  * **sync** — barrier semantics, clients execute in roster order (which
-    keeps the host RNG stream identical to the seed trainer: the
-    no-dropout, no-codec sync round is bit-for-bit the seed's
-    ``train_epoch``).  A ``deadline_s`` drops straggler updates whose
-    virtual finish time exceeds it (their LAN+WAN+compute work is still
-    counted — the cost of a dropped client is real).
+  * **sync** — barrier semantics with **batched dispatch**: all clients
+    that can possibly meet the deadline are handed to the program as ONE
+    ``run`` call (one jitted vmap program under the vectorized backend; a
+    roster-order loop — host-RNG identical to the seed trainer — under the
+    loop backend).  A ``deadline_s`` drops straggler updates whose virtual
+    finish time exceeds it (their LAN+WAN+compute work is still counted —
+    the cost of a dropped client is real).
   * **async (fedasync | fedbuff)** — a FINISH/ARRIVE event queue: local
-    training executes when the client's compute finishes *on the global
-    snapshot it downloaded*, the update lands after its uplink delay, and
-    staleness = how many global versions advanced in between.  Fast clients
-    can cycle ``async_cycles`` times per round.
+    training executes per-arrival when the client's compute finishes *on
+    the global snapshot it downloaded*, the update lands after its uplink
+    delay, and staleness = how many global versions advanced in between.
+    Fast clients can cycle ``async_cycles`` times per round.
+
+Optimizer-state purity: executions stash their resulting opt state with
+the (virtual) arrival; only updates that actually land inside the deadline
+commit to ``RoundReport.opt_states``.  A dropped straggler therefore
+leaves no trace in training state — its opt state is never ahead of the
+re-broadcast params (regression-pinned in tests/test_fed_runtime.py).
 
 The wall-clock the engine advances is *virtual* (the paper's Fig-2 time
 model extended with WAN transfers); the actual tensor math runs on
@@ -33,14 +47,14 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
-
 from repro.fed.events import ARRIVE, FINISH, EventQueue, make_availability
 from repro.fed.policies import ClientUpdate, make_policy
-from repro.fed.transport import LinkModel, TrafficLedger, make_codec
+from repro.fed.programs import as_program
+from repro.fed.transport import (LinkModel, TrafficLedger, apply_delta,
+                                 delta_tree, make_codec)
 
-# local_update(client_id, start_params) -> (trained_params, info_dict)
+# legacy program shape: local_update(client_id, start_params)
+#   -> (trained_params, info_dict)
 LocalUpdateFn = Callable[[str, Any], Tuple[Any, Dict[str, Any]]]
 
 
@@ -50,6 +64,8 @@ class ClientSpec:
     client_id: str
     weight: float                 # FedAvg weight (example count)
     compute_time_s: float         # one local round (core/simulate)
+    lr_scale: float = 1.0         # per-client LR schedule (cfg.fed)
+    local_steps: int = 0          # per-client round length (0 = default)
 
 
 @dataclass
@@ -66,6 +82,9 @@ class RoundReport:
     staleness: Dict[str, int] = field(default_factory=dict)   # last per client
     staleness_events: List[int] = field(default_factory=list)  # every arrival
     version: int = 0
+    # final opt state per client whose update landed (participated) —
+    # the caller commits exactly these; dropped work leaves no state
+    opt_states: Dict[str, Any] = field(default_factory=dict)
 
     @property
     def mean_staleness(self) -> float:
@@ -109,17 +128,11 @@ class FederationEngine:
         update."""
         codec = self.codecs[cid]
         if codec.encodes_delta or self.uplink_stage is not None:
-            delta = jax.tree.map(
-                lambda p, b: p.astype(jnp.float32) - b.astype(jnp.float32),
-                params, base_tree)
+            delta = delta_tree(params, base_tree)
             if self.uplink_stage is not None:
                 delta = self.uplink_stage(cid, delta)
             dec, nbytes = codec.roundtrip(delta)
-            decoded = jax.tree.map(
-                lambda b, d: (b.astype(jnp.float32)
-                              + d.astype(jnp.float32)).astype(b.dtype),
-                base_tree, dec)
-            return decoded, nbytes
+            return apply_delta(base_tree, dec), nbytes
         return codec.roundtrip(params)
 
     def _split_roster(self) -> Tuple[List[str], List[str]]:
@@ -130,13 +143,21 @@ class FederationEngine:
         return up, down
 
     # ------------------------------------------------------------------
-    def run_round(self, global_tree, local_update: LocalUpdateFn, *,
-                  down_bytes: int = 0) -> RoundReport:
-        """One FL round. ``down_bytes``: server->client fake payload."""
+    def run_round(self, global_tree, program, *, down_bytes: int = 0,
+                  down_bytes_by_client: Optional[Dict[str, int]] = None
+                  ) -> RoundReport:
+        """One FL round.  ``program``: a client program (``fed/programs``)
+        or a legacy bare callable.  ``down_bytes``: server->client fake
+        payload; ``down_bytes_by_client`` overrides it per client (clients
+        on a longer ``local_steps`` schedule download more fake batches,
+        so their downlink time and bytes must be priced accordingly)."""
+        program = as_program(program)
+        down_by = dict(down_bytes_by_client or {})
+        db = lambda cid: down_by.get(cid, down_bytes)  # noqa: E731
         if self.cfg.mode == "sync":
-            rep = self._run_sync(global_tree, local_update, down_bytes)
+            rep = self._run_sync(global_tree, program, db)
         else:
-            rep = self._run_async(global_tree, local_update, down_bytes)
+            rep = self._run_async(global_tree, program, db)
         self.round_idx += 1
         for cid in rep.traffic.up_bytes:
             self.ledger.record(cid, up=rep.traffic.up_bytes[cid])
@@ -145,30 +166,44 @@ class FederationEngine:
         return rep
 
     # ------------------------------------------------------------------
-    def _run_sync(self, global_tree, local_update, down_bytes) -> RoundReport:
+    def _run_sync(self, global_tree, program, db) -> RoundReport:
         rep = RoundReport(global_params=global_tree)
         participants, rep.unavailable = self._split_roster()
         deadline = self.cfg.deadline_s
-        down_t = self.downlink.transfer_time(down_bytes)
+        down_t = {cid: self.downlink.transfer_time(db(cid))
+                  for cid in participants}
         finishes: List[float] = []
 
+        # batched dispatch: every client that can possibly meet the
+        # deadline executes in ONE program.run call (one jitted vmap
+        # program under the vectorized backend); provably-late clients
+        # never run, so no work — and no host RNG — is spent on them
+        runnable: List[str] = []
         for cid in participants:
-            spec = self.specs[cid]
-            if deadline and down_t + spec.compute_time_s > deadline:
-                # provably late before uplink even starts: skip the work
+            if deadline and down_t[cid] + self.specs[cid].compute_time_s \
+                    > deadline:
                 rep.stragglers.append(cid)
-                rep.traffic.record(cid, down=down_bytes)
-                continue
-            params, info = local_update(cid, global_tree)
-            decoded, up_b = self._codec_roundtrip(cid, global_tree, params)
-            finish = down_t + spec.compute_time_s \
+                rep.traffic.record(cid, down=db(cid))
+            else:
+                runnable.append(cid)
+        results = program.run(runnable, global_tree)
+
+        for res in results:
+            cid = res.client_id
+            spec = self.specs[cid]
+            decoded, up_b = self._codec_roundtrip(cid, global_tree,
+                                                  res.params)
+            finish = down_t[cid] + spec.compute_time_s \
                 + self.uplink.transfer_time(up_b)
-            rep.traffic.record(cid, up=up_b, down=down_bytes)
-            rep.client_infos.append((cid, info))
+            rep.traffic.record(cid, up=up_b, down=db(cid))
+            rep.client_infos.append((cid, res.info))
             if deadline and finish > deadline:
                 rep.stragglers.append(cid)     # ran, but its update is late
-                continue
+                continue                       # nothing commits — not even
+                                               # its optimizer state
             rep.participated.append(cid)
+            if res.opt_state is not None:
+                rep.opt_states[cid] = res.opt_state
             rep.staleness[cid] = 0
             rep.staleness_events.append(0)
             finishes.append(finish)
@@ -191,21 +226,21 @@ class FederationEngine:
         return rep
 
     # ------------------------------------------------------------------
-    def _run_async(self, global_tree, local_update, down_bytes
-                   ) -> RoundReport:
+    def _run_async(self, global_tree, program, db) -> RoundReport:
         rep = RoundReport(global_params=global_tree)
         participants, rep.unavailable = self._split_roster()
         t0 = self.clock
         deadline = self.cfg.deadline_s
-        down_t = self.downlink.transfer_time(down_bytes)
+        down_t = {cid: self.downlink.transfer_time(db(cid))
+                  for cid in participants}
         queue = EventQueue()
         # (snapshot tree, version at download) per in-flight client
         snapshots: Dict[str, Tuple[Any, int]] = {}
 
         for cid in participants:
             snapshots[cid] = (global_tree, self.version)
-            rep.traffic.record(cid, down=down_bytes)
-            queue.push(t0 + down_t + self.specs[cid].compute_time_s,
+            rep.traffic.record(cid, down=db(cid))
+            queue.push(t0 + down_t[cid] + self.specs[cid].compute_time_s,
                        FINISH, cid, payload={"cycle": 1})
 
         last_t = t0
@@ -216,14 +251,18 @@ class FederationEngine:
             spec = self.specs[cid]
             if ev.kind == FINISH:
                 snap_tree, snap_ver = snapshots[cid]
-                params, info = local_update(cid, snap_tree)
-                decoded, up_b = self._codec_roundtrip(cid, snap_tree, params)
+                res = program.run([cid], snap_tree)[0]
+                decoded, up_b = self._codec_roundtrip(cid, snap_tree,
+                                                      res.params)
                 rep.traffic.record(cid, up=up_b)
-                rep.client_infos.append((cid, info))
+                rep.client_infos.append((cid, res.info))
+                # the opt state rides with the arrival: it only commits if
+                # the update actually lands inside the deadline
                 queue.push(ev.time + self.uplink.transfer_time(up_b),
                            ARRIVE, cid,
                            payload={"decoded": decoded, "snap_ver": snap_ver,
-                                    "cycle": ev.payload["cycle"]})
+                                    "cycle": ev.payload["cycle"],
+                                    "opt_state": res.opt_state})
                 continue
             # ARRIVE
             if deadline and ev.time - t0 > deadline:
@@ -240,11 +279,13 @@ class FederationEngine:
                 self.version += 1
             if cid not in rep.participated:
                 rep.participated.append(cid)
+            if ev.payload["opt_state"] is not None:
+                rep.opt_states[cid] = ev.payload["opt_state"]
             cycle = ev.payload["cycle"]
             if cycle < self.cfg.async_cycles:
                 snapshots[cid] = (global_tree, self.version)
-                rep.traffic.record(cid, down=down_bytes)
-                queue.push(ev.time + down_t + spec.compute_time_s,
+                rep.traffic.record(cid, down=db(cid))
+                queue.push(ev.time + down_t[cid] + spec.compute_time_s,
                            FINISH, cid, payload={"cycle": cycle + 1})
 
         global_tree = self.policy.on_round_end(global_tree)

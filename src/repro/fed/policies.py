@@ -13,7 +13,10 @@
 The engine calls ``on_update`` for every arriving update (in virtual-time
 order) and ``on_round_end`` once per round; a policy returns the possibly
 updated global tree plus whether it advanced the global model version
-(which is what staleness counts).
+(which is what staleness counts).  Policies are orthogonal to how the
+client side was compiled (fed/programs.py backends): an update's params
+look the same whether the local round ran as a per-client loop or inside
+the batched vmap program.
 """
 from __future__ import annotations
 

@@ -1,0 +1,419 @@
+"""Client programs: the per-client local round as data, compiled two ways.
+
+The paper's protocol has exactly one client-side job — run ``local_steps``
+discriminator batches from the downloaded params — but the repo used to
+encode it three divergent ways (sequential loop, engine callback,
+vectorized vmap), each supporting a different subset of
+scheduling x backend x privacy.  This module makes the local round a
+first-class *program* so every combination exists:
+
+  * :func:`make_local_step` builds ONE step definition — plain SGD/Adam or
+    DP-SGD (per-example clip + Gaussian noise via ``kernels/dp_clip``,
+    per-example grads from singleton-batch vmap) — selected orthogonally
+    from the backend.
+  * :class:`LocalProgram` compiles that step two ways:
+      - **loop**    — per-client Python loop over jitted steps (the seed's
+                      dispatch pattern; bit-exact reference numerics), and
+      - **vectorized** — the whole multi-client round as one jitted
+                      program: vmap over clients, scan over batches, with
+                      the DP stage *inside* the scanned step.
+  * :class:`RoundExecutor` binds a program to one engine round: data
+    sampling, per-client hyperparameters (``lr_scale`` / ``local_steps``
+    schedules), opt-state lookup and RNG plumbing.  Execution is pure —
+    optimizer states are returned in :class:`ClientResult`, never written
+    back; the engine decides which clients participated and only those
+    states are committed (``RoundReport.opt_states``).
+
+RNG contract: DP noise keys depend only on (round key, client id,
+execution index, batch index), so the looped and vectorized backends draw
+identical noise at a fixed seed — the basis of the pinned
+looped-DP == vectorized-DP test (tests/test_fed_runtime.py).
+
+Stacked-tree utilities (:func:`stack_trees` / :func:`unstack_tree` /
+:func:`fedavg_stacked`) and the :func:`sequential_d_rounds` reference lived
+in the former ``fed/vectorized.py``, which this module absorbs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# loss_fn(params, real_batch, fake_batch) -> scalar loss
+LossFn = Callable[[Any, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+BACKENDS = ("loop", "vectorized")
+
+
+# ---------------------------------------------------------------------------
+# stacked-tree utilities (absorbed from fed/vectorized.py)
+# ---------------------------------------------------------------------------
+
+def stack_trees(trees: Sequence) -> Any:
+    """[tree_0 .. tree_{C-1}] -> one tree with a leading client axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def unstack_tree(stacked, num: int) -> List[Any]:
+    """Inverse of :func:`stack_trees`."""
+    return [jax.tree.map(lambda x: x[i], stacked) for i in range(num)]
+
+
+def fedavg_stacked(stacked_tree, weights, *, use_kernel: bool = False,
+                   interpret: bool = False):
+    """Weighted average over the leading client axis of a stacked tree.
+
+    ``use_kernel`` routes each leaf through the fedavg Pallas kernel
+    (one HBM pass per element); the default is a fused tensordot, which XLA
+    emits the same roofline-bound loop for on CPU.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.sum(w)
+
+    if use_kernel:
+        from repro.kernels.fedavg.ops import fedavg_flat
+
+        def avg(leaf):
+            c = leaf.shape[0]
+            flat = leaf.reshape(c, -1).astype(jnp.float32)
+            out = fedavg_flat(flat, w, interpret=interpret)
+            return out.reshape(leaf.shape[1:]).astype(leaf.dtype)
+    else:
+        def avg(leaf):
+            acc = jnp.tensordot(w, leaf.astype(jnp.float32), axes=(0, 0))
+            return acc.astype(leaf.dtype)
+
+    return jax.tree.map(avg, stacked_tree)
+
+
+def sequential_d_rounds(d_step, params_list: Sequence, opt_list: Sequence,
+                        reals: jnp.ndarray, fakes: jnp.ndarray):
+    """Reference semantics of the vectorized round: the seed's per-client
+    Python loop over the same (C, T, B, ...) batches.  Used by the pinned
+    equivalence test and the benchmark baseline."""
+    out_p, out_o, out_l = [], [], []
+    for i, (p, o) in enumerate(zip(params_list, opt_list)):
+        losses = []
+        for t in range(reals.shape[1]):
+            p, o, l = d_step(p, o, reals[i, t], fakes[i, t])
+            losses.append(l)
+        out_p.append(p)
+        out_o.append(o)
+        out_l.append(jnp.stack(losses))
+    return out_p, out_o, jnp.stack(out_l)
+
+
+# ---------------------------------------------------------------------------
+# the one step definition: plain vs DP-SGD, selected orthogonally
+# ---------------------------------------------------------------------------
+
+def make_local_step(optimizer, loss_fn: LossFn, privacy=None, *,
+                    force_ref: bool = False):
+    """Build ``step(params, opt, real, fake, lr, key) -> (params, opt,
+    loss)`` — the single client-side step both backends compile.
+
+    ``privacy`` is a ``config.PrivacyConfig`` (or None).  When it selects
+    ``dp_sgd``, the step takes per-example gradients on singleton batches
+    (vmap over examples, so batchnorm statistics are per-example — the
+    standard DP-SGD stance on BN), privatizes them through
+    ``kernels/dp_clip`` and feeds the mean to the optimizer; otherwise it
+    is the plain batch step and ``key`` is ignored.
+
+    ``force_ref`` pins the pure-JAX dp_clip reference regardless of
+    ``privacy.use_kernel`` — the vectorized backend sets it because the
+    Pallas kernel is a per-call primitive, and inside the scanned/vmapped
+    program XLA fuses the reference to the same thing.
+    """
+    dp = (privacy is not None and getattr(privacy, "enabled", False)
+          and privacy.mode == "dp_sgd")
+    if not dp:
+        def step(params, opt, real, fake, lr, key):
+            del key
+            loss, grads = jax.value_and_grad(loss_fn)(params, real, fake)
+            params, opt = optimizer.update(grads, opt, params, lr)
+            return params, opt, loss
+        return step
+
+    from repro.kernels.dp_clip.ops import dp_clip_noise_tree
+    clip = float(privacy.clip_norm)
+    noise_scale = float(privacy.noise_multiplier) * clip
+    use_kernel = bool(privacy.use_kernel) and not force_ref
+    interpret = bool(privacy.kernel_interpret)
+
+    def one_example(p, r, f):
+        return loss_fn(p, r[None], f[None])
+
+    grad_one = jax.value_and_grad(one_example)
+
+    def step(params, opt, real, fake, lr, key):
+        losses, per_ex = jax.vmap(grad_one, in_axes=(None, 0, 0))(
+            params, real, fake)
+        summed = dp_clip_noise_tree(per_ex, clip, noise_scale, key,
+                                    use_kernel=use_kernel,
+                                    interpret=interpret)
+        b = real.shape[0]
+        grads = jax.tree.map(lambda g: g / b, summed)
+        params, opt = optimizer.update(grads, opt, params, lr)
+        return params, opt, jnp.mean(losses)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# LocalProgram: one step, two compilations
+# ---------------------------------------------------------------------------
+
+class LocalProgram:
+    """The per-client local round as data: step fn + backend compilations.
+
+    Both backends run the SAME step definition; only the dispatch differs:
+
+      * ``run_looped``     — T jitted step calls for one client (the seed's
+        dispatch pattern; with privacy disabled this is bit-exact with the
+        seed trainer's ``_d_step`` loop);
+      * ``run_vectorized`` — one jitted program for C clients: vmap over
+        the stacked client axis, scan over the T batch axis, per-client
+        learning rates / noise keys as vectors and a (C, T) step mask for
+        heterogeneous ``local_steps`` schedules.
+    """
+
+    def __init__(self, optimizer, loss_fn: LossFn, base_lr: float, *,
+                 privacy=None):
+        self.optimizer = optimizer
+        self.loss_fn = loss_fn
+        self.base_lr = float(base_lr)
+        self.is_dp = (privacy is not None
+                      and getattr(privacy, "enabled", False)
+                      and privacy.mode == "dp_sgd")
+        self.step = jax.jit(make_local_step(optimizer, loss_fn, privacy))
+        self._vrun = self._compile_vectorized(
+            make_local_step(optimizer, loss_fn, privacy, force_ref=True))
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _compile_vectorized(step):
+        def per_client(params, opt, reals, fakes, lr, key, mask):
+            ts = jnp.arange(reals.shape[0])
+
+            def body(carry, xs):
+                p, o = carry
+                real, fake, t, m = xs
+                p2, o2, loss = step(p, o, real, fake, lr,
+                                    jax.random.fold_in(key, t))
+                # masked (padded) steps carry state through unchanged, so
+                # clients with shorter local_steps schedules stop early
+                # inside the shared scan length
+                keep = lambda new, old: jax.tree.map(  # noqa: E731
+                    lambda a, b: jnp.where(m, a, b), new, old)
+                return (keep(p2, p), keep(o2, o)), jnp.where(m, loss, 0.0)
+
+            (params, opt), losses = jax.lax.scan(
+                body, (params, opt), (reals, fakes, ts, mask))
+            return params, opt, losses
+
+        return jax.jit(jax.vmap(per_client))
+
+    # ------------------------------------------------------------------
+    def run_looped(self, params, opt, reals, fakes, *,
+                   lr: Optional[float] = None, key=None
+                   ) -> Tuple[Any, Any, List[float]]:
+        """One client's round: T jitted steps over (T, B, ...) batches."""
+        lr_arr = jnp.float32(self.base_lr if lr is None else lr)
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        losses: List[float] = []
+        for t in range(reals.shape[0]):
+            params, opt, l = self.step(params, opt, reals[t], fakes[t],
+                                       lr_arr, jax.random.fold_in(key, t))
+            losses.append(float(l))
+        return params, opt, losses
+
+    def run_vectorized(self, stacked_params, stacked_opt, reals, fakes, *,
+                       lrs=None, keys=None, mask=None):
+        """C clients' rounds as ONE jitted program.
+
+        ``reals``/``fakes``: (C, T, B, ...).  ``lrs``: (C,) per-client
+        learning rates; ``keys``: (C,) PRNG keys (DP noise); ``mask``:
+        (C, T) bool — False entries are padding steps that leave the
+        client's state untouched.  Returns stacked (params, opt) and
+        (C, T) losses (0.0 at masked slots).
+        """
+        c, t = reals.shape[0], reals.shape[1]
+        if lrs is None:
+            lrs = jnp.full((c,), self.base_lr, jnp.float32)
+        if keys is None:
+            keys = jnp.stack([jax.random.PRNGKey(0)] * c)
+        if mask is None:
+            mask = jnp.ones((c, t), bool)
+        return self._vrun(stacked_params, stacked_opt, reals, fakes,
+                          jnp.asarray(lrs, jnp.float32), keys,
+                          jnp.asarray(mask, bool))
+
+
+# ---------------------------------------------------------------------------
+# RoundExecutor: a program bound to one engine round
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ClientHyper:
+    """Per-client local-round hyperparameters (cfg.fed schedules)."""
+    lr_scale: float = 1.0
+    local_steps: int = 0          # 0 => the round's default
+
+
+@dataclass
+class ClientResult:
+    """Pure output of one client execution — nothing is written back."""
+    client_id: str
+    params: Any
+    opt_state: Any                # None for legacy bare-callable programs
+    info: Dict[str, Any] = field(default_factory=dict)
+
+
+class RoundExecutor:
+    """What the engine schedules: ``run(cids, start_params)`` executes the
+    listed clients' local rounds (one jitted program under the vectorized
+    backend, jitted per-step loops otherwise) and returns pure
+    :class:`ClientResult` objects.
+
+    ``sample(cid, steps) -> (reals, fakes)`` is called once per execution
+    in schedule order, so the host-RNG stream is identical across backends
+    (and, with the loop backend under sync scheduling, identical to the
+    seed's sequential loop).  Optimizer state reads go through a per-round
+    overlay so async re-cycles of the same client chain correctly without
+    mutating the trainer's committed state.
+    """
+
+    def __init__(self, program: LocalProgram, *, backend: str,
+                 sample: Callable[[str, int], Tuple[jnp.ndarray, jnp.ndarray]],
+                 opt_lookup: Callable[[str], Any], default_steps: int,
+                 hyper: Optional[Dict[str, ClientHyper]] = None,
+                 round_key=None):
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"expected one of {BACKENDS}")
+        self.program = program
+        self.backend = backend
+        self.sample = sample
+        self.opt_lookup = opt_lookup
+        self.default_steps = int(default_steps)
+        self.hyper = hyper or {}
+        self.round_key = round_key
+        self._opt_overlay: Dict[str, Any] = {}
+        self._exec_idx: Dict[str, int] = {}
+        # stable roster index for noise-key derivation: folding in a hash
+        # of the id (e.g. crc32) would hand colliding client ids identical
+        # noise tensors — correlated releases the accountant would still
+        # price as independent.  Unlisted clients get indices past the
+        # roster in first-execution order, which is schedule-deterministic
+        # (both backends execute the same schedule).
+        self._cid_index: Dict[str, int] = {cid: i
+                                           for i, cid in enumerate(self.hyper)}
+
+    # ------------------------------------------------------------------
+    def steps_for(self, cid: str) -> int:
+        h = self.hyper.get(cid)
+        return (h.local_steps or self.default_steps) if h \
+            else self.default_steps
+
+    def lr_for(self, cid: str) -> float:
+        h = self.hyper.get(cid)
+        return self.program.base_lr * (h.lr_scale if h else 1.0)
+
+    def _key_for(self, cid: str):
+        """Noise key for this execution: (round key, client roster index,
+        exec index).  Deterministic per schedule, identical across
+        backends, collision-free across clients."""
+        if self.round_key is None:
+            return None
+        if cid not in self._cid_index:
+            self._cid_index[cid] = len(self._cid_index)
+        i = self._exec_idx.get(cid, 0)
+        self._exec_idx[cid] = i + 1
+        base = jax.random.fold_in(self.round_key, self._cid_index[cid])
+        return jax.random.fold_in(base, i)
+
+    def _opt_for(self, cid: str):
+        if cid in self._opt_overlay:
+            return self._opt_overlay[cid]
+        return self.opt_lookup(cid)
+
+    # ------------------------------------------------------------------
+    def run(self, cids: List[str], start_params) -> List[ClientResult]:
+        if not cids:
+            return []
+        if self.backend == "vectorized":
+            return self._run_vectorized(cids, start_params)
+        out = []
+        for cid in cids:
+            steps = self.steps_for(cid)
+            reals, fakes = self.sample(cid, steps)
+            params, opt, losses = self.program.run_looped(
+                start_params, self._opt_for(cid), reals, fakes,
+                lr=self.lr_for(cid), key=self._key_for(cid))
+            self._opt_overlay[cid] = opt
+            out.append(ClientResult(cid, params, opt,
+                                    {"losses": losses, "steps": steps}))
+        return out
+
+    def _run_vectorized(self, cids: List[str], start_params
+                        ) -> List[ClientResult]:
+        steps = [self.steps_for(cid) for cid in cids]
+        t_max = max(steps)
+        reals_l, fakes_l, mask_l = [], [], []
+        for cid, s in zip(cids, steps):
+            # sample exactly `s` batches (same host-RNG draws as the loop
+            # backend); padding slots are zeros under a False mask
+            r, f = self.sample(cid, s)
+            if s < t_max:
+                pad = lambda x: jnp.concatenate(  # noqa: E731
+                    [x, jnp.zeros((t_max - s,) + x.shape[1:], x.dtype)])
+                r, f = pad(r), pad(f)
+            reals_l.append(r)
+            fakes_l.append(f)
+            mask_l.append([True] * s + [False] * (t_max - s))
+        keys = [self._key_for(cid) for cid in cids]
+        if keys[0] is None:
+            keys = [jax.random.PRNGKey(0)] * len(cids)
+        stacked_p = stack_trees([start_params] * len(cids))
+        stacked_o = stack_trees([self._opt_for(cid) for cid in cids])
+        new_p, new_o, losses = self.program.run_vectorized(
+            stacked_p, stacked_o, jnp.stack(reals_l), jnp.stack(fakes_l),
+            lrs=[self.lr_for(cid) for cid in cids],
+            keys=jnp.stack(keys), mask=jnp.asarray(mask_l, bool))
+        out = []
+        for i, (cid, s) in enumerate(zip(cids, steps)):
+            p = jax.tree.map(lambda x: x[i], new_p)
+            o = jax.tree.map(lambda x: x[i], new_o)
+            self._opt_overlay[cid] = o
+            out.append(ClientResult(
+                cid, p, o,
+                {"losses": [float(l) for l in losses[i, :s]], "steps": s}))
+        return out
+
+
+class CallableProgram:
+    """Adapter: a legacy ``local_update(cid, params) -> (params, info)``
+    callable as a program.  Opt state is opaque to the engine (None), so
+    no ``RoundReport.opt_states`` entries are produced."""
+
+    def __init__(self, fn):
+        self.fn = fn
+
+    def run(self, cids: List[str], start_params) -> List[ClientResult]:
+        out = []
+        for cid in cids:
+            params, info = self.fn(cid, start_params)
+            out.append(ClientResult(cid, params, None, info))
+        return out
+
+
+def as_program(obj):
+    """Engine glue: accept a RoundExecutor-like program or a bare callable."""
+    if hasattr(obj, "run"):
+        return obj
+    if callable(obj):
+        return CallableProgram(obj)
+    raise TypeError(f"not a client program: {obj!r}")

@@ -36,6 +36,27 @@ def tree_bytes(tree) -> int:
                    for l in jax.tree.leaves(tree)))
 
 
+def delta_tree(params, base):
+    """The uplinked update delta ``params - base``, leafwise in fp32.
+
+    The ONE definition of delta arithmetic on the wire: the engine's codec
+    path and the sequential reference loop both use this +
+    :func:`apply_delta`, so their bit-exact pin is structural rather than
+    two hand-kept copies."""
+    return jax.tree.map(
+        lambda p, b: p.astype(jnp.float32) - b.astype(jnp.float32),
+        params, base)
+
+
+def apply_delta(base, delta):
+    """Rebase a (possibly privatized/compressed) fp32 delta onto ``base``,
+    cast back to the base dtypes — inverse of :func:`delta_tree`."""
+    return jax.tree.map(
+        lambda b, d: (b.astype(jnp.float32)
+                      + d.astype(jnp.float32)).astype(b.dtype),
+        base, delta)
+
+
 def fake_batch_bytes(batch: int, image_shape: Tuple[int, ...],
                      dtype_bytes: int = 4) -> int:
     """Downlink bytes for one batch of generated fakes."""

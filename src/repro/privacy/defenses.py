@@ -27,20 +27,30 @@ Config surface: ``RunConfig.privacy`` (config/base.py); the trainer
 from __future__ import annotations
 
 import math
-import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.dp_clip.ops import dp_clip_noise_tree
 from repro.optim.optimizers import global_norm
 
 # ---------------------------------------------------------------------------
 # RDP accountant — subsampled Gaussian mechanism
 # ---------------------------------------------------------------------------
 
-DEFAULT_ORDERS: Tuple[int, ...] = tuple(range(2, 33)) + (40, 48, 56, 64, 128)
+INTEGER_ORDERS: Tuple[float, ...] = tuple(range(2, 33)) + (40, 48, 56, 64,
+                                                           128)
+# dense fractional grid interleaving the integer orders: the optimal
+# Rényi order for a given (sigma, q, steps, delta) is rarely an integer,
+# so the integer-only grid systematically over-reports epsilon.  Kept
+# below 64 — the fractional series converges slowly at very high orders
+# and the tail integers cover that regime.
+FRACTIONAL_ORDERS: Tuple[float, ...] = tuple(
+    round(1.25 + 0.25 * i, 2) for i in range(4 * 31)
+    if (1.25 + 0.25 * i) != int(1.25 + 0.25 * i)) + tuple(
+    round(x + 0.5, 1) for x in range(32, 64))
+DEFAULT_ORDERS: Tuple[float, ...] = tuple(sorted(
+    set(INTEGER_ORDERS) | set(FRACTIONAL_ORDERS)))
 
 
 def _log_comb(n: int, k: int) -> float:
@@ -55,16 +65,84 @@ def _logsumexp(xs) -> float:
     return m + math.log(sum(math.exp(x - m) for x in xs))
 
 
+def _log_add(logx: float, logy: float) -> float:
+    """log(exp(logx) + exp(logy)), stable."""
+    a, b = max(logx, logy), min(logx, logy)
+    if b == float("-inf"):
+        return a
+    return a + math.log1p(math.exp(b - a))
+
+
+def _log_sub(logx: float, logy: float) -> float:
+    """log(exp(logx) - exp(logy)); requires logx >= logy."""
+    if logy == float("-inf"):
+        return logx
+    if logx < logy:
+        raise ValueError("log_sub of a larger value")
+    if logx == logy:
+        return float("-inf")
+    return logx + math.log1p(-math.exp(logy - logx))
+
+
+def _log_erfc(x: float) -> float:
+    """log(erfc(x)), with the asymptotic expansion once erfc underflows."""
+    r = math.erfc(x)
+    if r > 1e-300:
+        return math.log(r)
+    return (-math.log(math.pi) / 2 - math.log(x) - x * x
+            - 0.5 / (x * x) + 0.625 / x ** 4
+            - 37.0 / 24.0 / x ** 6 + 353.0 / 64.0 / x ** 8)
+
+
+def _rdp_frac(q: float, sigma: float, alpha: float) -> float:
+    """Sampled-Gaussian RDP at fractional order (Mironov et al. 2019,
+    §3.3): the binomial series over real alpha, each term weighted by
+    Gaussian tail masses (log-erfc), accumulated in log space until the
+    terms vanish.  Matches the integer closed form at integer alpha."""
+    log_a0, log_a1 = float("-inf"), float("-inf")
+    i, z0 = 0, sigma ** 2 * math.log(1.0 / q - 1.0) + 0.5
+    coef_log, coef_sign = 0.0, 1.0            # log|binom(alpha, i)|, sign
+    while True:
+        j = alpha - i
+        log_t0 = coef_log + i * math.log(q) + j * math.log1p(-q)
+        log_t1 = coef_log + j * math.log(q) + i * math.log1p(-q)
+        log_e0 = math.log(0.5) + _log_erfc((i - z0) / (math.sqrt(2) * sigma))
+        log_e1 = math.log(0.5) + _log_erfc((z0 - j) / (math.sqrt(2) * sigma))
+        log_s0 = log_t0 + (i * i - i) / (2.0 * sigma ** 2) + log_e0
+        log_s1 = log_t1 + (j * j - j) / (2.0 * sigma ** 2) + log_e1
+        if coef_sign > 0:
+            log_a0 = _log_add(log_a0, log_s0)
+            log_a1 = _log_add(log_a1, log_s1)
+        else:
+            log_a0 = _log_sub(log_a0, log_s0)
+            log_a1 = _log_sub(log_a1, log_s1)
+        i += 1
+        # next binomial coefficient: binom(a, i) = binom(a, i-1)*(a-i+1)/i
+        factor = (alpha - i + 1.0) / i
+        if factor == 0.0:
+            break
+        coef_log += math.log(abs(factor))
+        if factor < 0.0:
+            coef_sign = -coef_sign
+        if max(log_s0, log_s1) < -30.0 and i > alpha:
+            break
+    return _log_add(log_a0, log_a1) / (alpha - 1.0)
+
+
 def rdp_sampled_gaussian(q: float, noise_multiplier: float,
-                         order: int) -> float:
-    """RDP of one step of the sampled Gaussian mechanism at integer order.
+                         order: float) -> float:
+    """RDP of one step of the sampled Gaussian mechanism at any real
+    order > 1 (integer or fractional).
 
     q: sampling probability; noise_multiplier: sigma (noise stddev / clip).
-    q = 1 is the plain Gaussian mechanism: alpha / (2 sigma^2).  For q < 1
-    the exact integer-order expression (Mironov et al. 2019, eq. 3):
+    q = 1 is the plain Gaussian mechanism: alpha / (2 sigma^2) for any real
+    alpha.  For q < 1, integer orders use the exact binomial expression
+    (Mironov et al. 2019, eq. 3):
 
         RDP(a) = log( sum_k C(a,k) (1-q)^(a-k) q^k exp((k^2-k)/(2 s^2)) )
                  / (a - 1)
+
+    and fractional orders the real-alpha series (:func:`_rdp_frac`).
     """
     if q == 0.0 or noise_multiplier == float("inf"):
         return 0.0
@@ -72,11 +150,14 @@ def rdp_sampled_gaussian(q: float, noise_multiplier: float,
         return float("inf")
     if not 0.0 < q <= 1.0:
         raise ValueError(f"sampling rate {q} outside (0, 1]")
-    if order < 2 or int(order) != order:
-        raise ValueError(f"integer order >= 2 required, got {order}")
+    if order <= 1:
+        raise ValueError(f"order > 1 required, got {order}")
     s2 = float(noise_multiplier) ** 2
     if q == 1.0:
         return order / (2.0 * s2)
+    if int(order) != order:
+        return _rdp_frac(q, float(noise_multiplier), float(order))
+    order = int(order)
     terms = [_log_comb(order, k) + k * math.log(q)
              + (order - k) * math.log1p(-q) + (k * k - k) / (2.0 * s2)
              for k in range(order + 1)]
@@ -145,27 +226,25 @@ def make_dp_d_step(optimizer, loss_fn, lr: float, clip_norm: float,
     ``noise_multiplier * clip_norm`` on the SUM), and feeds the mean to the
     optimizer.
 
+    A thin lr-baking wrapper over ``fed/programs.make_local_step`` — the
+    DP step definition exists exactly once, so the sequential reference
+    and both engine backends can never drift apart.
+
     Returns ``dp_step(params, opt, real, fake, key) -> (params, opt, loss)``.
     """
+    from repro.config import PrivacyConfig
+    from repro.fed.programs import make_local_step
+
+    step = make_local_step(
+        optimizer, loss_fn,
+        PrivacyConfig(enabled=True, mode="dp_sgd", clip_norm=clip_norm,
+                      noise_multiplier=noise_multiplier,
+                      use_kernel=use_kernel, kernel_interpret=interpret))
     lr_arr = jnp.asarray(lr)
-    noise_scale = float(noise_multiplier) * float(clip_norm)
-
-    def one_example(p, r, f):
-        return loss_fn(p, r[None], f[None])
-
-    grad_one = jax.value_and_grad(one_example)
 
     @jax.jit
     def dp_step(params, opt, real, fake, key):
-        losses, per_ex = jax.vmap(grad_one, in_axes=(None, 0, 0))(
-            params, real, fake)
-        summed = dp_clip_noise_tree(per_ex, clip_norm, noise_scale, key,
-                                    use_kernel=use_kernel,
-                                    interpret=interpret)
-        b = real.shape[0]
-        grads = jax.tree.map(lambda g: g / b, summed)
-        params, opt = optimizer.update(grads, opt, params, lr_arr)
-        return params, opt, jnp.mean(losses)
+        return step(params, opt, real, fake, lr_arr, key)
 
     return dp_step
 
@@ -182,8 +261,11 @@ class DPUplinkStage:
     L2 norm is clipped to ``clip_norm`` and elementwise Gaussian noise of
     stddev ``noise_multiplier * clip_norm`` is added, so what the codec
     compresses (and the honest-but-curious server sees) is already
-    privatized.  Noise keys are deterministic per (seed, client, round) —
-    crc32 of the client id, not Python's salted ``hash``.
+    privatized.  Noise keys are deterministic per (seed, client index,
+    round): clients are indexed by first appearance — schedule-
+    deterministic, and collision-free unlike hashing the id (colliding
+    ids would silently share noise tensors, correlating releases the
+    accountant prices as independent).
     """
 
     def __init__(self, clip_norm: float, noise_multiplier: float,
@@ -192,12 +274,15 @@ class DPUplinkStage:
         self.noise_multiplier = float(noise_multiplier)
         self.seed = int(seed)
         self._round: Dict[str, int] = {}
+        self._index: Dict[str, int] = {}
 
     def _key(self, cid: str):
+        if cid not in self._index:
+            self._index[cid] = len(self._index)
         i = self._round.get(cid, 0)
         self._round[cid] = i + 1
         base = jax.random.fold_in(jax.random.PRNGKey(self.seed),
-                                  zlib.crc32(cid.encode()) & 0x7FFFFFFF)
+                                  self._index[cid])
         return jax.random.fold_in(base, i)
 
     def __call__(self, cid: str, delta):
