@@ -1,6 +1,6 @@
 """Privacy frontier benchmarks (privacy/ subsystem).
 
-Three measured surfaces, mirroring the attack suite:
+Four measured surfaces, mirroring the attack suite:
 
   1. **Split-depth leakage** — distance correlation between raw inputs and
      the smashed activation at each discriminator depth, plus the boundary
@@ -10,7 +10,11 @@ Three measured surfaces, mirroring the attack suite:
      accountant epsilon, and gradient-inversion reconstruction PSNR
      against the uplinked gradient (leakage).  The leakage-vs-accuracy-
      vs-epsilon trade the ROADMAP asks for.
-  3. **Kernel** — dp_clip Pallas kernel (interpret) vs its pure-JAX
+  3. **Shipped-boundary attack** — run an actual split training round
+     (``cfg.split`` enabled) per boundary stage and attack the tensors it
+     really ships (post-codec, post-DP-noise): per-boundary dCor + decoder
+     inversion PSNR + wire bytes.  The executed-split counterpart of (1).
+  4. **Kernel** — dp_clip Pallas kernel (interpret) vs its pure-JAX
      reference, like bench_kernels' other entries.
 
 Besides CSV rows, writes machine-readable ``BENCH_privacy.json`` next to
@@ -37,8 +41,9 @@ from repro.data import partition_dirichlet, synthetic_mnist
 from repro.kernels.dp_clip.ops import dp_clip_noise_tree
 from repro.kernels.dp_clip.ref import dp_clip_noise_ref
 from repro.models.dcgan import disc_init, disc_layer_costs, disc_layer_names
-from repro.privacy import (best_match_psnr, distance_correlation,
-                           invert_gradients, make_prefix_fn,
+from repro.privacy import (ActivationInversionAttack, best_match_psnr,
+                           distance_correlation, invert_gradients,
+                           make_prefix_fn, make_shipped_prefix_fn,
                            plan_boundary_depths)
 
 JSON_PATH = os.path.join(os.path.dirname(__file__), "BENCH_privacy.json")
@@ -119,6 +124,51 @@ def _dp_frontier(clients: int, batches: int, epochs: int, sigmas, parts):
     return points
 
 
+def _split_boundary_attack(fast: bool, parts):
+    """Attack the boundary tensors an EXECUTED split round actually ships.
+
+    For each boundary stage, run one real split training round
+    (cfg.split enabled), then target the post-stage tensors
+    (``make_shipped_prefix_fn``) with dCor + a decoder inversion — the
+    leakage of the deployment, not of a separate clean forward."""
+    stages = ["identity", "int8"] if fast else ["identity", "fp16", "int8",
+                                                "dp"]
+    dec_steps = 30 if fast else 80
+    probe_n = 32 if fast else 64
+    points = []
+    for stage in stages:
+        over = {"split.enabled": True, "split.boundary_stage": stage,
+                "split.stage_clip": 5.0, "split.stage_sigma": 0.5}
+        tr = FSLGANTrainer(_cfg(2, **over), parts, seed=0)
+        m = tr.train_epoch(batches_per_client=1)
+        # deepest-split client => per-boundary rows actually sweep depth
+        cid = max(tr._active_clients(),
+                  key=lambda c: tr.split_execs[c].num_boundaries)
+        ex = tr.split_execs[cid]
+        d_params = tr.state.d_params[cid]
+        aux, _ = synthetic_mnist(probe_n, seed=5)
+        victim, _ = synthetic_mnist(16, seed=9)
+        aux, victim = jnp.asarray(aux), jnp.asarray(victim)
+        for b in range(ex.num_boundaries):
+            prefix = make_shipped_prefix_fn(ex, d_params, b,
+                                            key=jax.random.PRNGKey(13))
+            atk = ActivationInversionAttack(prefix, (28, 28, 1), width=16)
+            atk.train(aux, steps=dec_steps, batch=16)
+            rec = atk.reconstruct(victim)
+            points.append({
+                "stage": stage,
+                "boundary": b,
+                "depth": ex.boundaries[b].depth,
+                # priced at the ROUND's batch size: these rows reconcile
+                # with round_lan_mbytes (x 2 directions x passes x steps)
+                "wire_bytes": ex.stage.wire_bytes(ex.boundary_shapes(
+                    d_params, (tr.batch_size,) + victim.shape[1:])[b]),
+                "dcor": distance_correlation(victim, prefix(victim)),
+                "psnr_db": best_match_psnr(rec, victim),
+                "round_lan_mbytes": float(m["lan_mbytes"])})
+    return points
+
+
 def _kernel_rows(reps: int) -> List[Tuple[str, float, str]]:
     b, n = 8, 1 << 16
     x = jax.random.normal(jax.random.PRNGKey(0), (b, n))
@@ -172,12 +222,23 @@ def run(fast: bool = False) -> List[Tuple[str, float, str]]:
                      f"eps={p['epsilon']:.2f} d_loss={p['d_loss']:.3f} "
                      f"inv_psnr={p['inversion_psnr_db']:.2f}dB"))
 
+    t0 = time.time()
+    boundary_attack = _split_boundary_attack(fast, parts)
+    rows.append(("privacy_split_boundary_attack", (time.time() - t0) * 1e6,
+                 f"{len(boundary_attack)} (stage, boundary) cells"))
+    for p in boundary_attack:
+        rows.append((f"privacy_shipped[{p['stage']}/b{p['boundary']}]", 0.0,
+                     f"depth={p['depth']} dcor={p['dcor']:.3f} "
+                     f"psnr={p['psnr_db']:.2f}dB "
+                     f"wire={p['wire_bytes']}B"))
+
     rows.extend(_kernel_rows(2 if fast else 4))
 
     with open(JSON_PATH, "w") as f:
         json.dump({"split_depth_dcor": {str(k): v
                                         for k, v in depth_dcor.items()},
                    "strategy_boundaries": strat_depths,
-                   "dp_frontier": frontier}, f, indent=2)
+                   "dp_frontier": frontier,
+                   "split_boundary_attack": boundary_attack}, f, indent=2)
     rows.append(("privacy_json", 0.0, JSON_PATH))
     return rows

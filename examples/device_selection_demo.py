@@ -1,5 +1,11 @@
 """Device-selection walkthrough (paper §4): inspect the plans each strategy
-produces for one heterogeneous client, then price them.
+produces for one heterogeneous client, then price them with the analytic
+hop model.
+
+This is the PLAN-ONLY view.  Since ISSUE 4 the plan also *executes*:
+``examples/split_training_demo.py`` runs a federated round through the
+split (staged forward/backward, boundary stages, measured LAN bytes) and
+is the recommended walkthrough.
 
 Run: PYTHONPATH=src python examples/device_selection_demo.py
 """
@@ -36,6 +42,9 @@ def main():
                             for p in plan.portions)
         print(f"\n{strat} (epoch {t:.1f}s, {plan.num_boundaries} LAN hops):")
         print(f"  {route}")
+
+    print("\nnext: examples/split_training_demo.py EXECUTES a plan — "
+          "staged training, measured LAN bytes, boundary leakage.")
 
 
 if __name__ == "__main__":

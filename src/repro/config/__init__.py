@@ -3,5 +3,5 @@ from repro.config.base import (  # noqa: F401
     INPUT_SHAPES, MOE, SSM, VLM, DCGANConfig, EncDecConfig, FedConfig,
     FSLConfig, MLAConfig, ModelConfig, MoEConfig, OptimConfig, ParallelConfig,
     PrivacyConfig, RGLRUConfig, RWKVConfig, RunConfig, ShapeConfig,
-    reduce_for_smoke,
+    SplitConfig, reduce_for_smoke,
 )

@@ -358,6 +358,32 @@ class FedConfig:
 
 
 @dataclass
+class SplitConfig:
+    """Executed split training (core/split.SplitExecution).
+
+    ``enabled=False`` keeps the seed behavior: the SplitPlan only *prices*
+    the round (analytic 50 ms hops) while training runs the monolithic D.
+    ``enabled=True`` compiles each client's plan into the local step itself:
+    forward/backward run device-segment by device-segment, every boundary
+    tensor (activation fwd, activation-grad bwd) passes through the
+    ``boundary_stage``, and round time + LAN bytes are priced from the
+    measured per-boundary payloads instead of the hop constant.
+    """
+    enabled: bool = False
+    # planner strategy override; "" uses cfg.fsl.selection
+    strategy: str = ""
+    # what crosses each LAN boundary: identity | fp16 | int8 | topk | dp
+    boundary_stage: str = "identity"
+    topk_frac: float = 0.01            # topk stage keep fraction
+    stage_clip: float = 1.0            # dp stage: per-example L2 clip
+    stage_sigma: float = 0.0           # dp stage: noise multiplier
+    seed: int = 0                      # stage noise stream (dp stage)
+    # LAN serialization rate for measured-bytes pricing (latency comes
+    # from cfg.fsl.lan_latency_s, the paper's 50 ms)
+    lan_bandwidth_bps: float = 100e6
+
+
+@dataclass
 class PrivacyConfig:
     """Privacy subsystem knobs (privacy/ + kernels/dp_clip).
 
@@ -408,6 +434,7 @@ class RunConfig:
     optim: OptimConfig = field(default_factory=OptimConfig)
     fsl: FSLConfig = field(default_factory=FSLConfig)
     fed: FedConfig = field(default_factory=FedConfig)
+    split: SplitConfig = field(default_factory=SplitConfig)
     privacy: PrivacyConfig = field(default_factory=PrivacyConfig)
     shape: ShapeConfig = field(default_factory=lambda: INPUT_SHAPES["train_4k"])
     seed: int = 0
@@ -482,7 +509,8 @@ _NESTED = {
                   "rglru": RGLRUConfig, "encdec": EncDecConfig, "dcgan": DCGANConfig},
     RunConfig: {"model": ModelConfig, "parallel": ParallelConfig,
                 "optim": OptimConfig, "fsl": FSLConfig, "fed": FedConfig,
-                "privacy": PrivacyConfig, "shape": ShapeConfig},
+                "split": SplitConfig, "privacy": PrivacyConfig,
+                "shape": ShapeConfig},
 }
 
 

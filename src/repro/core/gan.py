@@ -8,9 +8,15 @@ Roles:
     real data + the server's fakes. After their local round the D
     parameters are FedAvg'd (weighted by client example counts).
   * Within a client, D training is *split* across that client's devices
-    per the SplitPlan (core/split.py). The split changes wall-time (priced
-    by core/simulate.py), not math — split_forward == monolithic forward is
-    a pinned test invariant, so the simulation trains the monolithic D.
+    per the SplitPlan (core/split.py).  With ``cfg.split.enabled`` the plan
+    IS the local step: forward/backward execute device-segment by
+    device-segment (SplitExecution), every boundary tensor passes the
+    configured boundary stage (identity | transport codec | DP noise), and
+    round time + LAN bytes are priced from the measured per-boundary
+    payloads.  Under the identity stage this is bit-exact with the
+    monolithic step (pinned invariant); disabled, the plan only prices
+    wall-time analytically and the monolithic D trains as in the paper's
+    Colab runs.
 
 Losses: non-saturating DCGAN BCE.
     L_D = BCE(D(x_real), 1) + BCE(D(G(z)), 0)
@@ -53,12 +59,13 @@ from repro.core.devices import make_pool
 from repro.core.fedavg import fedavg
 from repro.core.selection import plan_all_clients
 from repro.core.simulate import plan_epoch_time
-from repro.core.split import SplitPlan
+from repro.core.split import SplitExecution, SplitPlan, make_boundary_stage
 from repro.fed.engine import ClientSpec, FederationEngine
 from repro.fed.programs import ClientHyper, LocalProgram, RoundExecutor
 from repro.fed.transport import apply_delta, delta_tree, fake_batch_bytes
-from repro.models.dcgan import (disc_apply, disc_init, disc_layer_costs,
-                                disc_layer_names, gen_apply, gen_init)
+from repro.models.dcgan import (disc_apply, disc_apply_layer, disc_init,
+                                disc_layer_costs, disc_layer_names,
+                                gen_apply, gen_init)
 from repro.optim import make_optimizer
 from repro.privacy.defenses import (RDPAccountant, make_dp_d_step,
                                     make_uplink_stage)
@@ -115,13 +122,17 @@ class FSLGANTrainer:
                       for cid in self.client_ids},
             d_opt={cid: self.d_optimizer.init(d0) for cid in self.client_ids},
         )
-        # split planning (prices the wall-time; see simulate.py)
+        # split planning.  cfg.split.enabled compiles each plan into the
+        # executed local step (core/split.SplitExecution); otherwise the
+        # plan only prices the round (analytic hop model) and training
+        # runs the monolithic D.
         self.pool = make_pool(cfg.fsl.heterogeneity, cfg.fsl.num_clients,
                               cfg.fsl.devices_per_client, cfg.fsl.seed)
         costs = disc_layer_costs(self.c)
         layers = [(n, costs[n]) for n in disc_layer_names(self.c)]
         self.plans: Dict[str, SplitPlan] = plan_all_clients(
-            self.pool, layers, cfg.fsl.selection, cfg.fsl.seed)
+            self.pool, layers, cfg.split.strategy or cfg.fsl.selection,
+            cfg.fsl.seed)
         self._rng = np.random.default_rng(seed)
         self._build_steps()
         # privacy subsystem (cfg.privacy): DP-SGD inside the local step
@@ -183,12 +194,43 @@ class FSLGANTrainer:
             return gen_apply(g_params, z, c)
 
         self._d_step, self._g_step, self._gen = d_step, g_step, gen_batch
+        # executed split (cfg.split): each feasible plan compiles into a
+        # staged local step whose boundary tensors pass the configured
+        # stage; measured per-step LAN bytes are cached for pricing
+        self.split_execs: Dict[str, SplitExecution] = {}
+        self._split_step_bytes: Dict[str, int] = {}
+        self._split_hop_events: Dict[str, List[int]] = {}
+        if self.cfg.split.enabled:
+            stage = make_boundary_stage(self.cfg.split)
+            apply_layer = functools.partial(disc_apply_layer, c=c)
+            tails = (functools.partial(bce_logits, target=1.0),
+                     functools.partial(bce_logits, target=0.0))
+            x_shape = (self.batch_size, c.image_size, c.image_size,
+                       c.channels)
+            # wire bytes are a pure function of (split signature, x_shape)
+            # — measure once per signature, not once per client
+            bytes_by_sig: Dict[Any, Tuple[int, List[Dict[str, int]]]] = {}
+            for cid, plan in self.plans.items():
+                ex = SplitExecution(plan, apply_layer, tails, stage=stage)
+                self.split_execs[cid] = ex
+                if ex.signature not in bytes_by_sig:
+                    bytes_by_sig[ex.signature] = ex.step_wire_bytes(
+                        self.state.d_params[cid], x_shape)
+                total, per_b = bytes_by_sig[ex.signature]
+                self._split_step_bytes[cid] = total
+                # per-batch LAN hop events: at each boundary one fwd and
+                # one bwd crossing, each carrying both passes' tensors
+                self._split_hop_events[cid] = [
+                    ex.num_passes * b[d] for b in per_b
+                    for d in ("fwd", "bwd")]
+        self._stage_key = jax.random.PRNGKey(self.cfg.split.seed)
         # the client program: one local-round definition, compiled as both
         # the looped and the vectorized backend (fed/programs.py), with the
-        # privacy stage (plain | dp_sgd) selected orthogonally
+        # privacy stage (plain | dp_sgd) and split execution selected
+        # orthogonally
         self.program = LocalProgram(
             self.d_optimizer, functools.partial(d_loss_fn, c=c), lr,
-            privacy=self.cfg.privacy)
+            privacy=self.cfg.privacy, split=self.split_execs or None)
 
     def _d_update(self, dp, do, real, fake):
         """One reference D step for ``train_epoch_sequential``: DP-SGD when
@@ -235,9 +277,14 @@ class FSLGANTrainer:
         for cid in self._active_clients():
             steps = self._client_steps(cid, batches_per_client)
             if cid in self.plans and cid in by_id:
-                ct = plan_epoch_time(self.plans[cid], by_id[cid],
-                                     batches_per_epoch=steps,
-                                     lan_latency_s=self.cfg.fsl.lan_latency_s)
+                # split-executed clients are priced from the MEASURED
+                # per-boundary bytes their step actually ships; unsplit
+                # training falls back to the analytic hop constant
+                ct = plan_epoch_time(
+                    self.plans[cid], by_id[cid], batches_per_epoch=steps,
+                    lan_latency_s=self.cfg.fsl.lan_latency_s,
+                    boundary_bytes=self._split_hop_events.get(cid),
+                    lan_bandwidth_bps=self.cfg.split.lan_bandwidth_bps)
             else:
                 ct = 0.0
             specs.append(ClientSpec(
@@ -273,6 +320,9 @@ class FSLGANTrainer:
         round_key = None
         if self.program.is_dp:
             self._dp_key, round_key = jax.random.split(self._dp_key)
+        elif self.program.needs_key:
+            # stochastic boundary stage without DP-SGD: its own key chain
+            self._stage_key, round_key = jax.random.split(self._stage_key)
         hyper = {cid: ClientHyper(lr_scale=spec.lr_scale,
                                   local_steps=spec.local_steps)
                  for cid, spec in self.engine.specs.items()}
@@ -326,12 +376,17 @@ class FSLGANTrainer:
         # schedule downloads proportionally more fake batches
         down_by_client = {cid: spec.local_steps * batch_b
                           for cid, spec in eng.specs.items()}
+        # measured LAN payload of one local round per split-executed client
+        lan_by_client = {cid: spec.local_steps * self._split_step_bytes[cid]
+                         for cid, spec in eng.specs.items()
+                         if cid in self._split_step_bytes}
         # the global D: every replica equals the last broadcast average
         global_d = st.d_params[self._active_clients()[0]]
         rep = eng.run_round(global_d,
                             self._bind_round(batches_per_client, backend),
                             down_bytes=batches_per_client * batch_b,
-                            down_bytes_by_client=down_by_client)
+                            down_bytes_by_client=down_by_client,
+                            lan_bytes_by_client=lan_by_client)
         d_avg = rep.global_params
         for cid, opt in rep.opt_states.items():
             st.d_opt[cid] = opt
@@ -365,6 +420,15 @@ class FSLGANTrainer:
             "stragglers": float(len(rep.stragglers)),
             "mean_staleness": rep.mean_staleness,
         }
+        if self.split_execs:
+            # executed-split reporting: measured boundary bytes that
+            # actually crossed the LAN this round, and the compute load
+            # each device carried (plan cost units)
+            loads = self.device_load_report()
+            metrics["lan_mbytes"] = rep.traffic.total_lan / 1e6
+            metrics["max_device_load"] = max(loads.values())
+            metrics["mean_device_load"] = float(np.mean(list(
+                loads.values())))
         if self.accountant is not None:
             metrics["dp_epsilon"] = self.accountant.epsilon(
                 self.cfg.privacy.delta)[0]
@@ -378,7 +442,20 @@ class FSLGANTrainer:
         bit-for-bit (pinned in tests/test_fed_runtime.py).  Uplink DP is
         applied to each client's round delta exactly as the engine's
         pre-codec stage would, so the reference also covers
-        ``privacy.mode='uplink'`` with ``codec='none'``."""
+        ``privacy.mode='uplink'`` with ``codec='none'``.
+
+        This loop always trains the MONOLITHIC D, which equals the
+        split-executed step only under the identity boundary stage (the
+        bit-exact pin); a lossy/noisy stage trains a genuinely different
+        model, so that combination is refused rather than silently
+        diverging from every engine path."""
+        if self.split_execs and any(ex.stage.name != "identity"
+                                    for ex in self.split_execs.values()):
+            raise ValueError(
+                "train_epoch_sequential is the unsplit/identity-stage "
+                f"reference; boundary_stage="
+                f"{self.cfg.split.boundary_stage!r} trains a different "
+                "(staged) model — use train_epoch")
         st = self.state
         d_losses = []
         active = self._active_clients()
@@ -421,6 +498,16 @@ class FSLGANTrainer:
             metrics["dp_epsilon"] = self.accountant.epsilon(
                 self.cfg.privacy.delta)[0]
         return self._record(metrics)
+
+    def device_load_report(self) -> Dict[str, float]:
+        """Compute units each device carries under the current plans
+        (device ids are globally unique: ``c<i>_d<j>``)."""
+        loads: Dict[str, float] = {}
+        for cid in self._active_clients():
+            if cid in self.plans:
+                for dev, load in self.plans[cid].device_loads().items():
+                    loads[dev] = loads.get(dev, 0.0) + load
+        return loads or {"unsplit": 0.0}
 
     def generate(self, n: int, seed: int = 0) -> np.ndarray:
         z = jax.random.normal(jax.random.PRNGKey(seed),

@@ -14,7 +14,7 @@ roofline/hw.py); the LAN constants here deliberately mirror the paper.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -36,17 +36,34 @@ class TimeReport:
 def plan_epoch_time(plan: SplitPlan, client: Client,
                     batches_per_epoch: int = 24,
                     lan_latency_s: float = 0.050,
-                    compute_unit_s: float = 0.010) -> float:
+                    compute_unit_s: float = 0.010,
+                    boundary_bytes: Optional[Sequence[int]] = None,
+                    lan_bandwidth_bps: float = 100e6) -> float:
     """Seconds for one epoch of discriminator training under this plan.
 
     The SL chain is sequential per batch: every device computes its portion
     (fwd then bwd), activations/gradients hop the LAN at each boundary.
+
+    LAN pricing has two modes:
+
+      * **measured** — ``boundary_bytes`` lists the bytes of every hop event
+        one batch ships (each boundary crossing, forward and backward; see
+        ``core/split.SplitExecution.step_wire_bytes``).  Each hop costs
+        ``lan_latency_s + 8 * bytes / lan_bandwidth_bps``.
+      * **analytic fallback** — ``boundary_bytes=None`` keeps the paper's
+        model: a fixed ``lan_latency_s`` (50 ms) per hop, 2 hops per
+        boundary (forward + backward traversal), payload size ignored.
+        This is what prices plans that train unsplit.
     """
     tf = {d.device_id: d.time_factor for d in client.devices}
     compute = sum(p.cost * compute_unit_s * tf[p.device_id] * (1 + BWD_FWD_RATIO)
                   for p in plan.portions)
-    hops = plan.num_boundaries * 2          # forward + backward traversal
-    per_batch = compute + hops * lan_latency_s
+    if boundary_bytes is None:
+        lan = plan.num_boundaries * 2 * lan_latency_s
+    else:
+        bw = max(float(lan_bandwidth_bps), 1.0)
+        lan = sum(lan_latency_s + 8.0 * int(b) / bw for b in boundary_bytes)
+    per_batch = compute + lan
     return per_batch * batches_per_epoch
 
 

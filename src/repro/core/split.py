@@ -1,20 +1,48 @@
-"""Model splitting (paper §3.2/§4): partition an ordered layer stack into
-contiguous *portions* and assign each portion to one of a client's devices.
+"""Model splitting (paper §3.2/§4): the SplitPlan as the *executed* local
+step, not just a pricing artifact.
 
 The planner is model-agnostic: it consumes an ordered list of
 (layer_name, cost) pairs — the DCGAN discriminator's conv blocks, or any
 assigned transformer architecture's blocks (the paper's technique applied
-beyond GANs; see DESIGN.md §4).
+beyond GANs; see DESIGN.md §4).  A :class:`SplitPlan` records which device
+trains which contiguous layer range.
 
-A :class:`SplitPlan` is the paper's central artifact: which device trains
-which contiguous layer range. ``plan_time()`` (core/simulate.py) prices it;
-``split_forward`` (this module) executes it portion-by-portion and is
-numerically identical to the unsplit forward — the property the tests pin.
+Two execution layers sit on top of the plan:
+
+  * ``split_forward`` / ``boundary_activations`` — the inference-only walk:
+    portion-by-portion forward, bit-identical to the unsplit forward, with a
+    hook at every device hand-off (the privacy subsystem's original
+    observation point).
+  * :class:`SplitExecution` — the *training* step.  It compiles the plan
+    into a staged ``value_and_grad``: the forward runs device-segment by
+    device-segment (``jax.vjp`` per segment), the backward walks the same
+    segments in reverse, and EVERY tensor that crosses a segment boundary —
+    the smashed activation on the way forward, its gradient on the way back
+    — passes through a :class:`BoundaryStage` first.  With the identity
+    stage the composed gradient is bit-exact with the monolithic
+    ``jax.value_and_grad`` (pinned in tests/test_split_selection.py); codec
+    stages (``fed/transport``) and Gaussian clip+noise stages
+    (``privacy/defenses``) model lossy/noisy LAN links, exactly what
+    SplitFed-style deployments ship.  Stages are applied straight-through
+    (not differentiated): they model the wire, not the math.
+
+The same object prices what it executes: ``step_wire_bytes`` measures the
+per-boundary LAN payload of one local step (``tree_bytes`` of the staged
+tensors / the codec's wire bytes), which ``core/simulate.plan_epoch_time``
+consumes in place of the paper's fixed 50 ms hop constant and
+``fed/transport.TrafficLedger`` records per round.  ``fed/programs.
+make_local_step(..., split_exec=...)`` builds the client-side training step
+from this staged execution, so split training composes with every backend,
+scheduler, codec and privacy mode — plan → execute → measure → attack,
+instead of plan → price.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
 
 from repro.core.devices import Client, Device
 
@@ -105,3 +133,337 @@ def boundary_activations(x, plan: SplitPlan,
                   boundary_hook=lambda i, a, b, act: seen.append(
                       (i, a, b, act)))
     return seen
+
+
+# ---------------------------------------------------------------------------
+# staged training execution: segments, boundary stages, SplitExecution
+# ---------------------------------------------------------------------------
+
+def plan_segments(plan: SplitPlan) -> List[Tuple[str, Tuple[str, ...]]]:
+    """Merge consecutive same-device portions into *device segments*.
+
+    A segment is the unit of staged execution: activations only cross the
+    LAN between segments, so ``len(segments) - 1 == plan.num_boundaries``.
+    """
+    segs: List[Tuple[str, Tuple[str, ...]]] = []
+    for p in plan.portions:
+        if segs and segs[-1][0] == p.device_id:
+            segs[-1] = (p.device_id, segs[-1][1] + p.layer_names)
+        else:
+            segs.append((p.device_id, p.layer_names))
+    return segs
+
+
+@dataclass(frozen=True)
+class Boundary:
+    """One LAN hand-off in the executed chain."""
+    index: int
+    from_device: str
+    to_device: str
+    depth: int                  # layers applied before the hand-off
+
+
+def partition_params(plan: SplitPlan, params) -> List[Dict[str, Any]]:
+    """Partition a {layer_name: subtree} param tree by portion: what each
+    device actually holds.  Layers absent from ``params`` (shared heads
+    etc.) are skipped."""
+    return [{n: params[n] for n in p.layer_names if n in params}
+            for p in plan.portions]
+
+
+def tensor_wire_bytes(shape: Sequence[int],
+                      dtype=jnp.float32) -> int:
+    """Native payload bytes of one boundary tensor (identity wire)."""
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n * jnp.dtype(dtype).itemsize
+
+
+class BoundaryStage:
+    """What happens to a tensor as it crosses a segment boundary.
+
+    ``apply(x, key)`` transforms the tensor (identity here); ``wire_bytes``
+    prices what the transformed tensor costs on the LAN.  Stages are
+    straight-through: the backward pass applies the stage to the crossing
+    *gradient* but never differentiates through the stage itself — noise
+    and compression model the wire, not the computation.
+    """
+    name = "identity"
+    stochastic = False          # True => ``apply`` consumes the key
+
+    @property
+    def signature(self) -> Tuple:
+        """Compilation identity: stages with equal signatures compile to
+        the same staged program.  Subclasses with parameters MUST include
+        them, or differently-parameterized stages would silently share one
+        compiled step (``fed/programs.LocalProgram`` dedups on this)."""
+        return (self.name,)
+
+    def apply(self, x: jnp.ndarray, key=None) -> jnp.ndarray:
+        del key
+        return x
+
+    def wire_bytes(self, shape: Sequence[int], dtype=jnp.float32) -> int:
+        return tensor_wire_bytes(shape, dtype)
+
+
+class CodecBoundaryStage(BoundaryStage):
+    """Run each boundary tensor through a transport codec round-trip
+    (``fed/transport``): the downstream device computes on what a
+    compressed LAN link would actually deliver.
+
+    Only stateless codecs compose with jit-compiled training steps —
+    ``make_boundary_stage`` constructs top-k *without* error feedback.
+    """
+    stochastic = False
+
+    def __init__(self, codec):
+        if getattr(codec, "error_feedback", False):
+            raise ValueError(
+                "stateful codecs (top-k error feedback) cannot run inside "
+                "a jitted training step; build with error_feedback=False")
+        self.codec = codec
+        self.name = codec.name
+
+    @property
+    def signature(self) -> Tuple:
+        return (self.name, float(getattr(self.codec, "frac", 0.0)))
+
+    def apply(self, x: jnp.ndarray, key=None) -> jnp.ndarray:
+        del key
+        dec, _ = self.codec.roundtrip(x)
+        return dec
+
+    def wire_bytes(self, shape: Sequence[int], dtype=jnp.float32) -> int:
+        _, nbytes = self.codec.roundtrip(jnp.zeros(tuple(shape), dtype))
+        return int(nbytes)
+
+
+class GaussianBoundaryStage(BoundaryStage):
+    """Per-example clip + Gaussian noise on every crossing tensor — the
+    split-learning analogue of DP-SGD's privatized release, applied to the
+    smashed activation (fwd) and its gradient (bwd) at the LAN surface the
+    activation-inversion attack observes (privacy/attacks.py)."""
+    name = "dp"
+    stochastic = True
+
+    def __init__(self, clip: float, sigma: float):
+        self.clip = float(clip)
+        self.sigma = float(sigma)
+
+    @property
+    def signature(self) -> Tuple:
+        return (self.name, self.clip, self.sigma)
+
+    def apply(self, x: jnp.ndarray, key=None) -> jnp.ndarray:
+        flat = x.reshape(x.shape[0], -1).astype(jnp.float32)
+        norms = jnp.linalg.norm(flat, axis=1)
+        scale = jnp.minimum(1.0, self.clip / jnp.maximum(norms, 1e-12))
+        y = flat * scale[:, None]
+        if self.sigma > 0.0 and key is not None:
+            y = y + self.sigma * self.clip * jax.random.normal(
+                key, y.shape, jnp.float32)
+        return y.reshape(x.shape).astype(x.dtype)
+
+
+def make_boundary_stage(split_cfg) -> BoundaryStage:
+    """Factory keyed by ``config.SplitConfig.boundary_stage``."""
+    name = getattr(split_cfg, "boundary_stage", "identity")
+    if name in ("", "identity", "none"):
+        return BoundaryStage()
+    if name == "dp":
+        return GaussianBoundaryStage(split_cfg.stage_clip,
+                                     split_cfg.stage_sigma)
+    from repro.fed.transport import make_codec
+    return CodecBoundaryStage(make_codec(
+        name, topk_frac=getattr(split_cfg, "topk_frac", 0.01),
+        error_feedback=False))
+
+
+class SplitExecution:
+    """A :class:`SplitPlan` compiled into the executed local training step.
+
+    ``apply_layer(name, params, x) -> x`` applies one named layer;
+    ``tails`` is one scalar loss tail per forward pass (the GAN D loss is
+    two passes: BCE(real, 1) and BCE(fake, 0)).  Both passes traverse the
+    SAME boundaries per step — each hand-off ships one tensor per pass per
+    direction.
+
+    ``value_and_grad`` is jit/vmap-compatible and, under the identity
+    stage, bit-exact with ``jax.value_and_grad`` of the monolithic loss:
+    each device segment contributes its parameters' gradients through its
+    own ``jax.vjp``, and the cotangent chain crosses boundaries exactly
+    where the activations did (pinned property).
+    """
+
+    def __init__(self, plan: SplitPlan, apply_layer, tails: Sequence, *,
+                 stage: Optional[BoundaryStage] = None):
+        self.plan = plan
+        self.apply_layer = apply_layer
+        self.tails = tuple(tails)
+        self.stage = stage or BoundaryStage()
+        self.segments = plan_segments(plan)
+        self.boundaries: List[Boundary] = []
+        depth = 0
+        for i, (dev, names) in enumerate(self.segments[:-1]):
+            depth += len(names)
+            self.boundaries.append(Boundary(
+                i, dev, self.segments[i + 1][0], depth))
+        self._shape_cache: Dict[Tuple, List[Tuple[int, ...]]] = {}
+
+    # ------------------------------------------------------------------
+    @property
+    def num_boundaries(self) -> int:
+        return len(self.boundaries)
+
+    @property
+    def num_passes(self) -> int:
+        return len(self.tails)
+
+    @property
+    def signature(self) -> Tuple:
+        """Compilation key: two plans with the same boundary depths and
+        the same (fully parameterized) stage compile to the same staged
+        program — device *identity* only affects pricing, never math."""
+        return (tuple(b.depth for b in self.boundaries),
+                self.stage.signature)
+
+    # ------------------------------------------------------------------
+    def _segment_fn(self, names: Tuple[str, ...]):
+        def seg(params, xs):
+            out = []
+            for x in xs:
+                for n in names:
+                    x = self.apply_layer(n, params, x)
+                out.append(x)
+            return tuple(out)
+        return seg
+
+    def _key(self, key, b: int, p: int, direction: int):
+        """Per-(boundary, pass, direction) stage key, collision-free within
+        one step (direction: 0 fwd, 1 bwd)."""
+        if key is None:
+            return None
+        return jax.random.fold_in(
+            key, 1 + (b * self.num_passes + p) * 2 + direction)
+
+    # ------------------------------------------------------------------
+    def run(self, params, batches: Sequence[jnp.ndarray], key=None,
+            collect: bool = False):
+        """One staged forward+backward over per-pass ``batches``.
+
+        Returns ``(loss, grads, records)``; ``records`` (when ``collect``)
+        holds the staged tensors that actually crossed each boundary:
+        ``records["fwd"][b][p]`` / ``records["bwd"][b][p]`` for boundary
+        ``b``, pass ``p`` — the exact artifacts a LAN observer captures.
+        """
+        if len(batches) != self.num_passes:
+            raise ValueError(f"{len(batches)} batches for "
+                             f"{self.num_passes} loss tails")
+        if key is None and self.stage.stochastic:
+            # a stochastic stage must NEVER run keyless-and-noiseless: the
+            # observed/collected tensors would understate the stage and
+            # overstate leakage.  Default key == run_looped's default.
+            key = jax.random.PRNGKey(0)
+        records = {"fwd": [None] * self.num_boundaries,
+                   "bwd": [None] * self.num_boundaries}
+        xs = tuple(batches)
+        vjps = []
+        for si, (dev, names) in enumerate(self.segments):
+            xs, vjp = jax.vjp(self._segment_fn(names), params, xs)
+            vjps.append(vjp)
+            if si < len(self.segments) - 1:
+                xs = tuple(self.stage.apply(x, self._key(key, si, p, 0))
+                           for p, x in enumerate(xs))
+                if collect:
+                    records["fwd"][si] = xs
+
+        def total_loss(zs):
+            return sum(tail(z) for tail, z in zip(self.tails, zs))
+
+        loss, tail_vjp = jax.vjp(total_loss, xs)
+        (g_act,) = tail_vjp(jnp.ones_like(loss))
+        grads = None
+        for si in range(len(self.segments) - 1, -1, -1):
+            gp, g_act = vjps[si](g_act)
+            grads = gp if grads is None \
+                else jax.tree.map(jnp.add, grads, gp)
+            if si > 0:
+                g_act = tuple(
+                    self.stage.apply(g, self._key(key, si - 1, p, 1))
+                    for p, g in enumerate(g_act))
+                if collect:
+                    records["bwd"][si - 1] = g_act
+        return loss, grads, records
+
+    def value_and_grad(self, params, real, fake, key=None):
+        """The D-loss contract of ``fed/programs.make_local_step``:
+        ``(params, real, fake, key) -> (loss, grads)`` through the staged
+        execution."""
+        loss, grads, _ = self.run(params, (real, fake), key)
+        return loss, grads
+
+    # ------------------------------------------------------------------
+    def forward_boundaries(self, params, x, key=None,
+                           upto: Optional[int] = None) -> List[jnp.ndarray]:
+        """The staged activations ONE forward pass ships, per boundary —
+        the tensors the activation-inversion attack should target
+        (post-codec, post-noise), not a separate clean forward.  ``upto``
+        stops after that boundary index (an attacker at boundary b never
+        needs the deeper segments' compute)."""
+        if key is None and self.stage.stochastic:
+            key = jax.random.PRNGKey(0)
+        out = []
+        for si, (dev, names) in enumerate(self.segments[:-1]):
+            for n in names:
+                x = self.apply_layer(n, params, x)
+            x = self.stage.apply(x, self._key(key, si, 0, 0))
+            out.append(x)
+            if upto is not None and si >= upto:
+                break
+        return out
+
+    def shipped_boundaries(self, params, real, fake, key=None
+                           ) -> Dict[str, List[Tuple[jnp.ndarray, ...]]]:
+        """Every boundary tensor one local step ships (fwd activations and
+        bwd activation-grads, both passes), as staged."""
+        _, _, records = self.run(params, (real, fake), key, collect=True)
+        return records
+
+    # ------------------------------------------------------------------
+    def boundary_shapes(self, params, x_shape: Sequence[int],
+                        dtype=jnp.float32) -> List[Tuple[int, ...]]:
+        """Activation shape at each boundary for one pass of ``x_shape``
+        batches (no FLOPs — ``jax.eval_shape``)."""
+        ck = (tuple(x_shape), jnp.dtype(dtype).name)
+        if ck not in self._shape_cache:
+            def prefixes(p, x):
+                out = []
+                for dev, names in self.segments[:-1]:
+                    for n in names:
+                        x = self.apply_layer(n, p, x)
+                    out.append(x)
+                return out
+            shapes = jax.eval_shape(
+                prefixes, params,
+                jax.ShapeDtypeStruct(tuple(x_shape), dtype))
+            self._shape_cache[ck] = [tuple(s.shape) for s in shapes]
+        return self._shape_cache[ck]
+
+    def step_wire_bytes(self, params, x_shape: Sequence[int],
+                        dtype=jnp.float32) -> Tuple[int, List[Dict[str, int]]]:
+        """Measured LAN bytes of ONE local step under this plan + stage.
+
+        Returns ``(total, per_boundary)`` where ``per_boundary[b]`` has
+        ``fwd``/``bwd`` bytes for one pass; the total counts both
+        directions across all passes (the cotangent has the activation's
+        shape, so fwd == bwd under every stage here).
+        """
+        per = []
+        total = 0
+        for shp in self.boundary_shapes(params, x_shape, dtype):
+            wb = self.stage.wire_bytes(shp, dtype)
+            per.append({"fwd": wb, "bwd": wb})
+            total += 2 * wb * self.num_passes
+        return total, per

@@ -117,6 +117,7 @@ class FederationEngine:
         self.round_idx = 0
         self.version = 0
         self.ledger = TrafficLedger()      # cumulative across rounds
+        self._lan_by: Dict[str, int] = {}  # this round's LAN bytes/client
 
     # ------------------------------------------------------------------
     def _codec_roundtrip(self, cid: str, base_tree, params
@@ -144,16 +145,22 @@ class FederationEngine:
 
     # ------------------------------------------------------------------
     def run_round(self, global_tree, program, *, down_bytes: int = 0,
-                  down_bytes_by_client: Optional[Dict[str, int]] = None
+                  down_bytes_by_client: Optional[Dict[str, int]] = None,
+                  lan_bytes_by_client: Optional[Dict[str, int]] = None
                   ) -> RoundReport:
         """One FL round.  ``program``: a client program (``fed/programs``)
         or a legacy bare callable.  ``down_bytes``: server->client fake
         payload; ``down_bytes_by_client`` overrides it per client (clients
         on a longer ``local_steps`` schedule download more fake batches,
-        so their downlink time and bytes must be priced accordingly)."""
+        so their downlink time and bytes must be priced accordingly).
+        ``lan_bytes_by_client``: measured split-boundary bytes of one local
+        round (``core/split.SplitExecution.step_wire_bytes`` x steps) —
+        recorded per *execution*, straggler or not, because the LAN traffic
+        happens whether or not the update lands."""
         program = as_program(program)
         down_by = dict(down_bytes_by_client or {})
         db = lambda cid: down_by.get(cid, down_bytes)  # noqa: E731
+        self._lan_by = dict(lan_bytes_by_client or {})
         if self.cfg.mode == "sync":
             rep = self._run_sync(global_tree, program, db)
         else:
@@ -163,6 +170,8 @@ class FederationEngine:
             self.ledger.record(cid, up=rep.traffic.up_bytes[cid])
         for cid in rep.traffic.down_bytes:
             self.ledger.record(cid, down=rep.traffic.down_bytes[cid])
+        for cid in rep.traffic.lan_bytes:
+            self.ledger.record(cid, lan=rep.traffic.lan_bytes[cid])
         return rep
 
     # ------------------------------------------------------------------
@@ -195,7 +204,8 @@ class FederationEngine:
                                                   res.params)
             finish = down_t[cid] + spec.compute_time_s \
                 + self.uplink.transfer_time(up_b)
-            rep.traffic.record(cid, up=up_b, down=db(cid))
+            rep.traffic.record(cid, up=up_b, down=db(cid),
+                               lan=self._lan_by.get(cid, 0))
             rep.client_infos.append((cid, res.info))
             if deadline and finish > deadline:
                 rep.stragglers.append(cid)     # ran, but its update is late
@@ -254,7 +264,8 @@ class FederationEngine:
                 res = program.run([cid], snap_tree)[0]
                 decoded, up_b = self._codec_roundtrip(cid, snap_tree,
                                                       res.params)
-                rep.traffic.record(cid, up=up_b)
+                rep.traffic.record(cid, up=up_b,
+                                   lan=self._lan_by.get(cid, 0))
                 rep.client_infos.append((cid, res.info))
                 # the opt state rides with the arrival: it only commits if
                 # the update actually lands inside the deadline

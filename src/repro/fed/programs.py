@@ -10,7 +10,10 @@ first-class *program* so every combination exists:
   * :func:`make_local_step` builds ONE step definition — plain SGD/Adam or
     DP-SGD (per-example clip + Gaussian noise via ``kernels/dp_clip``,
     per-example grads from singleton-batch vmap) — selected orthogonally
-    from the backend.
+    from the backend.  A ``core/split.SplitExecution`` swaps the gradient
+    computation for the staged split forward/backward (boundary stages on
+    every crossing tensor), again orthogonally: split x privacy x backend
+    all compose.
   * :class:`LocalProgram` compiles that step two ways:
       - **loop**    — per-client Python loop over jitted steps (the seed's
                       dispatch pattern; bit-exact reference numerics), and
@@ -110,7 +113,7 @@ def sequential_d_rounds(d_step, params_list: Sequence, opt_list: Sequence,
 # ---------------------------------------------------------------------------
 
 def make_local_step(optimizer, loss_fn: LossFn, privacy=None, *,
-                    force_ref: bool = False):
+                    force_ref: bool = False, split_exec=None):
     """Build ``step(params, opt, real, fake, lr, key) -> (params, opt,
     loss)`` — the single client-side step both backends compile.
 
@@ -119,7 +122,15 @@ def make_local_step(optimizer, loss_fn: LossFn, privacy=None, *,
     (vmap over examples, so batchnorm statistics are per-example — the
     standard DP-SGD stance on BN), privatizes them through
     ``kernels/dp_clip`` and feeds the mean to the optimizer; otherwise it
-    is the plain batch step and ``key`` is ignored.
+    is the plain batch step.
+
+    ``split_exec`` (``core/split.SplitExecution``, or None) selects HOW the
+    gradient is computed, orthogonally to privacy: None differentiates the
+    monolithic ``loss_fn``; a SplitExecution runs the staged split
+    forward/backward — every boundary tensor through the plan's boundary
+    stage — which is bit-exact with the monolithic gradient under the
+    identity stage.  ``key`` feeds the stage noise (and DP-SGD noise);
+    with neither, it is ignored.
 
     ``force_ref`` pins the pure-JAX dp_clip reference regardless of
     ``privacy.use_kernel`` — the vectorized backend sets it because the
@@ -129,11 +140,19 @@ def make_local_step(optimizer, loss_fn: LossFn, privacy=None, *,
     dp = (privacy is not None and getattr(privacy, "enabled", False)
           and privacy.mode == "dp_sgd")
     if not dp:
-        def step(params, opt, real, fake, lr, key):
-            del key
-            loss, grads = jax.value_and_grad(loss_fn)(params, real, fake)
-            params, opt = optimizer.update(grads, opt, params, lr)
-            return params, opt, loss
+        if split_exec is None:
+            def step(params, opt, real, fake, lr, key):
+                del key
+                loss, grads = jax.value_and_grad(loss_fn)(params, real,
+                                                          fake)
+                params, opt = optimizer.update(grads, opt, params, lr)
+                return params, opt, loss
+        else:
+            def step(params, opt, real, fake, lr, key):
+                loss, grads = split_exec.value_and_grad(params, real, fake,
+                                                        key)
+                params, opt = optimizer.update(grads, opt, params, lr)
+                return params, opt, loss
         return step
 
     from repro.kernels.dp_clip.ops import dp_clip_noise_tree
@@ -142,14 +161,28 @@ def make_local_step(optimizer, loss_fn: LossFn, privacy=None, *,
     use_kernel = bool(privacy.use_kernel) and not force_ref
     interpret = bool(privacy.kernel_interpret)
 
-    def one_example(p, r, f):
-        return loss_fn(p, r[None], f[None])
+    if split_exec is None:
+        def one_example(p, r, f):
+            return loss_fn(p, r[None], f[None])
 
-    grad_one = jax.value_and_grad(one_example)
+        grad_one = jax.value_and_grad(one_example)
+
+        def per_example_vg(params, real, fake, key):
+            del key
+            return jax.vmap(grad_one, in_axes=(None, 0, 0))(params, real,
+                                                            fake)
+    else:
+        def per_example_vg(params, real, fake, key):
+            # each example's staged pass draws its own boundary-stage
+            # noise; dp_clip's noise key (`key` itself) is never folded
+            # with these, so the two noise sources stay independent
+            def one(r, f, i):
+                return split_exec.value_and_grad(
+                    params, r[None], f[None], jax.random.fold_in(key, i))
+            return jax.vmap(one)(real, fake, jnp.arange(real.shape[0]))
 
     def step(params, opt, real, fake, lr, key):
-        losses, per_ex = jax.vmap(grad_one, in_axes=(None, 0, 0))(
-            params, real, fake)
+        losses, per_ex = per_example_vg(params, real, fake, key)
         summed = dp_clip_noise_tree(per_ex, clip, noise_scale, key,
                                     use_kernel=use_kernel,
                                     interpret=interpret)
@@ -177,19 +210,63 @@ class LocalProgram:
         the stacked client axis, scan over the T batch axis, per-client
         learning rates / noise keys as vectors and a (C, T) step mask for
         heterogeneous ``local_steps`` schedules.
+
+    ``split`` maps client ids to ``core/split.SplitExecution`` objects:
+    those clients' steps execute THROUGH the split (staged segment
+    forward/backward, boundary stages on every crossing tensor).  Steps are
+    compiled per *split signature* — the tuple of boundary depths + stage —
+    since plans sharing a signature share the staged program; the
+    vectorized backend batches clients per signature group
+    (``RoundExecutor``).  Unlisted clients run the monolithic step
+    (signature ``None``), so split and unsplit clients coexist in one
+    round.
     """
 
     def __init__(self, optimizer, loss_fn: LossFn, base_lr: float, *,
-                 privacy=None):
+                 privacy=None, split=None):
         self.optimizer = optimizer
         self.loss_fn = loss_fn
         self.base_lr = float(base_lr)
+        self.privacy = privacy
+        self.split = dict(split or {})
         self.is_dp = (privacy is not None
                       and getattr(privacy, "enabled", False)
                       and privacy.mode == "dp_sgd")
-        self.step = jax.jit(make_local_step(optimizer, loss_fn, privacy))
-        self._vrun = self._compile_vectorized(
-            make_local_step(optimizer, loss_fn, privacy, force_ref=True))
+        # does the step consume its PRNG key? (DP-SGD noise and/or a
+        # stochastic boundary stage) — the trainer derives round keys iff so
+        self.needs_key = self.is_dp or any(
+            ex.stage.stochastic for ex in self.split.values())
+        self._exec_by_sig = {}
+        for ex in self.split.values():
+            self._exec_by_sig.setdefault(ex.signature, ex)
+        self._step_cache: Dict[Any, Any] = {}
+        self._vrun_cache: Dict[Any, Any] = {}
+        # the monolithic step stays a public attribute (seed-compatible)
+        self.step = self._step(None)
+
+    # ------------------------------------------------------------------
+    # per-signature compilation
+    # ------------------------------------------------------------------
+    def signature_for(self, cid: str):
+        """Compilation key for one client: its plan's boundary-depth/stage
+        signature, or None for the monolithic step."""
+        ex = self.split.get(cid)
+        return ex.signature if ex is not None else None
+
+    def _step(self, sig):
+        if sig not in self._step_cache:
+            self._step_cache[sig] = jax.jit(make_local_step(
+                self.optimizer, self.loss_fn, self.privacy,
+                split_exec=self._exec_by_sig.get(sig)))
+        return self._step_cache[sig]
+
+    def _vrun(self, sig):
+        if sig not in self._vrun_cache:
+            self._vrun_cache[sig] = self._compile_vectorized(
+                make_local_step(self.optimizer, self.loss_fn, self.privacy,
+                                force_ref=True,
+                                split_exec=self._exec_by_sig.get(sig)))
+        return self._vrun_cache[sig]
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -217,28 +294,35 @@ class LocalProgram:
 
     # ------------------------------------------------------------------
     def run_looped(self, params, opt, reals, fakes, *,
-                   lr: Optional[float] = None, key=None
+                   lr: Optional[float] = None, key=None,
+                   cid: Optional[str] = None
                    ) -> Tuple[Any, Any, List[float]]:
-        """One client's round: T jitted steps over (T, B, ...) batches."""
+        """One client's round: T jitted steps over (T, B, ...) batches.
+        ``cid`` selects the client's split-signature step (monolithic when
+        omitted or unlisted)."""
         lr_arr = jnp.float32(self.base_lr if lr is None else lr)
         if key is None:
             key = jax.random.PRNGKey(0)
+        step = self._step(self.signature_for(cid) if cid is not None
+                          else None)
         losses: List[float] = []
         for t in range(reals.shape[0]):
-            params, opt, l = self.step(params, opt, reals[t], fakes[t],
-                                       lr_arr, jax.random.fold_in(key, t))
+            params, opt, l = step(params, opt, reals[t], fakes[t],
+                                  lr_arr, jax.random.fold_in(key, t))
             losses.append(float(l))
         return params, opt, losses
 
     def run_vectorized(self, stacked_params, stacked_opt, reals, fakes, *,
-                       lrs=None, keys=None, mask=None):
+                       lrs=None, keys=None, mask=None, signature=None):
         """C clients' rounds as ONE jitted program.
 
         ``reals``/``fakes``: (C, T, B, ...).  ``lrs``: (C,) per-client
-        learning rates; ``keys``: (C,) PRNG keys (DP noise); ``mask``:
-        (C, T) bool — False entries are padding steps that leave the
-        client's state untouched.  Returns stacked (params, opt) and
-        (C, T) losses (0.0 at masked slots).
+        learning rates; ``keys``: (C,) PRNG keys (DP/stage noise);
+        ``mask``: (C, T) bool — False entries are padding steps that leave
+        the client's state untouched.  ``signature`` selects the split
+        program; every stacked client must share it (``RoundExecutor``
+        groups by signature).  Returns stacked (params, opt) and (C, T)
+        losses (0.0 at masked slots).
         """
         c, t = reals.shape[0], reals.shape[1]
         if lrs is None:
@@ -247,9 +331,9 @@ class LocalProgram:
             keys = jnp.stack([jax.random.PRNGKey(0)] * c)
         if mask is None:
             mask = jnp.ones((c, t), bool)
-        return self._vrun(stacked_params, stacked_opt, reals, fakes,
-                          jnp.asarray(lrs, jnp.float32), keys,
-                          jnp.asarray(mask, bool))
+        return self._vrun(signature)(
+            stacked_params, stacked_opt, reals, fakes,
+            jnp.asarray(lrs, jnp.float32), keys, jnp.asarray(mask, bool))
 
 
 # ---------------------------------------------------------------------------
@@ -352,7 +436,7 @@ class RoundExecutor:
             reals, fakes = self.sample(cid, steps)
             params, opt, losses = self.program.run_looped(
                 start_params, self._opt_for(cid), reals, fakes,
-                lr=self.lr_for(cid), key=self._key_for(cid))
+                lr=self.lr_for(cid), key=self._key_for(cid), cid=cid)
             self._opt_overlay[cid] = opt
             out.append(ClientResult(cid, params, opt,
                                     {"losses": losses, "steps": steps}))
@@ -377,20 +461,35 @@ class RoundExecutor:
         keys = [self._key_for(cid) for cid in cids]
         if keys[0] is None:
             keys = [jax.random.PRNGKey(0)] * len(cids)
-        stacked_p = stack_trees([start_params] * len(cids))
-        stacked_o = stack_trees([self._opt_for(cid) for cid in cids])
-        new_p, new_o, losses = self.program.run_vectorized(
-            stacked_p, stacked_o, jnp.stack(reals_l), jnp.stack(fakes_l),
-            lrs=[self.lr_for(cid) for cid in cids],
-            keys=jnp.stack(keys), mask=jnp.asarray(mask_l, bool))
-        out = []
-        for i, (cid, s) in enumerate(zip(cids, steps)):
-            p = jax.tree.map(lambda x: x[i], new_p)
-            o = jax.tree.map(lambda x: x[i], new_o)
-            self._opt_overlay[cid] = o
-            out.append(ClientResult(
-                cid, p, o,
-                {"losses": [float(l) for l in losses[i, :s]], "steps": s}))
+        # one jitted dispatch per split signature (monolithic clients are
+        # the None group).  Sampling and key derivation above already ran
+        # in schedule order, so grouping only reorders the DISPATCH — the
+        # host-RNG stream stays identical to the loop backend.
+        sig_groups: Dict[Any, List[int]] = {}
+        for i, cid in enumerate(cids):
+            sig_groups.setdefault(self.program.signature_for(cid),
+                                  []).append(i)
+        out: List[Optional[ClientResult]] = [None] * len(cids)
+        for sig, idxs in sig_groups.items():
+            stacked_p = stack_trees([start_params] * len(idxs))
+            stacked_o = stack_trees([self._opt_for(cids[i]) for i in idxs])
+            new_p, new_o, losses = self.program.run_vectorized(
+                stacked_p, stacked_o,
+                jnp.stack([reals_l[i] for i in idxs]),
+                jnp.stack([fakes_l[i] for i in idxs]),
+                lrs=[self.lr_for(cids[i]) for i in idxs],
+                keys=jnp.stack([keys[i] for i in idxs]),
+                mask=jnp.asarray([mask_l[i] for i in idxs], bool),
+                signature=sig)
+            for j, i in enumerate(idxs):
+                cid, s = cids[i], steps[i]
+                p = jax.tree.map(lambda x: x[j], new_p)
+                o = jax.tree.map(lambda x: x[j], new_o)
+                self._opt_overlay[cid] = o
+                out[i] = ClientResult(
+                    cid, p, o,
+                    {"losses": [float(l) for l in losses[j, :s]],
+                     "steps": s})
         return out
 
 

@@ -15,9 +15,12 @@ a :class:`TrafficLedger`; uplink trees can be run through pluggable
 compression codecs (fp16 / int8 quantize-dequantize / top-k sparsification
 with error feedback).
 
-LAN hops *inside* one client's split chain are a different budget, priced by
-``core/simulate.plan_epoch_time``; this module prices the WAN between the
-server and each client.
+LAN hops *inside* one client's split chain are a third budget: when
+training executes through the split (``core/split.SplitExecution``), the
+measured per-boundary payloads are recorded here too (``TrafficLedger``
+``lan`` column) and priced by ``core/simulate.plan_epoch_time``; the
+:class:`LinkModel`\\ s in this module price the WAN between the server and
+each client.
 """
 from __future__ import annotations
 
@@ -78,14 +81,26 @@ class LinkModel:
 
 @dataclass
 class TrafficLedger:
-    """Per-round, per-client byte accounting (benchmarks read this)."""
+    """Per-round, per-client byte accounting (benchmarks read this).
+
+    Three budgets: WAN uplink (D params/deltas), WAN downlink (fake
+    batches), and the LAN *inside* each client's split chain — the measured
+    per-boundary payloads of executed split training
+    (``core/split.SplitExecution.step_wire_bytes``), zero when the client
+    trains unsplit.
+    """
     up_bytes: Dict[str, int] = field(default_factory=dict)
     down_bytes: Dict[str, int] = field(default_factory=dict)
+    lan_bytes: Dict[str, int] = field(default_factory=dict)
 
-    def record(self, client_id: str, *, up: int = 0, down: int = 0) -> None:
+    def record(self, client_id: str, *, up: int = 0, down: int = 0,
+               lan: int = 0) -> None:
         self.up_bytes[client_id] = self.up_bytes.get(client_id, 0) + int(up)
         self.down_bytes[client_id] = (self.down_bytes.get(client_id, 0)
                                       + int(down))
+        if lan:
+            self.lan_bytes[client_id] = (self.lan_bytes.get(client_id, 0)
+                                         + int(lan))
 
     @property
     def total_up(self) -> int:
@@ -94,6 +109,10 @@ class TrafficLedger:
     @property
     def total_down(self) -> int:
         return sum(self.down_bytes.values())
+
+    @property
+    def total_lan(self) -> int:
+        return sum(self.lan_bytes.values())
 
 
 # ---------------------------------------------------------------------------

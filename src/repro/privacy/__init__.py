@@ -9,6 +9,7 @@ defenses.py  — DP-SGD (per-example clip + noise via kernels/dp_clip), a
 """
 from repro.privacy.attacks import (ActivationInversionAttack, delta_to_grad,
                                    invert_gradients, make_prefix_fn,
+                                   make_shipped_prefix_fn,
                                    membership_inference, membership_scores,
                                    plan_boundary_depths)
 from repro.privacy.defenses import (DPUplinkStage, RDPAccountant, dp_epsilon,
@@ -20,7 +21,8 @@ from repro.privacy.metrics import (attack_advantage, attack_auc,
 
 __all__ = [
     "ActivationInversionAttack", "delta_to_grad", "invert_gradients",
-    "make_prefix_fn", "membership_inference", "membership_scores",
+    "make_prefix_fn", "make_shipped_prefix_fn", "membership_inference",
+    "membership_scores",
     "plan_boundary_depths", "DPUplinkStage", "RDPAccountant", "dp_epsilon",
     "make_dp_d_step", "make_uplink_stage", "rdp_sampled_gaussian",
     "attack_advantage", "attack_auc", "best_match_psnr",

@@ -16,8 +16,12 @@ et al.), this module measures what each artifact gives away:
   * :class:`ActivationInversionAttack` — a decoder trained on auxiliary
     data to invert the smashed activations crossing one
     :class:`~repro.core.split.SplitPlan` boundary (the LAN surface inside
-    a client).  Leakage shrinks with split depth — the frontier
-    bench_privacy.py plots.
+    a client).  :func:`make_shipped_prefix_fn` targets the tensors an
+    *executed* split round actually ships — post-boundary-stage
+    (codec/DP), via ``core/split.SplitExecution`` — while
+    :func:`make_prefix_fn` keeps the clean-prefix probe for depth sweeps.
+    Leakage shrinks with split depth — the frontier bench_privacy.py
+    plots.
   * :func:`membership_inference` — threshold attack on the trained D
     (Yeom et al. 2018): D's realness logit is systematically higher on its
     own training reals than on held-out reals; AUC/advantage quantify the
@@ -135,6 +139,35 @@ def plan_boundary_depths(plan) -> List[int]:
         if a.device_id != b.device_id:
             depths.append(li)
     return depths
+
+
+def make_shipped_prefix_fn(split_exec, d_params, boundary_idx: int, *,
+                           key: Optional[jax.Array] = None):
+    """Prefix returning what an on-path device ACTUALLY observes at
+    ``boundary_idx`` during executed split training: the staged boundary
+    tensor — post-codec, post-DP-noise — not a separate clean forward.
+
+    ``split_exec`` is the ``core/split.SplitExecution`` the training step
+    runs (``FSLGANTrainer.split_execs[cid]``); feeding this prefix to
+    :class:`ActivationInversionAttack` measures the leakage of the split
+    round as deployed, so a lossy/noisy boundary stage shows up as a
+    weaker reconstruction.  ``key`` seeds a stochastic stage; each call
+    folds in a fresh counter — every observation is one LAN crossing with
+    its own noise draw, so a decoder can never learn to subtract a single
+    reused noise tensor.  Omitted, a default key is derived: a keyless
+    probe must never ship noiseless tensors and overstate the leakage of
+    the deployed round.
+    """
+    if key is None and getattr(split_exec.stage, "stochastic", False):
+        key = jax.random.PRNGKey(0)
+    calls = iter(range(1 << 30))
+
+    def prefix(x):
+        k = None if key is None else jax.random.fold_in(key, next(calls))
+        return split_exec.forward_boundaries(
+            d_params, x, key=k, upto=boundary_idx)[boundary_idx]
+
+    return prefix
 
 
 def _decoder_init(key, act_shape, out_shape, width: int = 32):

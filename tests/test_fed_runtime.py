@@ -494,6 +494,140 @@ def test_straggler_drop_commits_no_opt_state(parts):
     assert t.engine.ledger.down_bytes["c0"] == batch_b
 
 
+def test_split_loop_backend_bit_exact_vs_unsplit_sequential(parts):
+    """ISSUE 4 acceptance pin: with cfg.split enabled (identity stage) the
+    local step executes THROUGH the plan — staged segment forward/backward
+    with boundary hand-offs — yet training is bit-for-bit the seed's
+    monolithic sequential loop."""
+    ta = FSLGANTrainer(_cfg(**{"split.enabled": True}), parts, seed=0)
+    tb = FSLGANTrainer(_cfg(), parts, seed=0)
+    assert any(ex.num_boundaries > 0 for ex in ta.split_execs.values())
+    for _ in range(2):
+        ma = ta.train_epoch(batches_per_client=2, backend="loop")
+        mb = tb.train_epoch_sequential(batches_per_client=2)
+        assert ma["d_loss"] == mb["d_loss"]
+        assert ma["g_loss"] == mb["g_loss"]
+    for cid in ta.state.d_params:
+        for a, b in zip(jax.tree.leaves(ta.state.d_params[cid]),
+                        jax.tree.leaves(tb.state.d_params[cid])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_split_vectorized_backend_matches_loop(parts):
+    """ISSUE 4 acceptance pin: the split-executed step under the
+    vectorized backend (clients grouped per split signature, one jitted
+    vmap/scan program per group) == the loop backend to fp32 tolerance."""
+    ta = FSLGANTrainer(_cfg(**{"split.enabled": True}), parts, seed=0)
+    tb = FSLGANTrainer(_cfg(**{"split.enabled": True}), parts, seed=0)
+    # the paper pool gives these two clients DIFFERENT boundary
+    # signatures, so this exercises the per-signature grouped dispatch
+    sigs = {ta.program.signature_for(cid) for cid in ta._active_clients()}
+    assert len(sigs) == 2
+    for _ in range(2):
+        ma = ta.train_epoch(batches_per_client=2, backend="loop")
+        mb = tb.train_epoch(batches_per_client=2, backend="vectorized")
+        np.testing.assert_allclose(ma["d_loss"], mb["d_loss"],
+                                   atol=1e-5, rtol=1e-5)
+        assert ma["lan_mbytes"] == mb["lan_mbytes"] > 0
+    _d_param_trees_close(ta, tb)
+
+
+def test_split_reports_measured_lan_bytes(parts):
+    """ISSUE 4 acceptance: train_epoch with cfg.split reports nonzero
+    measured LAN boundary bytes equal to tree_bytes of the boundary
+    tensors the step actually ships (x steps x clients)."""
+    t = FSLGANTrainer(_cfg(**{"split.enabled": True}), parts, seed=0)
+    steps = 2
+    m = t.train_epoch(batches_per_client=steps)
+    expect = 0
+    for cid in t._active_clients():
+        ex = t.split_execs[cid]
+        real = jnp.zeros((t.batch_size, 28, 28, 1))
+        rec = ex.shipped_boundaries(t.state.d_params[cid], real, real)
+        expect += steps * sum(tree_bytes(x) for d in ("fwd", "bwd")
+                              for pair in rec[d] for x in pair)
+    assert expect > 0
+    assert m["lan_mbytes"] == pytest.approx(expect / 1e6)
+    assert t.engine.ledger.total_lan == expect
+    assert m["max_device_load"] > 0
+    # round time is priced from the measured bytes, not the bare constant
+    eng_split = t.engine.specs["c0"].compute_time_s
+    t_unsplit = FSLGANTrainer(_cfg(), parts, seed=0)
+    t_unsplit.train_epoch(batches_per_client=steps)
+    assert eng_split != t_unsplit.engine.specs["c0"].compute_time_s
+    # unsplit rounds ship nothing over the LAN
+    assert t_unsplit.engine.ledger.total_lan == 0
+    assert "lan_mbytes" not in t_unsplit.state.history
+
+
+@pytest.mark.parametrize("stage,backend", [("int8", "loop"),
+                                           ("fp16", "vectorized"),
+                                           ("dp", "vectorized")])
+def test_split_boundary_stage_matrix(parts, stage, backend):
+    """Codec/DP boundary stages compose with both backends: training stays
+    finite, the staged round differs from the identity-stage one, and
+    codec stages shrink the measured LAN bytes."""
+    over = {"split.enabled": True, "split.boundary_stage": stage,
+            "split.stage_sigma": 0.3}
+    t = FSLGANTrainer(_cfg(**over), parts, seed=0)
+    m = t.train_epoch(batches_per_client=1, backend=backend)
+    assert np.isfinite(m["d_loss"]) and m["num_clients"] == 2.0
+    t0 = FSLGANTrainer(_cfg(**{"split.enabled": True}), parts, seed=0)
+    m0 = t0.train_epoch(batches_per_client=1, backend=backend)
+    assert m["d_loss"] != m0["d_loss"]
+    if stage in ("int8", "fp16"):
+        assert 0 < m["lan_mbytes"] < m0["lan_mbytes"]
+    else:
+        assert m["lan_mbytes"] == m0["lan_mbytes"]
+
+
+def test_split_stochastic_stage_backends_draw_same_noise(parts):
+    """The dp boundary stage's noise keys derive from (round, client,
+    exec, batch, boundary), so loop and vectorized backends draw identical
+    noise — same pin as DP-SGD, now for the stage."""
+    over = {"split.enabled": True, "split.boundary_stage": "dp",
+            "split.stage_clip": 5.0, "split.stage_sigma": 0.4}
+    ta = FSLGANTrainer(_cfg(**over), parts, seed=0)
+    tb = FSLGANTrainer(_cfg(**over), parts, seed=0)
+    ma = ta.train_epoch(batches_per_client=2, backend="loop")
+    mb = tb.train_epoch(batches_per_client=2, backend="vectorized")
+    np.testing.assert_allclose(ma["d_loss"], mb["d_loss"],
+                               atol=1e-5, rtol=1e-5)
+    _d_param_trees_close(ta, tb)
+
+
+def test_sequential_reference_refuses_lossy_boundary_stage(parts):
+    """train_epoch_sequential trains the monolithic D — identical to the
+    split step only under the identity stage.  A lossy stage must be
+    refused, not silently diverge from every engine path."""
+    t = FSLGANTrainer(_cfg(**{"split.enabled": True,
+                              "split.boundary_stage": "int8"}),
+                      parts, seed=0)
+    with pytest.raises(ValueError, match="identity-stage"):
+        t.train_epoch_sequential(batches_per_client=1)
+    # identity stage keeps the reference valid (the bit-exact pin)
+    t2 = FSLGANTrainer(_cfg(**{"split.enabled": True}), parts, seed=0)
+    m = t2.train_epoch_sequential(batches_per_client=1)
+    assert np.isfinite(m["d_loss"])
+
+
+def test_split_composes_with_dp_sgd_and_codec(parts):
+    """Split execution x DP-SGD x uplink codec in one round, both
+    backends agreeing — the fourth axis joins the matrix instead of
+    becoming a divergent path."""
+    over = {"split.enabled": True, "fed.codec": "int8",
+            "privacy.enabled": True, "privacy.noise_multiplier": 0.5}
+    ta = FSLGANTrainer(_cfg(**over), parts, seed=0)
+    tb = FSLGANTrainer(_cfg(**over), parts, seed=0)
+    ma = ta.train_epoch(batches_per_client=1, backend="loop")
+    mb = tb.train_epoch(batches_per_client=1, backend="vectorized")
+    np.testing.assert_allclose(ma["d_loss"], mb["d_loss"],
+                               atol=1e-5, rtol=1e-5)
+    assert ma["dp_epsilon"] == mb["dp_epsilon"] > 0
+    assert ma["lan_mbytes"] == mb["lan_mbytes"] > 0
+    _d_param_trees_close(ta, tb)
+
+
 def test_per_client_schedules_thread_through_backends(parts):
     """cfg.fed.client_lr_scales / client_local_steps reach both backends:
     per-client step counts differ, scaling the LR changes training, and

@@ -1,16 +1,23 @@
 """FSL split + device-selection: property-based tests (hypothesis) over the
-paper's §4 invariants."""
+paper's §4 invariants, plus the executed-split layer (SplitExecution):
+staged gradients vs monolithic, boundary stages, measured LAN pricing."""
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from _hyp import given, settings, st
 
-from repro.config import DCGANConfig
+from repro.config import DCGANConfig, SplitConfig
 from repro.core.devices import Client, Device, make_pool
+from repro.core.gan import bce_logits, d_loss_fn
 from repro.core.selection import STRATEGIES, make_plan, plan_all_clients
 from repro.core.simulate import epoch_time_report, strategy_sweep
-from repro.core.split import InfeasibleSplit, SplitPlan, split_forward
+from repro.core.split import (BoundaryStage, CodecBoundaryStage,
+                              GaussianBoundaryStage, InfeasibleSplit,
+                              SplitExecution, SplitPlan, make_boundary_stage,
+                              partition_params, plan_segments, split_forward)
 from repro.models.dcgan import (disc_apply, disc_init, disc_apply_layer,
                                 disc_layer_costs, disc_layer_names)
 
@@ -139,3 +146,234 @@ def test_time_model_hops_priced():
     t_with = plan_epoch_time(plan, client, batches_per_epoch=1,
                              lan_latency_s=0.05, compute_unit_s=0.0)
     assert t_with == pytest.approx(plan.num_boundaries * 2 * 0.05)
+
+
+def test_time_model_measured_bytes():
+    """Measured-bytes LAN pricing: each hop event costs latency +
+    serialization; the 50 ms constant stays the no-measurement fallback."""
+    client = _client([1, 1, 1, 1, 1], [1.0] * 5)
+    plan = make_plan(client, LAYERS, "sorted_single", seed=0)
+    from repro.core.simulate import plan_epoch_time
+    events = [1_000_000, 250_000, 250_000]        # bytes per hop crossing
+    t = plan_epoch_time(plan, client, batches_per_epoch=2,
+                        lan_latency_s=0.01, compute_unit_s=0.0,
+                        boundary_bytes=events, lan_bandwidth_bps=8e6)
+    per_batch = sum(0.01 + 8.0 * b / 8e6 for b in events)
+    assert t == pytest.approx(2 * per_batch)
+    # empty measurement (0-boundary plan trained split): pure compute
+    assert plan_epoch_time(plan, client, batches_per_epoch=1,
+                           lan_latency_s=0.05, compute_unit_s=0.0,
+                           boundary_bytes=[]) == 0.0
+    # fallback unchanged
+    assert plan_epoch_time(plan, client, batches_per_epoch=1,
+                           lan_latency_s=0.05, compute_unit_s=0.0) \
+        == pytest.approx(plan.num_boundaries * 2 * 0.05)
+
+
+# ---------------------------------------------------------------------------
+# executed split: SplitExecution staged value_and_grad + boundary stages
+# ---------------------------------------------------------------------------
+
+_C = DCGANConfig(base_filters=4)
+_TAILS = (functools.partial(bce_logits, target=1.0),
+          functools.partial(bce_logits, target=0.0))
+
+
+def _exec_fixture(caps, tfs, strategy, seed=3, stage=None):
+    costs = disc_layer_costs(_C)
+    layers = [(n, costs[n]) for n in disc_layer_names(_C)]
+    plan = make_plan(_client(caps, tfs), layers, strategy, seed)
+    return SplitExecution(plan, functools.partial(disc_apply_layer, c=_C),
+                          _TAILS, stage=stage)
+
+
+def _batches(n=4, seed=0):
+    k = jax.random.PRNGKey(seed)
+    real = jax.random.normal(jax.random.fold_in(k, 1), (n, 28, 28, 1))
+    fake = jax.random.normal(jax.random.fold_in(k, 2), (n, 28, 28, 1))
+    return real, fake
+
+
+def test_split_value_and_grad_bitexact_monolithic():
+    """Tentpole pin: the staged split step IS the monolithic gradient under
+    the identity stage — executing through the plan changes where layers
+    run and what crosses the LAN, never the math, bit for bit."""
+    params = disc_init(jax.random.PRNGKey(0), _C)
+    real, fake = _batches()
+    mono = jax.jit(lambda p, r, f: jax.value_and_grad(d_loss_fn)(
+        p, r, f, _C))
+    ml, mg = mono(params, real, fake)
+    for strategy in STRATEGIES:
+        ex = _exec_fixture([2, 2], [1.0, 2.0], strategy)
+        assert ex.num_boundaries >= 1
+        sl, sg = jax.jit(ex.value_and_grad)(params, real, fake)
+        assert np.asarray(sl) == np.asarray(ml)
+        for a, b in zip(jax.tree.leaves(sg), jax.tree.leaves(mg)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=12, deadline=None)
+@given(devs=devices_strategy,
+       strategy=st.sampled_from(STRATEGIES),
+       seed=st.integers(min_value=0, max_value=99))
+def test_random_feasible_plans_execute_like_monolithic(devs, strategy, seed):
+    """Property: ANY feasible plan over ANY device roster covers the model
+    in order AND its staged gradients match the monolithic ones."""
+    costs = disc_layer_costs(_C)
+    layers = [(n, costs[n]) for n in disc_layer_names(_C)]
+    client = _client([c for c, _ in devs], [t for _, t in devs])
+    if client.total_capacity() < len(layers):
+        with pytest.raises(InfeasibleSplit):
+            make_plan(client, layers, strategy, seed)
+        return
+    plan = make_plan(client, layers, strategy, seed)
+    assert plan.layers_in_order() == [n for n, _ in layers]
+    ex = SplitExecution(plan, functools.partial(disc_apply_layer, c=_C),
+                        _TAILS)
+    params = disc_init(jax.random.PRNGKey(0), _C)
+    real, fake = _batches(n=2, seed=seed)
+    ml, mg = jax.value_and_grad(d_loss_fn)(params, real, fake, _C)
+    sl, sg = ex.value_and_grad(params, real, fake)
+    np.testing.assert_allclose(np.asarray(sl), np.asarray(ml),
+                               atol=1e-6, rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(sg), jax.tree.leaves(mg)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6, rtol=1e-6)
+
+
+def test_plan_segments_and_partition_params():
+    ex = _exec_fixture([2, 2], [1.0, 2.0], "sorted_single")
+    segs = plan_segments(ex.plan)
+    assert len(segs) - 1 == ex.plan.num_boundaries == ex.num_boundaries
+    assert [n for _, names in segs for n in names] \
+        == ex.plan.layers_in_order()
+    params = disc_init(jax.random.PRNGKey(0), _C)
+    parts = partition_params(ex.plan, params)
+    seen = [n for part in parts for n in part]
+    assert seen == ex.plan.layers_in_order()
+
+
+def test_shipped_boundaries_and_wire_bytes_agree():
+    """What `shipped_boundaries` records is what `step_wire_bytes` prices:
+    fwd + bwd tensors for both passes, native bytes under identity."""
+    ex = _exec_fixture([2, 2], [1.0, 2.0], "sorted_multi")
+    params = disc_init(jax.random.PRNGKey(0), _C)
+    real, fake = _batches()
+    rec = ex.shipped_boundaries(params, real, fake)
+    assert len(rec["fwd"]) == len(rec["bwd"]) == ex.num_boundaries
+    from repro.fed.transport import tree_bytes
+    shipped = sum(tree_bytes(t) for d in ("fwd", "bwd")
+                  for pair in rec[d] for t in pair)
+    total, per_b = ex.step_wire_bytes(params, real.shape)
+    assert total == shipped > 0
+    assert len(per_b) == ex.num_boundaries
+    # identity fwd tensor == the clean prefix activation
+    clean = ex.forward_boundaries(params, real)
+    for b in range(ex.num_boundaries):
+        np.testing.assert_array_equal(np.asarray(rec["fwd"][b][0]),
+                                      np.asarray(clean[b]))
+
+
+def test_codec_boundary_stages_price_and_transform():
+    from repro.fed.transport import make_codec
+    shape = (4, 7, 7, 8)
+    x = jax.random.normal(jax.random.PRNGKey(0), shape)
+    n = int(np.prod(shape))
+    ident = BoundaryStage()
+    assert ident.wire_bytes(shape) == n * 4
+    np.testing.assert_array_equal(np.asarray(ident.apply(x)), np.asarray(x))
+    fp16 = CodecBoundaryStage(make_codec("fp16"))
+    assert fp16.wire_bytes(shape) == n * 2
+    assert float(jnp.max(jnp.abs(fp16.apply(x) - x))) < 1e-2
+    int8 = CodecBoundaryStage(make_codec("int8"))
+    assert int8.wire_bytes(shape) == n + 4
+    topk = CodecBoundaryStage(make_codec("topk", topk_frac=0.25,
+                                         error_feedback=False))
+    assert topk.wire_bytes(shape) == int(np.ceil(0.25 * n)) * 8
+    assert np.count_nonzero(np.asarray(topk.apply(x))) \
+        <= int(np.ceil(0.25 * n))
+    # stateful codecs cannot live inside a jitted step
+    with pytest.raises(ValueError):
+        CodecBoundaryStage(make_codec("topk", error_feedback=True))
+
+
+def test_gaussian_boundary_stage_clips_and_noises():
+    stage = GaussianBoundaryStage(clip=1.0, sigma=0.0)
+    x = 100.0 * jax.random.normal(jax.random.PRNGKey(0), (3, 50))
+    y = stage.apply(x, jax.random.PRNGKey(1))
+    norms = np.linalg.norm(np.asarray(y).reshape(3, -1), axis=1)
+    assert np.all(norms <= 1.0 + 1e-5)
+    noisy = GaussianBoundaryStage(clip=1.0, sigma=0.5)
+    y1 = noisy.apply(x, jax.random.PRNGKey(1))
+    y2 = noisy.apply(x, jax.random.PRNGKey(1))
+    y3 = noisy.apply(x, jax.random.PRNGKey(2))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    assert float(jnp.max(jnp.abs(y1 - y3))) > 0.0
+    assert noisy.stochastic and not stage.name == "identity"
+
+
+def test_make_boundary_stage_factory():
+    assert make_boundary_stage(SplitConfig()).name == "identity"
+    assert make_boundary_stage(
+        SplitConfig(boundary_stage="int8")).name == "int8"
+    dp = make_boundary_stage(SplitConfig(boundary_stage="dp",
+                                         stage_clip=2.0, stage_sigma=0.7))
+    assert isinstance(dp, GaussianBoundaryStage)
+    assert dp.clip == 2.0 and dp.sigma == 0.7
+    with pytest.raises(ValueError):
+        make_boundary_stage(SplitConfig(boundary_stage="gzip"))
+
+
+def test_stage_parameters_are_part_of_the_signature():
+    """Regression: the compilation signature must distinguish stages by
+    PARAMETERS, not just name — two dp stages with different sigmas (or
+    top-k stages with different fracs) must never share a compiled step."""
+    from repro.fed.transport import make_codec
+    a = _exec_fixture([2, 2], [1.0, 2.0], "sorted_multi",
+                      stage=GaussianBoundaryStage(1.0, 0.1))
+    b = _exec_fixture([2, 2], [1.0, 2.0], "sorted_multi",
+                      stage=GaussianBoundaryStage(1.0, 2.0))
+    assert a.signature != b.signature
+    ta = _exec_fixture([2, 2], [1.0, 2.0], "sorted_multi",
+                       stage=CodecBoundaryStage(make_codec(
+                           "topk", topk_frac=0.1, error_feedback=False)))
+    tb = _exec_fixture([2, 2], [1.0, 2.0], "sorted_multi",
+                       stage=CodecBoundaryStage(make_codec(
+                           "topk", topk_frac=0.5, error_feedback=False)))
+    assert ta.signature != tb.signature
+    # same depths + same stage params => shared program
+    c = _exec_fixture([2, 2], [1.0, 2.0], "sorted_multi",
+                      stage=GaussianBoundaryStage(1.0, 0.1))
+    assert a.signature == c.signature
+
+
+def test_shipped_prefix_defaults_to_noised_tensors():
+    """Regression: probing a stochastic-stage boundary WITHOUT a key must
+    still ship noised tensors — a keyless probe that silently dropped the
+    noise would overstate the deployed round's leakage."""
+    from repro.privacy import make_shipped_prefix_fn
+    ex = _exec_fixture([2, 2], [1.0, 2.0], "sorted_multi",
+                       stage=GaussianBoundaryStage(5.0, 1.0))
+    params = disc_init(jax.random.PRNGKey(0), _C)
+    real, _ = _batches()
+    noised = make_shipped_prefix_fn(ex, params, 0)(real)
+    clean = _exec_fixture([2, 2], [1.0, 2.0], "sorted_multi") \
+        .forward_boundaries(params, real)[0]
+    assert float(jnp.max(jnp.abs(noised - clean))) > 0.0
+
+
+def test_split_execution_stage_changes_downstream_compute():
+    """A lossy boundary stage feeds the STAGED activation to the next
+    segment — the executed round differs from the clean one (that is the
+    point: the attack surface and the training numerics are now the same
+    tensors)."""
+    from repro.fed.transport import make_codec
+    stage = CodecBoundaryStage(make_codec("int8"))
+    clean = _exec_fixture([2, 2], [1.0, 2.0], "sorted_multi")
+    lossy = _exec_fixture([2, 2], [1.0, 2.0], "sorted_multi", stage=stage)
+    params = disc_init(jax.random.PRNGKey(0), _C)
+    real, fake = _batches()
+    lc, gc = clean.value_and_grad(params, real, fake)
+    ll, gl = lossy.value_and_grad(params, real, fake)
+    assert float(ll) != float(lc)
+    assert np.isfinite(float(ll))
