@@ -1,0 +1,169 @@
+"""Control-plane benchmarks (control/ subsystem).
+
+Three closed loops, measured against their best static competitor:
+
+  1. **Adaptive codec** vs every static codec: total uplink bytes and the
+     final measured delta error over a multi-round run.  The acceptance
+     frontier (ISSUE 5): adaptive bytes <= the best static codec that
+     stays inside the error budget, at equal-or-better final delta error.
+  2. **Adaptive sigma** vs the static config sigma: the controller spends
+     a total (epsilon, delta) budget over a fixed horizon without ever
+     crossing it, where the static sigma either overspends or sandbags.
+  3. **Adaptive deadline**: the controller cuts the measured round time by
+     dropping the tail of the finish distribution a static (no-deadline)
+     run waits for.
+
+Writes machine-readable ``BENCH_control.json`` next to this file
+(uploaded with the other BENCH_*.json artifacts in CI).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.gan import FSLGANTrainer
+from repro.data import partition_dirichlet, synthetic_mnist
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "BENCH_control.json")
+
+ERROR_BUDGET = 0.05
+EPS_BUDGET = 3.0
+
+
+def _cfg(clients: int, **over):
+    base = {"shape.global_batch": 8, "fsl.num_clients": clients,
+            "model.dcgan.base_filters": 8}
+    base.update(over)
+    return get_config("dcgan-mnist").override(base)
+
+
+def _parts(clients: int):
+    imgs, labels = synthetic_mnist(120 * clients, seed=0)
+    return partition_dirichlet(imgs, labels, clients, alpha=0.5, seed=0)
+
+
+def _run_rounds(tr: FSLGANTrainer, rounds: int, batches: int):
+    for _ in range(rounds):
+        tr.train_epoch(batches_per_client=batches)
+    errs = [fb.codec_error for fb in tr.feedback
+            if not math.isnan(fb.codec_error)]
+    return {
+        "up_bytes": int(tr.engine.ledger.total_up),
+        "final_codec_error": errs[-1] if errs else 0.0,
+        "final_d_loss": tr.feedback[-1].d_loss,
+        "codec_trace": [fb.codec for fb in tr.feedback],
+    }
+
+
+def run(fast: bool = False) -> List[Tuple[str, float, str]]:
+    clients = 2 if fast else 3
+    batches = 1 if fast else 2
+    rounds = 3 if fast else 5
+    parts = _parts(clients)
+    rows: List[Tuple[str, float, str]] = []
+    results = {"config": {"clients": clients, "batches": batches,
+                          "rounds": rounds, "fast": fast,
+                          "error_budget": ERROR_BUDGET,
+                          "epsilon_budget": EPS_BUDGET}}
+
+    # 1. adaptive codec vs the static frontier -----------------------------
+    statics = {}
+    for codec in ("none", "fp16", "int8", "topk"):
+        tr = FSLGANTrainer(_cfg(clients, **{"fed.codec": codec}), parts,
+                           seed=0)
+        t0 = time.time()
+        statics[codec] = _run_rounds(tr, rounds, batches)
+        rows.append((f"control_static[{codec}]",
+                     (time.time() - t0) * 1e6 / rounds,
+                     f"up={statics[codec]['up_bytes']} "
+                     f"err={statics[codec]['final_codec_error']:.4f}"))
+    tr = FSLGANTrainer(_cfg(clients, **{
+        "control.mode": "adaptive", "control.controllers": ["codec"],
+        "control.error_budget": ERROR_BUDGET}), parts, seed=0)
+    t0 = time.time()
+    adaptive = _run_rounds(tr, rounds, batches)
+    us_adaptive = (time.time() - t0) * 1e6 / rounds
+    # the frontier comparison: best static = fewest bytes among codecs
+    # whose final delta error stays inside the budget
+    in_budget = {k: v for k, v in statics.items()
+                 if v["final_codec_error"] <= ERROR_BUDGET}
+    best_static = min(in_budget, key=lambda k: in_budget[k]["up_bytes"])
+    bytes_ok = adaptive["up_bytes"] <= statics[best_static]["up_bytes"]
+    err_ok = adaptive["final_codec_error"] <= max(
+        statics[best_static]["final_codec_error"], ERROR_BUDGET)
+    rows.append(("control_adaptive_codec", us_adaptive,
+                 f"up={adaptive['up_bytes']} "
+                 f"err={adaptive['final_codec_error']:.4f} "
+                 f"trace={'>'.join(adaptive['codec_trace'])} "
+                 f"best_static={best_static} frontier_ok={bytes_ok and err_ok}"))
+    results["codec"] = {"static": statics, "adaptive": adaptive,
+                        "best_static": best_static,
+                        "adaptive_bytes_le_best_static": bytes_ok,
+                        "adaptive_error_ok": err_ok,
+                        "frontier_ok": bytes_ok and err_ok}
+
+    # 2. adaptive sigma: budget spend vs static ----------------------------
+    horizon = rounds
+    priv = {"privacy.enabled": True, "privacy.mode": "uplink",
+            "privacy.noise_multiplier": 1.0}
+    tr_static = FSLGANTrainer(_cfg(clients, **priv), parts, seed=0)
+    for _ in range(horizon):
+        m_static = tr_static.train_epoch(batches_per_client=batches)
+    tr_ad = FSLGANTrainer(_cfg(clients, **priv, **{
+        "control.mode": "adaptive", "control.controllers": ["sigma"],
+        "control.epsilon_budget": EPS_BUDGET,
+        "control.horizon_rounds": horizon}), parts, seed=0)
+    t0 = time.time()
+    for _ in range(horizon):
+        m_ad = tr_ad.train_epoch(batches_per_client=batches)
+    us_sigma = (time.time() - t0) * 1e6 / horizon
+    budget_ok = m_ad["dp_epsilon"] <= EPS_BUDGET * (1 + 1e-9)
+    rows.append(("control_adaptive_sigma", us_sigma,
+                 f"eps={m_ad['dp_epsilon']:.3f}<=budget={EPS_BUDGET} "
+                 f"static_eps={m_static['dp_epsilon']:.3f} "
+                 f"sigma_trace={[round(f.sigma, 3) for f in tr_ad.feedback]} "
+                 f"budget_ok={budget_ok}"))
+    results["sigma"] = {
+        "budget": EPS_BUDGET, "horizon": horizon,
+        "adaptive_epsilon": m_ad["dp_epsilon"],
+        "static_epsilon": m_static["dp_epsilon"],
+        "sigma_trace": [fb.sigma for fb in tr_ad.feedback],
+        "epsilon_trace": [fb.dp_epsilon for fb in tr_ad.feedback],
+        "budget_ok": budget_ok}
+
+    # 3. adaptive deadline vs waiting out the tail -------------------------
+    sched = {"fed.client_local_steps": {"c1": 4}}
+    tr_wait = FSLGANTrainer(_cfg(clients, **sched), parts, seed=0)
+    for _ in range(rounds):
+        m_wait = tr_wait.train_epoch(batches_per_client=batches)
+    tr_dl = FSLGANTrainer(_cfg(clients, **sched, **{
+        "control.mode": "adaptive", "control.controllers": ["deadline"],
+        "control.deadline_quantile": 0.5, "control.deadline_slack": 1.1}),
+        parts, seed=0)
+    t0 = time.time()
+    for _ in range(rounds):
+        m_dl = tr_dl.train_epoch(batches_per_client=batches)
+    us_dl = (time.time() - t0) * 1e6 / rounds
+    rows.append(("control_adaptive_deadline", us_dl,
+                 f"round_s={m_dl['round_time_s']:.1f} vs "
+                 f"wait={m_wait['round_time_s']:.1f} "
+                 f"stragglers={m_dl['stragglers']:.0f} "
+                 f"deadline={tr_dl.engine.deadline_s:.1f}"))
+    results["deadline"] = {
+        "adaptive_round_s": m_dl["round_time_s"],
+        "static_round_s": m_wait["round_time_s"],
+        "deadline_s": tr_dl.engine.deadline_s,
+        "deadline_trace": [fb.deadline_s for fb in tr_dl.feedback],
+        "stragglers": m_dl["stragglers"],
+        "faster": m_dl["round_time_s"] < m_wait["round_time_s"]}
+
+    with open(JSON_PATH, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    rows.append(("control_json", 0.0, f"wrote {JSON_PATH}"))
+    return rows

@@ -161,7 +161,7 @@ def _split_boundary_attack(fast: bool, parts):
                 "depth": ex.boundaries[b].depth,
                 # priced at the ROUND's batch size: these rows reconcile
                 # with round_lan_mbytes (x 2 directions x passes x steps)
-                "wire_bytes": ex.stage.wire_bytes(ex.boundary_shapes(
+                "wire_bytes": ex.stages[b].wire_bytes(ex.boundary_shapes(
                     d_params, (tr.batch_size,) + victim.shape[1:])[b]),
                 "dcor": distance_correlation(victim, prefix(victim)),
                 "psnr_db": best_match_psnr(rec, victim),

@@ -15,6 +15,9 @@ pass (fewer epochs/seeds).
   bench_privacy       —      privacy frontier: split-depth leakage, DP
                              sigma sweep (eps/utility/inversion PSNR),
                              dp_clip kernel; writes BENCH_privacy.json
+  bench_control       —      closed-loop control plane: adaptive codec vs
+                             the static frontier, sigma budget spend,
+                             deadline retuning; writes BENCH_control.json
 """
 from __future__ import annotations
 
@@ -26,13 +29,14 @@ import traceback
 
 def main() -> None:
     fast = os.environ.get("BENCH_FAST", "0") == "1"
-    from benchmarks import (bench_convergence, bench_fed_runtime,
-                            bench_heterogeneity, bench_images, bench_kernels,
-                            bench_lm_train, bench_privacy, bench_roofline,
-                            bench_time)
+    from benchmarks import (bench_control, bench_convergence,
+                            bench_fed_runtime, bench_heterogeneity,
+                            bench_images, bench_kernels, bench_lm_train,
+                            bench_privacy, bench_roofline, bench_time)
     modules = [
         ("bench_time", bench_time),
         ("bench_fed_runtime", bench_fed_runtime),
+        ("bench_control", bench_control),
         ("bench_privacy", bench_privacy),
         ("bench_kernels", bench_kernels),
         ("bench_lm_train", bench_lm_train),

@@ -4,8 +4,11 @@ hop model.
 
 This is the PLAN-ONLY view.  Since ISSUE 4 the plan also *executes*:
 ``examples/split_training_demo.py`` runs a federated round through the
-split (staged forward/backward, boundary stages, measured LAN bytes) and
-is the recommended walkthrough.
+split (staged forward/backward, boundary stages, measured LAN bytes).
+Since ISSUE 5 the plan is also *controlled*: the per-device loads printed
+below are exactly ``RoundFeedback.device_loads``, the field the split
+controller watches to re-run this very planning when the measured
+imbalance drifts — ``examples/adaptive_control_demo.py`` closes that loop.
 
 Run: PYTHONPATH=src python examples/device_selection_demo.py
 """
@@ -40,11 +43,19 @@ def main():
         t = plan_epoch_time(plan, client, compute_unit_s=0.2)
         route = " -> ".join(f"{p.device_id}[{','.join(p.layer_names)}]"
                             for p in plan.portions)
+        loads = plan.device_loads()
+        imb = max(loads.values()) / (sum(loads.values()) / len(loads))
         print(f"\n{strat} (epoch {t:.1f}s, {plan.num_boundaries} LAN hops):")
         print(f"  {route}")
+        print(f"  RoundFeedback.device_loads = "
+              f"{ {k: round(v, 2) for k, v in loads.items()} } "
+              f"(max/mean imbalance {imb:.2f} — the split controller "
+              f"replans past control.imbalance_threshold)")
 
-    print("\nnext: examples/split_training_demo.py EXECUTES a plan — "
-          "staged training, measured LAN bytes, boundary leakage.")
+    print("\nnext: examples/split_training_demo.py EXECUTES a plan "
+          "(staged training, measured LAN bytes, boundary leakage); "
+          "examples/adaptive_control_demo.py CONTROLS it (replan + "
+          "per-boundary noise from measured drift).")
 
 
 if __name__ == "__main__":

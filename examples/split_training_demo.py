@@ -8,6 +8,12 @@ LAN through the configured boundary stage, and the round reports measured
 per-device load + LAN bytes.  A final readout attacks the tensors the
 round actually shipped (post-stage), per boundary.
 
+Since ISSUE 5 every one of these measurements lands in a typed
+``RoundFeedback`` record (``trainer.feedback``) — printed below — which is
+what the control plane's split controller consumes to replan and noise
+leaky boundaries: see ``examples/adaptive_control_demo.py`` for the
+closed loop.  ``examples/device_selection_demo.py`` is the plan-only view.
+
 Run: PYTHONPATH=src python examples/split_training_demo.py
 """
 import jax
@@ -61,6 +67,18 @@ def main():
     print(f"  WAN up/down     {m['up_mbytes']:.3f} / "
           f"{m['down_mbytes']:.3f} MB")
 
+    print("\n== the RoundFeedback the round emitted "
+          "(what the split controller reads) ==")
+    fb = tr.feedback[-1]
+    print(f"  lan_bytes={fb.lan_bytes}  up_bytes={fb.up_bytes}  "
+          f"round_time_s={fb.round_time_s:.1f}")
+    print(f"  device_loads (imbalance drift -> replan): "
+          f"{ {k: round(v) for k, v in fb.device_loads.items()} }")
+    print(f"  client_finish_s (deadline controller): "
+          f"{ {k: round(v, 1) for k, v in fb.client_finish_s.items()} }")
+    print("  boundary_dcor fills in under control.mode='adaptive' "
+          "(examples/adaptive_control_demo.py)")
+
     print("\n== per-device load (compute units / resident D params) ==")
     param_bytes = {}
     for cid, plan in tr.plans.items():
@@ -91,7 +109,7 @@ def main():
             atk.train(aux, steps=60, batch=16)
             psnr = best_match_psnr(atk.reconstruct(victim), victim)
             dcor = distance_correlation(victim, prefix(victim))
-            wire = ex.stage.wire_bytes(ex.boundary_shapes(
+            wire = ex.stages[b].wire_bytes(ex.boundary_shapes(
                 d_params, (t.batch_size,) + victim.shape[1:])[b])
             print(f"  stage={stage:8s} boundary {b} "
                   f"(depth {ex.boundaries[b].depth}): "

@@ -1,7 +1,9 @@
 from repro.config.base import (  # noqa: F401
-    ATTN_FULL, ATTN_NONE, ATTN_SLIDING, AUDIO, DCGAN, DENSE, FAMILIES, HYBRID,
-    INPUT_SHAPES, MOE, SSM, VLM, DCGANConfig, EncDecConfig, FedConfig,
-    FSLConfig, MLAConfig, ModelConfig, MoEConfig, OptimConfig, ParallelConfig,
-    PrivacyConfig, RGLRUConfig, RWKVConfig, RunConfig, ShapeConfig,
-    SplitConfig, reduce_for_smoke,
+    ATTN_FULL, ATTN_NONE, ATTN_SLIDING, AUDIO, BOUNDARY_STAGES, CODECS,
+    CONTROL_MODES, CONTROLLERS, DCGAN, DENSE, FAMILIES, FED_BACKENDS,
+    FED_MODES, HYBRID, INPUT_SHAPES, MOE, PRIVACY_MODES,
+    SELECTION_STRATEGIES, SSM, VLM, ControlConfig, DCGANConfig, EncDecConfig,
+    FedConfig, FSLConfig, MLAConfig, ModelConfig, MoEConfig, OptimConfig,
+    ParallelConfig, PrivacyConfig, RGLRUConfig, RWKVConfig, RunConfig,
+    ShapeConfig, SplitConfig, reduce_for_smoke,
 )

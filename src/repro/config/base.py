@@ -35,6 +35,36 @@ ATTN_FULL = "full"            # causal full attention
 ATTN_SLIDING = "sliding"      # sliding-window causal attention
 ATTN_NONE = "none"            # attention-free (e.g. RWKV)
 
+# ---------------------------------------------------------------------------
+# Valid knob names — the single source of truth.
+#
+# Runtime factories (fed/transport.make_codec, core/split.make_boundary_stage,
+# core/selection.STRATEGIES, fed/programs.BACKENDS) key off these same names;
+# validating HERE means a typo'd config fails at construction with the list of
+# valid options instead of deep inside a jitted program.
+# ---------------------------------------------------------------------------
+
+CODECS = ("none", "fp16", "int8", "topk")
+BOUNDARY_STAGES = ("identity", "fp16", "int8", "topk", "dp")
+SELECTION_STRATEGIES = ("random_single", "random_multi", "sorted_single",
+                        "sorted_multi")
+FED_MODES = ("sync", "fedasync", "fedbuff")
+FED_BACKENDS = ("loop", "vectorized")
+PRIVACY_MODES = ("dp_sgd", "uplink")
+CONTROL_MODES = ("frozen", "adaptive")
+CONTROLLERS = ("codec", "sigma", "split", "deadline")
+
+
+def _check_name(section: str, field_name: str, value: str,
+                valid: Tuple[str, ...], *, aliases: Tuple[str, ...] = ()
+                ) -> None:
+    """Construction-time name validation with the valid options spelled out."""
+    if value in valid or value in aliases:
+        return
+    raise ValueError(
+        f"{section}.{field_name}={value!r} is not a valid option; "
+        f"expected one of {list(valid)}")
+
 
 @dataclass
 class MoEConfig:
@@ -312,6 +342,9 @@ class FSLConfig:
     heterogeneity: str = "paper"          # device-pool preset (see core/devices.py)
     seed: int = 0
 
+    def __post_init__(self) -> None:
+        _check_name("fsl", "selection", self.selection, SELECTION_STRATEGIES)
+
 
 @dataclass
 class FedConfig:
@@ -356,6 +389,12 @@ class FedConfig:
     kernel_aggregation: bool = False   # use the fedavg Pallas kernel
     kernel_interpret: bool = False     # Pallas interpret mode (CPU tests)
 
+    def __post_init__(self) -> None:
+        _check_name("fed", "mode", self.mode, FED_MODES)
+        _check_name("fed", "backend", self.backend, FED_BACKENDS)
+        _check_name("fed", "codec", self.codec, CODECS,
+                    aliases=("", "identity"))
+
 
 @dataclass
 class SplitConfig:
@@ -381,6 +420,13 @@ class SplitConfig:
     # LAN serialization rate for measured-bytes pricing (latency comes
     # from cfg.fsl.lan_latency_s, the paper's 50 ms)
     lan_bandwidth_bps: float = 100e6
+
+    def __post_init__(self) -> None:
+        _check_name("split", "boundary_stage", self.boundary_stage,
+                    BOUNDARY_STAGES, aliases=("", "none"))
+        if self.strategy:
+            _check_name("split", "strategy", self.strategy,
+                        SELECTION_STRATEGIES)
 
 
 @dataclass
@@ -409,6 +455,66 @@ class PrivacyConfig:
     use_kernel: bool = False           # dp_clip Pallas kernel for clip+noise
     kernel_interpret: bool = False     # Pallas interpret mode (CPU tests)
 
+    def __post_init__(self) -> None:
+        _check_name("privacy", "mode", self.mode, PRIVACY_MODES)
+
+
+@dataclass
+class ControlConfig:
+    """Closed-loop control plane (src/repro/control/): per-round controllers
+    that turn measured :class:`~repro.control.RoundFeedback` into knob
+    decisions between rounds.
+
+    ``mode='frozen'`` (default) keeps every knob at its static config value
+    — bit-exact with the pre-control build (pinned test); feedback is still
+    emitted.  ``mode='adaptive'`` runs the controllers named in
+    ``controllers`` each round:
+
+      * ``codec``    — uplink codec from measured bandwidth + the observed
+                       bytes-vs-delta-error frontier (fed/transport);
+      * ``sigma``    — DP noise multiplier inverted from the RDP epsilon
+                       curve to spend ``(epsilon_budget, privacy.delta)``
+                       over ``horizon_rounds`` without ever exceeding it;
+      * ``split``    — re-plan device selection / per-boundary stages when
+                       measured load imbalance or boundary dCor drifts;
+      * ``deadline`` — sync straggler deadline from the measured per-client
+                       round-time distribution.
+    """
+    mode: str = "frozen"               # frozen | adaptive
+    controllers: Tuple[str, ...] = ()  # subset of CONTROLLERS; () = none
+    # codec controller
+    codec_candidates: Tuple[str, ...] = ("topk", "int8", "fp16", "none")
+    error_budget: float = 0.05         # max relative L2 delta error on uplink
+    target_uplink_s: float = 0.0       # prefer lossless if it fits (0 = off)
+    # sigma controller
+    epsilon_budget: float = 0.0        # total epsilon to spend (0 = off)
+    horizon_rounds: int = 0            # rounds the budget must cover
+    sigma_min: float = 1e-2
+    sigma_max: float = 1e4
+    sigma_rel_change: float = 0.05     # ignore smaller rebinds (dp_sgd:
+                                       # bounds per-round recompilation)
+    # split controller
+    imbalance_threshold: float = 2.0   # max/mean device load before replan
+    dcor_threshold: float = 0.5        # boundary dCor above this gets noised
+    replan_strategy: str = "sorted_multi"
+    leaky_stage: str = "dp"            # stage assigned to leaky boundaries
+    probe_batch: int = 16              # examples per boundary-dCor probe
+    # deadline controller
+    deadline_quantile: float = 0.9     # of the measured finish distribution
+    deadline_slack: float = 1.25
+    warmup_rounds: int = 1             # rounds of feedback before deciding
+
+    def __post_init__(self) -> None:
+        _check_name("control", "mode", self.mode, CONTROL_MODES)
+        for c in self.controllers:
+            _check_name("control", "controllers", c, CONTROLLERS)
+        for name in self.codec_candidates:
+            _check_name("control", "codec_candidates", name, CODECS)
+        _check_name("control", "replan_strategy", self.replan_strategy,
+                    SELECTION_STRATEGIES)
+        _check_name("control", "leaky_stage", self.leaky_stage,
+                    BOUNDARY_STAGES)
+
 
 @dataclass
 class ShapeConfig:
@@ -436,6 +542,7 @@ class RunConfig:
     fed: FedConfig = field(default_factory=FedConfig)
     split: SplitConfig = field(default_factory=SplitConfig)
     privacy: PrivacyConfig = field(default_factory=PrivacyConfig)
+    control: ControlConfig = field(default_factory=ControlConfig)
     shape: ShapeConfig = field(default_factory=lambda: INPUT_SHAPES["train_4k"])
     seed: int = 0
 
@@ -510,7 +617,7 @@ _NESTED = {
     RunConfig: {"model": ModelConfig, "parallel": ParallelConfig,
                 "optim": OptimConfig, "fsl": FSLConfig, "fed": FedConfig,
                 "split": SplitConfig, "privacy": PrivacyConfig,
-                "shape": ShapeConfig},
+                "control": ControlConfig, "shape": ShapeConfig},
 }
 
 

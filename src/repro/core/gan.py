@@ -55,11 +55,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import RunConfig
+from repro.control import (ControllerSuite, ControlKnobs, RoundFeedback,
+                           knobs_from_config, make_controllers)
 from repro.core.devices import make_pool
 from repro.core.fedavg import fedavg
 from repro.core.selection import plan_all_clients
 from repro.core.simulate import plan_epoch_time
-from repro.core.split import SplitExecution, SplitPlan, make_boundary_stage
+from repro.core.split import (SplitExecution, SplitPlan, make_boundary_stage,
+                              plan_segments)
 from repro.fed.engine import ClientSpec, FederationEngine
 from repro.fed.programs import ClientHyper, LocalProgram, RoundExecutor
 from repro.fed.transport import apply_delta, delta_tree, fake_batch_bytes
@@ -122,6 +125,13 @@ class FSLGANTrainer:
                       for cid in self.client_ids},
             d_opt={cid: self.d_optimizer.init(d0) for cid in self.client_ids},
         )
+        # control plane (cfg.control): knobs seed from the static config;
+        # 'frozen' (default) never changes them — bit-exact with the
+        # uncontrolled build — while 'adaptive' consults the controller
+        # suite between rounds.  RoundFeedback is emitted either way.
+        self.knobs: ControlKnobs = knobs_from_config(cfg)
+        self.feedback: List[RoundFeedback] = []
+        self._suite: Optional[ControllerSuite] = None
         # split planning.  cfg.split.enabled compiles each plan into the
         # executed local step (core/split.SplitExecution); otherwise the
         # plan only prices the round (analytic hop model) and training
@@ -129,9 +139,9 @@ class FSLGANTrainer:
         self.pool = make_pool(cfg.fsl.heterogeneity, cfg.fsl.num_clients,
                               cfg.fsl.devices_per_client, cfg.fsl.seed)
         costs = disc_layer_costs(self.c)
-        layers = [(n, costs[n]) for n in disc_layer_names(self.c)]
+        self._layers = [(n, costs[n]) for n in disc_layer_names(self.c)]
         self.plans: Dict[str, SplitPlan] = plan_all_clients(
-            self.pool, layers, cfg.split.strategy or cfg.fsl.selection,
+            self.pool, self._layers, self.knobs.split_strategy,
             cfg.fsl.seed)
         self._rng = np.random.default_rng(seed)
         self._build_steps()
@@ -194,6 +204,28 @@ class FSLGANTrainer:
             return gen_apply(g_params, z, c)
 
         self._d_step, self._g_step, self._gen = d_step, g_step, gen_batch
+        self._stage_key = jax.random.PRNGKey(self.cfg.split.seed)
+        self._build_split_programs()
+
+    def _boundary_stages(self, plan: SplitPlan
+                         ) -> Optional[List[Any]]:
+        """Per-boundary stage list for one plan under the current knobs, or
+        None for the uniform config stage (the static path)."""
+        stage_map = self.knobs.stage_by_boundary
+        if stage_map is None:
+            return None
+        nb = len(plan_segments(plan)) - 1
+        base = self.cfg.split.boundary_stage or "identity"
+        return [make_boundary_stage(self.cfg.split,
+                                    stage_map.get(b, base))
+                for b in range(nb)]
+
+    def _build_split_programs(self):
+        """(Re)compile the split executions + the client program from the
+        current plans and knobs.  Called at construction and again by the
+        split controller after a replan / per-boundary stage reassignment
+        (a *split-signature regroup*: new signatures, new step cache)."""
+        c, lr = self.c, self.cfg.optim.lr
         # executed split (cfg.split): each feasible plan compiles into a
         # staged local step whose boundary tensors pass the configured
         # stage; measured per-step LAN bytes are cached for pricing
@@ -211,7 +243,8 @@ class FSLGANTrainer:
             # — measure once per signature, not once per client
             bytes_by_sig: Dict[Any, Tuple[int, List[Dict[str, int]]]] = {}
             for cid, plan in self.plans.items():
-                ex = SplitExecution(plan, apply_layer, tails, stage=stage)
+                ex = SplitExecution(plan, apply_layer, tails, stage=stage,
+                                    stages=self._boundary_stages(plan))
                 self.split_execs[cid] = ex
                 if ex.signature not in bytes_by_sig:
                     bytes_by_sig[ex.signature] = ex.step_wire_bytes(
@@ -223,7 +256,6 @@ class FSLGANTrainer:
                 self._split_hop_events[cid] = [
                     ex.num_passes * b[d] for b in per_b
                     for d in ("fwd", "bwd")]
-        self._stage_key = jax.random.PRNGKey(self.cfg.split.seed)
         # the client program: one local-round definition, compiled as both
         # the looped and the vectorized backend (fed/programs.py), with the
         # privacy stage (plain | dp_sgd) and split execution selected
@@ -231,6 +263,11 @@ class FSLGANTrainer:
         self.program = LocalProgram(
             self.d_optimizer, functools.partial(d_loss_fn, c=c), lr,
             privacy=self.cfg.privacy, split=self.split_execs or None)
+        # a controller-retuned sigma survives split regroups: the program
+        # is rebuilt from the static config, so rebind the live knob
+        if self.program.is_dp \
+                and self.knobs.sigma != self.cfg.privacy.noise_multiplier:
+            self.program.rebind_sigma(self.knobs.sigma)
 
     def _d_update(self, dp, do, real, fake):
         """One reference D step for ``train_epoch_sequential``: DP-SGD when
@@ -333,6 +370,81 @@ class FSLGANTrainer:
             default_steps=batches_per_client, hyper=hyper,
             round_key=round_key)
 
+    # ------------------------------------------------------------------
+    # control plane (cfg.control)
+    # ------------------------------------------------------------------
+    def _adaptive(self) -> bool:
+        return (self.cfg.control.mode == "adaptive"
+                and bool(self.cfg.control.controllers))
+
+    def _ensure_controllers(self, batches_per_client: int) -> ControllerSuite:
+        """Build the controller suite on first use (the DP steps-per-round
+        hint depends on the round length)."""
+        if self._suite is None:
+            leaf_sizes = [int(l.size) for l in jax.tree.leaves(
+                self.state.d_params[self.client_ids[0]])]
+            if self.cfg.privacy.mode == "dp_sgd":
+                hint = sum(self._client_steps(cid, batches_per_client)
+                           for cid in self._active_clients())
+            else:                          # uplink: one release per client
+                hint = len(self._active_clients())
+            self._suite = make_controllers(
+                self.cfg, leaf_sizes=leaf_sizes, steps_per_round_hint=hint)
+        return self._suite
+
+    def _apply_knobs(self, new: ControlKnobs) -> None:
+        """Apply a knob diff to the layers that own each knob.  Codec and
+        deadline land on the engine (after ``_ensure_engine``, in
+        ``train_epoch``); sigma rebinds the uplink stage in place and the
+        DP-SGD program via ``LocalProgram.rebind_sigma``; split knobs
+        replan + regroup the split programs (new signatures reprice the
+        engine's client compute times)."""
+        old, self.knobs = self.knobs, new
+        if new.split_strategy != old.split_strategy:
+            self.plans = plan_all_clients(self.pool, self._layers,
+                                          new.split_strategy,
+                                          self.cfg.fsl.seed)
+            self.engine = None             # client times need repricing
+        if (new.split_strategy != old.split_strategy
+                or new.stage_by_boundary != old.stage_by_boundary) \
+                and self.cfg.split.enabled:
+            self._build_split_programs()   # split-signature regroup
+            self.engine = None
+        if new.sigma != old.sigma:
+            if self._uplink_stage is not None:
+                self._uplink_stage.noise_multiplier = float(new.sigma)
+            self.program.rebind_sigma(new.sigma)
+
+    def _probe_boundary_dcor(self) -> Dict[str, Tuple[float, ...]]:
+        """Measured input-vs-activation distance correlation per boundary
+        per split client, on a fixed data prefix — deterministic and
+        host-RNG-free, so probing never perturbs training.
+
+        Probes the RAW (pre-stage) boundary activation: the controller
+        needs each boundary's *intrinsic* leak to decide protection.
+        Probing post-stage would measure the noise it just assigned,
+        suppress the signal, strip the stage next round, and oscillate
+        (protect / unprotect every other round, recompiling each flip).
+        The deployed post-stage leakage is the attack suite's job
+        (``privacy/attacks.make_shipped_prefix_fn``), not the control
+        signal's."""
+        from repro.privacy.metrics import distance_correlation
+        out: Dict[str, Tuple[float, ...]] = {}
+        n = int(self.cfg.control.probe_batch)
+        for cid in self._active_clients():
+            ex = self.split_execs.get(cid)
+            if ex is None or ex.num_boundaries == 0:
+                continue
+            data = self.client_data[cid]
+            x0 = jnp.asarray(data[:min(n, len(data))])
+            params, x, dcors = self.state.d_params[cid], x0, []
+            for dev, names in ex.segments[:-1]:
+                for name in names:
+                    x = ex.apply_layer(name, params, x)
+                dcors.append(float(distance_correlation(x0, x)))
+            out[cid] = tuple(dcors)
+        return out
+
     def _g_updates(self, d_avg, batches: int) -> List[float]:
         """Server G update against the averaged D (never touches real data)."""
         st = self.state
@@ -365,10 +477,24 @@ class FSLGANTrainer:
 
         Optimizer state commits only for clients whose update landed
         (``RoundReport.opt_states``) — dropped stragglers leave no trace.
+
+        The control plane (``cfg.control``) wraps the round: under
+        ``mode='adaptive'`` the controller suite turns the accumulated
+        ``RoundFeedback`` history into knob decisions BEFORE the round
+        (codec swap, sigma rebind, split regroup, deadline retune); a new
+        ``RoundFeedback`` is appended AFTER it either way (``self.feedback``
+        — frozen mode measures without steering).
         """
         backend = backend or self.cfg.fed.backend
         st = self.state
+        if self._adaptive():
+            self._apply_knobs(self._ensure_controllers(batches_per_client)(
+                self.feedback, self.knobs))
         eng = self._ensure_engine(batches_per_client)
+        if self._adaptive():
+            eng.set_codec(self.knobs.codec, self.knobs.topk_frac)
+            eng.set_deadline(self.knobs.deadline_s)
+        acct_steps_before = self.accountant.steps if self.accountant else 0
         batch_b = fake_batch_bytes(
             self.batch_size,
             (self.c.image_size, self.c.image_size, self.c.channels))
@@ -398,17 +524,22 @@ class FSLGANTrainer:
         g_losses = self._g_updates(d_avg, batches_per_client)
         st.step += 1
         if self.accountant is not None:
+            # adaptive runs account each round at the sigma the controller
+            # actually bound; frozen runs use the constructor default
+            sigma_arg = self.knobs.sigma if self._adaptive() else None
             if self.cfg.privacy.mode == "dp_sgd":
                 # one Gaussian-mechanism release per EXECUTED DP batch,
                 # whichever backend compiled it — this counts async cycles
                 # and late-but-executed straggler work that never makes
                 # rep.participated
                 self.accountant.step(sum(info.get("steps", 0)
-                                         for _, info in rep.client_infos))
+                                         for _, info in rep.client_infos),
+                                     noise_multiplier=sigma_arg)
             elif self.cfg.privacy.mode == "uplink":
                 # one release per executed uplink: every client_infos entry
                 # ran _codec_roundtrip once
-                self.accountant.step(len(rep.client_infos))
+                self.accountant.step(len(rep.client_infos),
+                                     noise_multiplier=sigma_arg)
         metrics = {
             "d_loss": float(np.mean(d_losses)) if d_losses else float("nan"),
             "g_loss": float(np.mean(g_losses)),
@@ -420,6 +551,7 @@ class FSLGANTrainer:
             "stragglers": float(len(rep.stragglers)),
             "mean_staleness": rep.mean_staleness,
         }
+        loads: Dict[str, float] = {}
         if self.split_execs:
             # executed-split reporting: measured boundary bytes that
             # actually crossed the LAN this round, and the compute load
@@ -432,6 +564,39 @@ class FSLGANTrainer:
         if self.accountant is not None:
             metrics["dp_epsilon"] = self.accountant.epsilon(
                 self.cfg.privacy.delta)[0]
+        cerrs = list(rep.codec_error.values())
+        if cerrs:
+            metrics["codec_error"] = float(np.mean(cerrs))
+        # the round's measurements as ONE typed record — what the
+        # controllers consume next round (and what frozen runs still log)
+        probe: Dict[str, Tuple[float, ...]] = {}
+        if self._adaptive() and "split" in self.cfg.control.controllers \
+                and self.split_execs:
+            probe = self._probe_boundary_dcor()
+        self.feedback.append(RoundFeedback(
+            round_index=st.step - 1,
+            backend=backend,
+            codec=eng.codec_name,
+            sigma=self.knobs.sigma,
+            deadline_s=eng.deadline_s,
+            split_strategy=self.knobs.split_strategy,
+            up_bytes=int(rep.traffic.total_up),
+            down_bytes=int(rep.traffic.total_down),
+            lan_bytes=int(rep.traffic.total_lan),
+            codec_error=float(np.mean(cerrs)) if cerrs else float("nan"),
+            uplink_bps=float(self.cfg.fed.uplink_bps),
+            round_time_s=float(rep.round_time_s),
+            clock_s=float(rep.clock_s),
+            client_finish_s=dict(rep.finish_s),
+            num_clients=len(rep.participated),
+            stragglers=len(rep.stragglers),
+            d_loss=metrics["d_loss"],
+            g_loss=metrics["g_loss"],
+            dp_epsilon=metrics.get("dp_epsilon", float("nan")),
+            dp_steps=(self.accountant.steps - acct_steps_before
+                      if self.accountant else 0),
+            device_loads=loads,
+            boundary_dcor=probe))
         return self._record(metrics)
 
     # ------------------------------------------------------------------
@@ -449,8 +614,9 @@ class FSLGANTrainer:
         bit-exact pin); a lossy/noisy stage trains a genuinely different
         model, so that combination is refused rather than silently
         diverging from every engine path."""
-        if self.split_execs and any(ex.stage.name != "identity"
-                                    for ex in self.split_execs.values()):
+        if self.split_execs and any(s.name != "identity"
+                                    for ex in self.split_execs.values()
+                                    for s in ex.stages):
             raise ValueError(
                 "train_epoch_sequential is the unsplit/identity-stage "
                 f"reference; boundary_stage="

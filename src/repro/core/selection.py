@@ -23,10 +23,9 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
+from repro.config.base import SELECTION_STRATEGIES as STRATEGIES
 from repro.core.devices import Client, Device
 from repro.core.split import InfeasibleSplit, Portion, SplitPlan
-
-STRATEGIES = ("random_single", "random_multi", "sorted_single", "sorted_multi")
 
 
 def _check_feasible(client: Client, n_units: int) -> None:

@@ -267,9 +267,13 @@ class GaussianBoundaryStage(BoundaryStage):
         return y.reshape(x.shape).astype(x.dtype)
 
 
-def make_boundary_stage(split_cfg) -> BoundaryStage:
-    """Factory keyed by ``config.SplitConfig.boundary_stage``."""
-    name = getattr(split_cfg, "boundary_stage", "identity")
+def make_boundary_stage(split_cfg, name: Optional[str] = None
+                        ) -> BoundaryStage:
+    """Factory keyed by ``config.SplitConfig.boundary_stage``; ``name``
+    overrides it (the split controller builds per-boundary stages from the
+    same clip/sigma/frac parameters, varying only the stage kind)."""
+    if name is None:
+        name = getattr(split_cfg, "boundary_stage", "identity")
     if name in ("", "identity", "none"):
         return BoundaryStage()
     if name == "dp":
@@ -298,7 +302,14 @@ class SplitExecution:
     """
 
     def __init__(self, plan: SplitPlan, apply_layer, tails: Sequence, *,
-                 stage: Optional[BoundaryStage] = None):
+                 stage: Optional[BoundaryStage] = None,
+                 stages: Optional[Sequence[BoundaryStage]] = None):
+        """``stage`` applies one stage uniformly at every boundary;
+        ``stages`` assigns a stage PER boundary (index-aligned with
+        ``self.boundaries``) — the split controller's lever for noising
+        only the boundaries the attack actually reads.  Passing both uses
+        ``stages`` and keeps ``stage`` as the documented uniform default.
+        """
         self.plan = plan
         self.apply_layer = apply_layer
         self.tails = tuple(tails)
@@ -310,6 +321,15 @@ class SplitExecution:
             depth += len(names)
             self.boundaries.append(Boundary(
                 i, dev, self.segments[i + 1][0], depth))
+        if stages is None:
+            self.stages: List[BoundaryStage] = \
+                [self.stage] * len(self.boundaries)
+        else:
+            self.stages = list(stages)
+            if len(self.stages) != len(self.boundaries):
+                raise ValueError(
+                    f"{len(self.stages)} stages for "
+                    f"{len(self.boundaries)} boundaries")
         self._shape_cache: Dict[Tuple, List[Tuple[int, ...]]] = {}
 
     # ------------------------------------------------------------------
@@ -322,12 +342,18 @@ class SplitExecution:
         return len(self.tails)
 
     @property
+    def stochastic(self) -> bool:
+        """True when ANY boundary's stage consumes the noise key."""
+        return any(s.stochastic for s in self.stages)
+
+    @property
     def signature(self) -> Tuple:
         """Compilation key: two plans with the same boundary depths and
-        the same (fully parameterized) stage compile to the same staged
-        program — device *identity* only affects pricing, never math."""
+        the same (fully parameterized) per-boundary stages compile to the
+        same staged program — device *identity* only affects pricing,
+        never math."""
         return (tuple(b.depth for b in self.boundaries),
-                self.stage.signature)
+                tuple(s.signature for s in self.stages))
 
     # ------------------------------------------------------------------
     def _segment_fn(self, names: Tuple[str, ...]):
@@ -361,7 +387,7 @@ class SplitExecution:
         if len(batches) != self.num_passes:
             raise ValueError(f"{len(batches)} batches for "
                              f"{self.num_passes} loss tails")
-        if key is None and self.stage.stochastic:
+        if key is None and self.stochastic:
             # a stochastic stage must NEVER run keyless-and-noiseless: the
             # observed/collected tensors would understate the stage and
             # overstate leakage.  Default key == run_looped's default.
@@ -374,7 +400,7 @@ class SplitExecution:
             xs, vjp = jax.vjp(self._segment_fn(names), params, xs)
             vjps.append(vjp)
             if si < len(self.segments) - 1:
-                xs = tuple(self.stage.apply(x, self._key(key, si, p, 0))
+                xs = tuple(self.stages[si].apply(x, self._key(key, si, p, 0))
                            for p, x in enumerate(xs))
                 if collect:
                     records["fwd"][si] = xs
@@ -391,7 +417,7 @@ class SplitExecution:
                 else jax.tree.map(jnp.add, grads, gp)
             if si > 0:
                 g_act = tuple(
-                    self.stage.apply(g, self._key(key, si - 1, p, 1))
+                    self.stages[si - 1].apply(g, self._key(key, si - 1, p, 1))
                     for p, g in enumerate(g_act))
                 if collect:
                     records["bwd"][si - 1] = g_act
@@ -412,13 +438,13 @@ class SplitExecution:
         (post-codec, post-noise), not a separate clean forward.  ``upto``
         stops after that boundary index (an attacker at boundary b never
         needs the deeper segments' compute)."""
-        if key is None and self.stage.stochastic:
+        if key is None and self.stochastic:
             key = jax.random.PRNGKey(0)
         out = []
         for si, (dev, names) in enumerate(self.segments[:-1]):
             for n in names:
                 x = self.apply_layer(n, params, x)
-            x = self.stage.apply(x, self._key(key, si, 0, 0))
+            x = self.stages[si].apply(x, self._key(key, si, 0, 0))
             out.append(x)
             if upto is not None and si >= upto:
                 break
@@ -462,8 +488,9 @@ class SplitExecution:
         """
         per = []
         total = 0
-        for shp in self.boundary_shapes(params, x_shape, dtype):
-            wb = self.stage.wire_bytes(shp, dtype)
+        shapes = self.boundary_shapes(params, x_shape, dtype)
+        for si, shp in enumerate(shapes):
+            wb = self.stages[si].wire_bytes(shp, dtype)
             per.append({"fwd": wb, "bwd": wb})
             total += 2 * wb * self.num_passes
         return total, per

@@ -51,7 +51,7 @@ from repro.fed.events import ARRIVE, FINISH, EventQueue, make_availability
 from repro.fed.policies import ClientUpdate, make_policy
 from repro.fed.programs import as_program
 from repro.fed.transport import (LinkModel, TrafficLedger, apply_delta,
-                                 delta_tree, make_codec)
+                                 delta_tree, make_codec, tree_rel_error)
 
 # legacy program shape: local_update(client_id, start_params)
 #   -> (trained_params, info_dict)
@@ -85,6 +85,16 @@ class RoundReport:
     # final opt state per client whose update landed (participated) —
     # the caller commits exactly these; dropped work leaves no state
     opt_states: Dict[str, Any] = field(default_factory=dict)
+    # measured per-client virtual finish times (sync: download + compute +
+    # uplink; async: last arrival offset).  Provably-late stragglers that
+    # never ran record their known lower bound (download + compute) — the
+    # deadline controller reads this distribution.
+    finish_s: Dict[str, float] = field(default_factory=dict)
+    # measured relative L2 error the codec round-trip cost each client's
+    # delta this round (0.0 under the identity codec) — with the uplink
+    # bytes, one point on the bytes-vs-error frontier the codec controller
+    # walks.
+    codec_error: Dict[str, float] = field(default_factory=dict)
 
     @property
     def mean_staleness(self) -> float:
@@ -105,10 +115,15 @@ class FederationEngine:
         # and everything downstream of it — only ever sees the privatized
         # delta.  None = no transform (the default, bit-exact path).
         self.uplink_stage = uplink_stage
+        self.codec_name = fed_cfg.codec
+        self.topk_frac = fed_cfg.topk_frac
         self.codecs = {cid: make_codec(fed_cfg.codec,
                                        topk_frac=fed_cfg.topk_frac,
                                        error_feedback=fed_cfg.error_feedback)
                        for cid in self.roster}
+        # the live straggler deadline: seeded from config, retuned between
+        # rounds by the control plane (set_deadline) without touching cfg
+        self.deadline_s = float(fed_cfg.deadline_s)
         self.uplink = LinkModel(fed_cfg.wan_latency_s, fed_cfg.uplink_bps)
         self.downlink = LinkModel(fed_cfg.wan_latency_s, fed_cfg.downlink_bps)
         self.availability = make_availability(fed_cfg.availability,
@@ -120,21 +135,43 @@ class FederationEngine:
         self._lan_by: Dict[str, int] = {}  # this round's LAN bytes/client
 
     # ------------------------------------------------------------------
+    def set_codec(self, name: str, topk_frac: Optional[float] = None) -> None:
+        """Swap the uplink codec for subsequent rounds (codec controller).
+        Rebuilds per-client codec instances, which clears any top-k error-
+        feedback residual — the residual belongs to the OLD codec's lossy
+        stream and must not be replayed into the new one."""
+        frac = self.topk_frac if topk_frac is None else float(topk_frac)
+        if name == self.codec_name and frac == self.topk_frac:
+            return
+        self.codec_name, self.topk_frac = name, frac
+        self.codecs = {cid: make_codec(name, topk_frac=frac,
+                                       error_feedback=self.cfg.error_feedback)
+                       for cid in self.roster}
+
+    def set_deadline(self, deadline_s: float) -> None:
+        """Retune the sync straggler deadline (deadline controller)."""
+        self.deadline_s = float(deadline_s)
+
+    # ------------------------------------------------------------------
     def _codec_roundtrip(self, cid: str, base_tree, params
-                         ) -> Tuple[Any, int]:
+                         ) -> Tuple[Any, int, float]:
         """Uplink params through the client's codec; lossy codecs compress
         the delta vs the tree the client downloaded (``base_tree``).  An
         ``uplink_stage`` (DP clip+noise) runs on the delta first, so lossy
         codecs compress — and the server only decodes — the privatized
-        update."""
+        update.  Returns ``(decoded, wire_bytes, rel_error)`` where
+        ``rel_error`` is the measured relative L2 error the CODEC cost the
+        (possibly privatized) delta."""
         codec = self.codecs[cid]
         if codec.encodes_delta or self.uplink_stage is not None:
             delta = delta_tree(params, base_tree)
             if self.uplink_stage is not None:
                 delta = self.uplink_stage(cid, delta)
             dec, nbytes = codec.roundtrip(delta)
-            return apply_delta(base_tree, dec), nbytes
-        return codec.roundtrip(params)
+            err = tree_rel_error(dec, delta) if codec.encodes_delta else 0.0
+            return apply_delta(base_tree, dec), nbytes, err
+        dec, nbytes = codec.roundtrip(params)
+        return dec, nbytes, 0.0
 
     def _split_roster(self) -> Tuple[List[str], List[str]]:
         up, down = [], []
@@ -178,7 +215,7 @@ class FederationEngine:
     def _run_sync(self, global_tree, program, db) -> RoundReport:
         rep = RoundReport(global_params=global_tree)
         participants, rep.unavailable = self._split_roster()
-        deadline = self.cfg.deadline_s
+        deadline = self.deadline_s
         down_t = {cid: self.downlink.transfer_time(db(cid))
                   for cid in participants}
         finishes: List[float] = []
@@ -193,6 +230,10 @@ class FederationEngine:
                     > deadline:
                 rep.stragglers.append(cid)
                 rep.traffic.record(cid, down=db(cid))
+                # never ran: record the known lower bound on its finish so
+                # the measured round-time distribution still covers it
+                rep.finish_s[cid] = (down_t[cid]
+                                     + self.specs[cid].compute_time_s)
             else:
                 runnable.append(cid)
         results = program.run(runnable, global_tree)
@@ -200,13 +241,15 @@ class FederationEngine:
         for res in results:
             cid = res.client_id
             spec = self.specs[cid]
-            decoded, up_b = self._codec_roundtrip(cid, global_tree,
-                                                  res.params)
+            decoded, up_b, cerr = self._codec_roundtrip(cid, global_tree,
+                                                        res.params)
             finish = down_t[cid] + spec.compute_time_s \
                 + self.uplink.transfer_time(up_b)
             rep.traffic.record(cid, up=up_b, down=db(cid),
                                lan=self._lan_by.get(cid, 0))
             rep.client_infos.append((cid, res.info))
+            rep.finish_s[cid] = finish
+            rep.codec_error[cid] = cerr
             if deadline and finish > deadline:
                 rep.stragglers.append(cid)     # ran, but its update is late
                 continue                       # nothing commits — not even
@@ -240,7 +283,7 @@ class FederationEngine:
         rep = RoundReport(global_params=global_tree)
         participants, rep.unavailable = self._split_roster()
         t0 = self.clock
-        deadline = self.cfg.deadline_s
+        deadline = self.deadline_s
         down_t = {cid: self.downlink.transfer_time(db(cid))
                   for cid in participants}
         queue = EventQueue()
@@ -262,11 +305,12 @@ class FederationEngine:
             if ev.kind == FINISH:
                 snap_tree, snap_ver = snapshots[cid]
                 res = program.run([cid], snap_tree)[0]
-                decoded, up_b = self._codec_roundtrip(cid, snap_tree,
-                                                      res.params)
+                decoded, up_b, cerr = self._codec_roundtrip(cid, snap_tree,
+                                                            res.params)
                 rep.traffic.record(cid, up=up_b,
                                    lan=self._lan_by.get(cid, 0))
                 rep.client_infos.append((cid, res.info))
+                rep.codec_error[cid] = cerr
                 # the opt state rides with the arrival: it only commits if
                 # the update actually lands inside the deadline
                 queue.push(ev.time + self.uplink.transfer_time(up_b),
@@ -276,6 +320,7 @@ class FederationEngine:
                                     "opt_state": res.opt_state})
                 continue
             # ARRIVE
+            rep.finish_s[cid] = ev.time - t0      # last arrival per client
             if deadline and ev.time - t0 > deadline:
                 rep.stragglers.append(cid)
                 continue

@@ -235,13 +235,32 @@ class LocalProgram:
         # does the step consume its PRNG key? (DP-SGD noise and/or a
         # stochastic boundary stage) — the trainer derives round keys iff so
         self.needs_key = self.is_dp or any(
-            ex.stage.stochastic for ex in self.split.values())
+            ex.stochastic for ex in self.split.values())
         self._exec_by_sig = {}
         for ex in self.split.values():
             self._exec_by_sig.setdefault(ex.signature, ex)
         self._step_cache: Dict[Any, Any] = {}
         self._vrun_cache: Dict[Any, Any] = {}
         # the monolithic step stays a public attribute (seed-compatible)
+        self.step = self._step(None)
+
+    # ------------------------------------------------------------------
+    def rebind_sigma(self, noise_multiplier: float) -> None:
+        """Rebind the DP-SGD noise multiplier between rounds (the sigma
+        controller's lever).  The noise scale is a compile-time constant of
+        the step, so the per-signature caches are cleared and both backends
+        recompile on next dispatch; the (round, client, exec, batch)
+        noise-key scheme is untouched, so the rebound run stays
+        deterministic per schedule.  The controller's hysteresis bounds how
+        often this fires."""
+        import dataclasses
+        if not self.is_dp or \
+                float(noise_multiplier) == self.privacy.noise_multiplier:
+            return
+        self.privacy = dataclasses.replace(
+            self.privacy, noise_multiplier=float(noise_multiplier))
+        self._step_cache.clear()
+        self._vrun_cache.clear()
         self.step = self._step(None)
 
     # ------------------------------------------------------------------

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +58,37 @@ def apply_delta(base, delta):
         lambda b, d: (b.astype(jnp.float32)
                       + d.astype(jnp.float32)).astype(b.dtype),
         base, delta)
+
+
+def tree_rel_error(approx, exact) -> float:
+    """Relative global-L2 error of ``approx`` vs ``exact`` — the engine's
+    per-round measurement of what a lossy codec cost the update (the
+    bytes-vs-delta-error frontier the codec controller walks)."""
+    num = 0.0
+    den = 0.0
+    for a, e in zip(jax.tree.leaves(approx), jax.tree.leaves(exact)):
+        d = np.asarray(a, np.float64) - np.asarray(e, np.float64)
+        num += float(np.sum(d * d))
+        den += float(np.sum(np.asarray(e, np.float64) ** 2))
+    return math.sqrt(num) / max(math.sqrt(den), 1e-12)
+
+
+def predict_codec_bytes(name: str, leaf_sizes: Sequence[int], *,
+                        dtype_bytes: int = 4, topk_frac: float = 0.01) -> int:
+    """Analytic wire bytes of one uplink round-trip per codec — a pure
+    function of the tree's leaf sizes, so the codec controller can rank
+    candidates by cost WITHOUT spending a probe round on each (only the
+    delta ERROR needs live measurement)."""
+    if name in ("none", "", "identity"):
+        return int(sum(leaf_sizes) * dtype_bytes)
+    if name == "fp16":
+        return int(sum(leaf_sizes) * 2)
+    if name == "int8":
+        return int(sum(n + 4 for n in leaf_sizes))
+    if name == "topk":
+        return int(sum(8 * min(n, max(1, int(math.ceil(topk_frac * n))))
+                       for n in leaf_sizes))
+    raise ValueError(f"unknown codec {name!r}")
 
 
 def fake_batch_bytes(batch: int, image_shape: Tuple[int, ...],

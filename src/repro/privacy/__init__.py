@@ -14,7 +14,7 @@ from repro.privacy.attacks import (ActivationInversionAttack, delta_to_grad,
                                    plan_boundary_depths)
 from repro.privacy.defenses import (DPUplinkStage, RDPAccountant, dp_epsilon,
                                     make_dp_d_step, make_uplink_stage,
-                                    rdp_sampled_gaussian)
+                                    rdp_sampled_gaussian, sigma_for_epsilon)
 from repro.privacy.metrics import (attack_advantage, attack_auc,
                                    best_match_psnr, distance_correlation,
                                    psnr, ssim)
@@ -25,6 +25,7 @@ __all__ = [
     "membership_scores",
     "plan_boundary_depths", "DPUplinkStage", "RDPAccountant", "dp_epsilon",
     "make_dp_d_step", "make_uplink_stage", "rdp_sampled_gaussian",
+    "sigma_for_epsilon",
     "attack_advantage", "attack_auc", "best_match_psnr",
     "distance_correlation", "psnr", "ssim",
 ]

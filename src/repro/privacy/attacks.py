@@ -158,7 +158,7 @@ def make_shipped_prefix_fn(split_exec, d_params, boundary_idx: int, *,
     probe must never ship noiseless tensors and overstate the leakage of
     the deployed round.
     """
-    if key is None and getattr(split_exec.stage, "stochastic", False):
+    if key is None and getattr(split_exec, "stochastic", False):
         key = jax.random.PRNGKey(0)
     calls = iter(range(1 << 30))
 

@@ -168,7 +168,12 @@ class RDPAccountant:
     """Tracks cumulative RDP over steps; converts to (epsilon, delta).
 
     One ``step()`` = one application of the mechanism (one DP-SGD batch, or
-    one noised uplink round).  RDP composes additively across steps.
+    one noised uplink round).  RDP composes additively across steps — and
+    because it does, the mechanism's noise multiplier may CHANGE between
+    steps (``step(n, noise_multiplier=...)``): each batch of steps
+    contributes its own per-order RDP to the running total.  This is what
+    lets the control plane's sigma controller retune sigma per round while
+    the accountant stays exact (per-sigma RDP vectors are cached).
     """
 
     def __init__(self, noise_multiplier: float, sample_rate: float = 1.0,
@@ -176,13 +181,35 @@ class RDPAccountant:
         self.noise_multiplier = float(noise_multiplier)
         self.sample_rate = float(sample_rate)
         self.orders = tuple(orders)
-        self._rdp_per_step = [rdp_sampled_gaussian(self.sample_rate,
-                                                   self.noise_multiplier, a)
-                              for a in self.orders]
+        self._rdp_cache: Dict[float, List[float]] = {}
+        # warm the default-sigma cache now: a bad (q, sigma) pair raises at
+        # construction, not on the first step() mid-training
+        self._rdp_for(self.noise_multiplier)
+        self._rdp_total = [0.0] * len(self.orders)
         self.steps = 0
 
-    def step(self, num_steps: int = 1) -> None:
-        self.steps += int(num_steps)
+    def _rdp_for(self, sigma: float) -> List[float]:
+        sigma = float(sigma)
+        if sigma not in self._rdp_cache:
+            self._rdp_cache[sigma] = [
+                rdp_sampled_gaussian(self.sample_rate, sigma, a)
+                for a in self.orders]
+        return self._rdp_cache[sigma]
+
+    def step(self, num_steps: int = 1,
+             noise_multiplier: Optional[float] = None) -> None:
+        """Record ``num_steps`` mechanism applications at
+        ``noise_multiplier`` (default: the constructor's sigma)."""
+        n = int(num_steps)
+        if n <= 0:
+            # nothing released — and with sigma <= 0 the per-step RDP is
+            # inf, where 0 * inf would NaN-poison the running totals
+            return
+        sigma = (self.noise_multiplier if noise_multiplier is None
+                 else float(noise_multiplier))
+        r = self._rdp_for(sigma)
+        self._rdp_total = [t + n * x for t, x in zip(self._rdp_total, r)]
+        self.steps += n
 
     def epsilon(self, delta: float = 1e-5) -> Tuple[float, int]:
         """Best (epsilon, order) over the tracked orders.
@@ -190,16 +217,29 @@ class RDPAccountant:
         Classic conversion (Mironov 2017 Prop. 3):
         eps = RDP(a) - log(delta) / (a - 1).
         """
-        if self.noise_multiplier <= 0.0 or self.steps == 0:
-            return (float("inf") if self.steps and
-                    self.noise_multiplier <= 0.0 else 0.0,
-                    self.orders[0])
+        if self.steps == 0:
+            return 0.0, self.orders[0]
         best_eps, best_order = float("inf"), self.orders[0]
-        for a, r in zip(self.orders, self._rdp_per_step):
-            eps = self.steps * r - math.log(delta) / (a - 1)
+        for a, t in zip(self.orders, self._rdp_total):
+            eps = t - math.log(delta) / (a - 1)
             if eps < best_eps:
                 best_eps, best_order = eps, a
         return best_eps, best_order
+
+    def projected_epsilon(self, extra_steps: int, delta: float = 1e-5,
+                          noise_multiplier: Optional[float] = None) -> float:
+        """Epsilon this accountant WOULD report after ``extra_steps`` more
+        applications at ``noise_multiplier`` — the sigma controller's
+        budget-feasibility oracle (nothing is committed)."""
+        n = int(extra_steps)
+        if self.steps + n == 0:
+            return 0.0
+        sigma = (self.noise_multiplier if noise_multiplier is None
+                 else float(noise_multiplier))
+        r = self._rdp_for(sigma)
+        # n == 0 must not multiply a (possibly inf) per-step RDP
+        return min(t + (n * x if n else 0.0) - math.log(delta) / (a - 1)
+                   for a, t, x in zip(self.orders, self._rdp_total, r))
 
 
 def dp_epsilon(noise_multiplier: float, sample_rate: float, steps: int,
@@ -208,6 +248,51 @@ def dp_epsilon(noise_multiplier: float, sample_rate: float, steps: int,
     acct = RDPAccountant(noise_multiplier, sample_rate)
     acct.step(steps)
     return acct.epsilon(delta)[0]
+
+
+def min_feasible_sigma(feasible, lo: float, hi: float,
+                       rel_tol: float = 1e-4) -> float:
+    """Smallest sigma in ``[lo, hi]`` satisfying ``feasible(sigma)``, by
+    geometric bisection — THE inversion primitive for every RDP epsilon
+    curve (``feasible`` must be monotone in sigma: more noise never hurts,
+    property-tested via :func:`sigma_for_epsilon`).
+
+    Always returns the bracket's FEASIBLE endpoint, never the midpoint —
+    the detail the sigma controller's never-exceed guarantee rests on.
+    Returns ``hi`` when even maximum noise is infeasible (the caller's
+    clamp-to-most-protection boundary)."""
+    lo, hi = float(lo), float(hi)
+    if feasible(lo):
+        return lo
+    if not feasible(hi):
+        return hi
+    while hi / lo > 1.0 + rel_tol:
+        mid = math.sqrt(lo * hi)
+        if feasible(mid):
+            hi = mid
+        else:
+            lo = mid
+    return hi
+
+
+def sigma_for_epsilon(epsilon: float, steps: int, delta: float = 1e-5,
+                      sample_rate: float = 1.0, lo: float = 1e-3,
+                      hi: float = 1e4, rel_tol: float = 1e-4) -> float:
+    """Invert the RDP epsilon curve: the smallest noise multiplier whose
+    fresh run of ``steps`` sampled-Gaussian applications spends at most
+    ``(epsilon, delta)``.
+
+    Epsilon is strictly decreasing in sigma on the fractional-order grid
+    (property-tested), so :func:`min_feasible_sigma` converges and the
+    returned sigma always satisfies ``dp_epsilon(sigma, ...) <= epsilon``.
+    """
+    if epsilon <= 0.0:
+        raise ValueError(f"epsilon budget must be positive, got {epsilon}")
+    if steps <= 0:
+        return float(lo)
+    return min_feasible_sigma(
+        lambda s: dp_epsilon(s, sample_rate, int(steps), delta) <= epsilon,
+        lo, hi, rel_tol)
 
 
 # ---------------------------------------------------------------------------

@@ -1,5 +1,6 @@
 """Config system: registry resolution, param counts, overrides, smoke
-reduction, validation."""
+reduction, validation — including construction-time knob-name validation
+(codec / boundary stage / selection strategy / modes)."""
 import pytest
 
 from repro.config import INPUT_SHAPES, RunConfig, reduce_for_smoke
@@ -104,3 +105,63 @@ def test_input_shapes_assignment():
     assert (s["prefill_32k"].seq_len, s["prefill_32k"].global_batch) == (32768, 32)
     assert (s["decode_32k"].seq_len, s["decode_32k"].global_batch) == (32768, 128)
     assert (s["long_500k"].seq_len, s["long_500k"].global_batch) == (524288, 1)
+
+
+# ---------------------------------------------------------------------------
+# construction-time knob-name validation (ISSUE 5 satellite): a typo'd
+# codec / stage / strategy / mode fails at config construction with the
+# valid options listed, not deep inside a jitted program.
+# ---------------------------------------------------------------------------
+
+def _dcgan():
+    return get_config("dcgan-mnist")
+
+
+def test_fed_section_validates_names_at_construction():
+    with pytest.raises(ValueError, match=r"fed\.codec.*'gzip'.*fp16"):
+        _dcgan().override({"fed.codec": "gzip"})
+    with pytest.raises(ValueError, match=r"fed\.mode.*fedasink.*fedasync"):
+        _dcgan().override({"fed.mode": "fedasink"})
+    with pytest.raises(ValueError, match=r"fed\.backend.*vectorised"):
+        _dcgan().override({"fed.backend": "vectorised"})
+    # aliases of the identity codec stay accepted
+    assert _dcgan().override({"fed.codec": "identity"}).fed.codec \
+        == "identity"
+
+
+def test_split_section_validates_names_at_construction():
+    with pytest.raises(ValueError,
+                       match=r"split\.boundary_stage.*'zstd'.*identity"):
+        _dcgan().override({"split.boundary_stage": "zstd"})
+    with pytest.raises(ValueError,
+                       match=r"split\.strategy.*sorted_multi"):
+        _dcgan().override({"split.strategy": "sorted_best"})
+    # "" = inherit fsl.selection; "none" = identity stage alias
+    cfg = _dcgan().override({"split.boundary_stage": "none"})
+    assert cfg.split.strategy == ""
+
+
+def test_fsl_section_validates_selection_at_construction():
+    with pytest.raises(ValueError,
+                       match=r"fsl\.selection.*random_single"):
+        _dcgan().override({"fsl.selection": "fastest_first"})
+
+
+def test_privacy_section_validates_mode_at_construction():
+    with pytest.raises(ValueError, match=r"privacy\.mode.*dp_sgd.*uplink"):
+        _dcgan().override({"privacy.mode": "dp-sgd"})
+
+
+def test_control_section_validates_names_at_construction():
+    with pytest.raises(ValueError, match=r"control\.mode.*frozen"):
+        _dcgan().override({"control.mode": "auto"})
+    with pytest.raises(ValueError, match=r"control\.controllers.*codec"):
+        _dcgan().override({"control.controllers": ["bandit"]})
+    with pytest.raises(ValueError,
+                       match=r"control\.replan_strategy.*sorted_multi"):
+        _dcgan().override({"control.replan_strategy": "best"})
+    with pytest.raises(ValueError, match=r"control\.leaky_stage.*dp"):
+        _dcgan().override({"control.leaky_stage": "noise"})
+    cfg = _dcgan().override({"control.mode": "adaptive",
+                             "control.controllers": ["codec", "sigma"]})
+    assert cfg.control.controllers == ("codec", "sigma")

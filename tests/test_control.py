@@ -1,0 +1,371 @@
+"""Control plane (control/): feedback emission, the four controllers, and
+the knob-application path through the trainer/engine.
+
+Pinned invariants (ISSUE 5 acceptance):
+  * control.mode='frozen' (the default) emits RoundFeedback but never
+    steers — training stays bit-exact with the static build (the
+    sync/loop/no-codec pin in test_fed_runtime already runs under frozen;
+    here the feedback record itself is checked against the measurements);
+  * the sigma controller never spends past the (epsilon, delta) budget
+    over a full run, pinned against the accountant;
+  * the codec controller walks the bytes-vs-error frontier cheapest-first,
+    so every probe is cheaper than the codec it commits to;
+  * the split controller replans + reassigns per-boundary stages only on
+    measured drift, and the regrouped run keeps training.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.control import (CodecController, ControlKnobs, DeadlineController,
+                           RoundFeedback, SigmaController, SplitController,
+                           knobs_from_config, make_controllers)
+from repro.core.gan import FSLGANTrainer
+from repro.data import partition_dirichlet, synthetic_mnist
+from repro.fed.transport import predict_codec_bytes
+from repro.privacy.defenses import RDPAccountant
+
+
+def _cfg(**over):
+    base = {"shape.global_batch": 8, "fsl.num_clients": 2,
+            "model.dcgan.base_filters": 8}
+    base.update(over)
+    return get_config("dcgan-mnist").override(base)
+
+
+@pytest.fixture(scope="module")
+def parts():
+    imgs, labels = synthetic_mnist(120, seed=0)
+    return partition_dirichlet(imgs, labels, 2, alpha=0.5, seed=0)
+
+
+def _fb(i, *, codec="none", codec_error=float("nan"), sigma=0.0,
+        dp_steps=0, dp_epsilon=float("nan"), finish=None, loads=None,
+        dcor=None, strategy="sorted_multi", up=1000):
+    """Synthetic RoundFeedback for pure controller tests."""
+    return RoundFeedback(
+        round_index=i, backend="loop", codec=codec, sigma=sigma,
+        deadline_s=0.0, split_strategy=strategy, up_bytes=up, down_bytes=0,
+        lan_bytes=0, codec_error=codec_error, uplink_bps=10e6,
+        round_time_s=1.0, clock_s=float(i), client_finish_s=finish or {},
+        num_clients=2, stragglers=0, dp_epsilon=dp_epsilon,
+        dp_steps=dp_steps, device_loads=loads or {}, boundary_dcor=dcor or {})
+
+
+# ---------------------------------------------------------------------------
+# frozen mode: measurement without steering
+# ---------------------------------------------------------------------------
+
+def test_frozen_default_emits_feedback_and_never_steers(parts):
+    t = FSLGANTrainer(_cfg(), parts, seed=0)
+    assert t.cfg.control.mode == "frozen"
+    m = t.train_epoch(batches_per_client=2)
+    assert len(t.feedback) == 1
+    fb = t.feedback[-1]
+    # the record reflects the measurements the metrics already report
+    assert fb.up_bytes == int(m["up_mbytes"] * 1e6)
+    assert fb.down_bytes == int(m["down_mbytes"] * 1e6)
+    assert fb.round_time_s == m["round_time_s"]
+    assert fb.codec == "none" and fb.sigma == 0.0 and fb.deadline_s == 0.0
+    assert fb.num_clients == 2 and math.isnan(fb.dp_epsilon)
+    # measured per-client finish times cover every participant
+    assert set(fb.client_finish_s) == {"c0", "c1"}
+    assert all(v > 0 for v in fb.client_finish_s.values())
+    # frozen: knobs still the config values after the round
+    assert t.knobs == knobs_from_config(t.cfg)
+    assert t.engine.codec_name == "none"
+
+
+def test_adaptive_mode_requires_valid_controller_names():
+    with pytest.raises(ValueError, match="controllers"):
+        _cfg(**{"control.mode": "adaptive",
+                "control.controllers": ["codec", "warp"]})
+
+
+# ---------------------------------------------------------------------------
+# codec controller (pure)
+# ---------------------------------------------------------------------------
+
+def test_codec_controller_probes_cheapest_first_then_commits():
+    leaf_sizes = [1000, 24]
+    ctl = CodecController(("none", "fp16", "int8", "topk"), 0.05,
+                          leaf_sizes, topk_frac=0.05)
+    ranked = ctl.ranked
+    assert ranked == sorted(ranked, key=ctl.bytes_of.get)
+    assert ranked[0] == "topk"                 # cheapest for this tree
+    knobs = ControlKnobs(codec="none")
+    # round 0: no history -> probe the cheapest candidate
+    k0 = ctl([], knobs)
+    assert k0.codec == "topk"
+    # topk measured over budget -> walk to the next-cheapest unprobed
+    hist = [_fb(0, codec="topk", codec_error=0.9)]
+    k1 = ctl(hist, k0)
+    assert k1.codec == "int8"
+    # int8 measured within budget -> commit (and stay committed)
+    hist.append(_fb(1, codec="int8", codec_error=0.003))
+    k2 = ctl(hist, k1)
+    assert k2.codec == "int8"
+    # every codec probed on the way is cheaper than the commit — the
+    # structural reason adaptive bytes <= best static bytes
+    assert ctl.bytes_of["topk"] < ctl.bytes_of["int8"]
+    # drift: the committed codec's error rises over budget -> move on
+    hist.append(_fb(2, codec="int8", codec_error=0.2))
+    assert ctl(hist, k2).codec == "fp16"
+
+
+def test_codec_controller_all_over_budget_stays_inside_candidates():
+    """A restricted candidate list is a hard constraint: when every
+    candidate measures over budget, the fallback is the least-lossy
+    CANDIDATE, never a codec the config excluded (e.g. lossless 'none'
+    on a bandwidth-capped run)."""
+    ctl = CodecController(("topk", "int8"), 1e-6, [1000], topk_frac=0.05)
+    hist = [_fb(0, codec="topk", codec_error=0.9),
+            _fb(1, codec="int8", codec_error=0.1)]
+    assert ctl(hist, ControlKnobs(codec="int8")).codec == "int8"
+    assert "none" not in ctl.bytes_of
+
+
+def test_codec_controller_rounds_with_no_uplink_measure_nothing():
+    ctl = CodecController(("int8", "none"), 0.05, [100])
+    # a deadline-starved round measures nothing: codec stays unprobed and
+    # is probed again rather than treated as error-free
+    hist = [_fb(0, codec="int8", codec_error=float("nan"))]
+    assert ctl(hist, ControlKnobs(codec="int8")).codec == "int8"
+
+
+def test_predict_codec_bytes_matches_codec_accounting():
+    from repro.fed.transport import make_codec
+    tree = {"w": jnp.ones((50, 20), jnp.float32),
+            "b": jnp.ones((24,), jnp.float32)}
+    sizes = [50 * 20, 24]
+    for name in ("none", "fp16", "int8", "topk"):
+        codec = make_codec(name, topk_frac=0.05, error_feedback=False)
+        _, measured = codec.roundtrip(tree)
+        assert predict_codec_bytes(name, sizes, topk_frac=0.05) == measured
+
+
+# ---------------------------------------------------------------------------
+# sigma controller (pure + pinned against the accountant)
+# ---------------------------------------------------------------------------
+
+def test_sigma_controller_solves_budget_and_self_corrects():
+    ctl = SigmaController(4.0, 6, 1e-5, 1.0, steps_per_round_hint=2)
+    knobs = ControlKnobs(sigma=1.0)
+    k0 = ctl([], knobs)
+    assert k0.sigma > 1.0          # config sigma would overspend
+    # replaying the controller's own decisions never exceeds the budget
+    acct = RDPAccountant(k0.sigma, 1.0)
+    hist, k = [], k0
+    for r in range(6):
+        k = ctl(hist, k)
+        acct.step(2, noise_multiplier=k.sigma)
+        hist.append(_fb(r, sigma=k.sigma, dp_steps=2,
+                        dp_epsilon=acct.epsilon(1e-5)[0]))
+    assert acct.epsilon(1e-5)[0] <= 4.0 * (1 + 1e-9)
+    # and it spends most of the budget rather than sandbagging
+    assert acct.epsilon(1e-5)[0] > 0.8 * 4.0
+
+
+def test_sigma_controller_hysteresis_never_relaxes_budget():
+    ctl = SigmaController(1.0, 4, 1e-5, 1.0, steps_per_round_hint=1,
+                          rel_change=0.5)
+    # an under-noised current sigma MUST be raised even within rel_change
+    k = ctl([], ControlKnobs(sigma=0.1))
+    assert k.sigma > 0.1
+
+
+def test_sigma_controller_unreachable_budget_clamps_to_sigma_max():
+    """The guarantee's documented boundary: a budget below even the
+    sigma_max spend clamps to sigma_max (maximum protection) rather than
+    diverging or silently disabling noise."""
+    ctl = SigmaController(1e-6, 10, 1e-5, 1.0, steps_per_round_hint=100,
+                          sigma_max=50.0)
+    assert ctl([], ControlKnobs(sigma=1.0)).sigma == 50.0
+    # and fluctuating round lengths project at the historical maximum
+    ctl2 = SigmaController(2.0, 4, 1e-5, 1.0, steps_per_round_hint=1)
+    hist = [_fb(0, sigma=2.0, dp_steps=10), _fb(1, sigma=2.0, dp_steps=2)]
+    k_small = ctl2(hist, ControlKnobs(sigma=2.0))
+    hist_flat = [_fb(0, sigma=2.0, dp_steps=10),
+                 _fb(1, sigma=2.0, dp_steps=10)]
+    k_flat = ctl2(hist_flat, ControlKnobs(sigma=2.0))
+    # same projected steps/round (the max), identically-sized tail budget
+    # differences only from realized spend — both conservative
+    assert k_small.sigma >= k_flat.sigma * 0.99
+
+
+def test_sigma_controller_trainer_run_pinned_against_accountant(parts):
+    """ISSUE 5 acceptance pin: a full adaptive run (uplink DP) spends at
+    most the configured (epsilon, delta) budget, per the accountant."""
+    budget, horizon = 3.0, 4
+    over = {"privacy.enabled": True, "privacy.mode": "uplink",
+            "privacy.noise_multiplier": 0.7,
+            "control.mode": "adaptive", "control.controllers": ["sigma"],
+            "control.epsilon_budget": budget,
+            "control.horizon_rounds": horizon}
+    t = FSLGANTrainer(_cfg(**over), parts, seed=0)
+    for _ in range(horizon):
+        m = t.train_epoch(batches_per_client=1)
+    assert m["dp_epsilon"] <= budget * (1 + 1e-9)
+    assert m["dp_epsilon"] == t.accountant.epsilon(t.cfg.privacy.delta)[0]
+    # the controller retuned sigma away from the static config value
+    assert t.feedback[-1].sigma != 0.7
+    # and the rebound sigma reached the live uplink stage
+    assert t._uplink_stage.noise_multiplier == t.knobs.sigma
+
+
+# ---------------------------------------------------------------------------
+# deadline controller (pure + engine application)
+# ---------------------------------------------------------------------------
+
+def test_deadline_controller_takes_quantile_of_measured_finishes():
+    ctl = DeadlineController(quantile=0.75, slack=1.2, warmup=1)
+    hist = [_fb(0, finish={"c0": 10.0, "c1": 20.0, "c2": 30.0,
+                           "c3": 1000.0})]
+    k = ctl(hist, ControlKnobs())
+    assert k.deadline_s == pytest.approx(30.0 * 1.2)
+    # warmup: no decision before enough feedback
+    assert DeadlineController(warmup=2)(hist, ControlKnobs()).deadline_s \
+        == 0.0
+
+
+def test_deadline_controller_reaches_engine(parts):
+    over = {"fed.client_local_steps": {"c1": 4},
+            "control.mode": "adaptive",
+            "control.controllers": ["deadline"],
+            "control.deadline_quantile": 0.5,
+            "control.deadline_slack": 1.05}
+    t = FSLGANTrainer(_cfg(**over), parts, seed=0)
+    t.train_epoch(batches_per_client=1)      # measure
+    m = t.train_epoch(batches_per_client=1)  # decide + apply
+    assert t.engine.deadline_s > 0
+    assert t.engine.deadline_s == t.knobs.deadline_s
+    # the median-based deadline cuts the 4x-longer c1 round
+    assert m["stragglers"] >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# split controller (pure + regroup integration)
+# ---------------------------------------------------------------------------
+
+def test_split_controller_pure_decisions():
+    ctl = SplitController(imbalance_threshold=1.5, dcor_threshold=0.5,
+                          replan_strategy="sorted_multi", leaky_stage="dp")
+    knobs = ControlKnobs(split_strategy="random_single")
+    # balanced loads, low dcor: nothing changes — an all-base stage map
+    # normalizes to None so no spurious regroup/recompile is triggered
+    hist = [_fb(0, loads={"d0": 1.0, "d1": 1.0},
+                dcor={"c0": (0.2, 0.1)}, strategy="random_single")]
+    k = ctl(hist, knobs)
+    assert k is knobs
+    assert k.split_strategy == "random_single"
+    assert k.stage_by_boundary is None
+    # imbalance + a leaky shallow boundary: replan + noise ONLY index 0
+    hist = [_fb(0, loads={"d0": 10.0, "d1": 1.0},
+                dcor={"c0": (0.9, 0.2), "c1": (0.7,)},
+                strategy="random_single")]
+    k = ctl(hist, knobs)
+    assert k.split_strategy == "sorted_multi"
+    assert k.stage_by_boundary == {0: "dp", 1: "identity"}
+
+
+def test_split_controller_regroups_trainer_and_keeps_training(parts):
+    over = {"split.enabled": True, "fsl.selection": "random_single",
+            "split.stage_sigma": 0.3, "split.stage_clip": 5.0,
+            "control.mode": "adaptive", "control.controllers": ["split"],
+            "control.imbalance_threshold": 1.2,
+            "control.dcor_threshold": 0.3, "control.probe_batch": 8}
+    t = FSLGANTrainer(_cfg(**over), parts, seed=0)
+    m0 = t.train_epoch(batches_per_client=1)
+    sigs0 = {cid: ex.signature for cid, ex in t.split_execs.items()}
+    assert t.feedback[-1].boundary_dcor          # the probe ran
+    m1 = t.train_epoch(batches_per_client=1)
+    # drift detected: replanned strategy + per-boundary stage reassignment
+    assert t.knobs.split_strategy == "sorted_multi"
+    assert t.knobs.stage_by_boundary is not None
+    assert any(t.split_execs[cid].signature != sigs0.get(cid)
+               for cid in t.split_execs)
+    assert np.isfinite(m1["d_loss"]) and m1["num_clients"] == 2.0
+    # only measured-leaky boundaries carry the dp stage; stage lists are
+    # per boundary, not uniform
+    for ex in t.split_execs.values():
+        assert len(ex.stages) == ex.num_boundaries
+    # NO oscillation: the probe measures the RAW (pre-stage) leak, so the
+    # assigned noise does not suppress its own control signal.  Round 2
+    # may still shrink the map's index set once (round 1's decision was
+    # probed on the PRE-replan plans); from then on the protection is
+    # stable — it never strips, and the engine stops being reset.
+    m2 = t.train_epoch(batches_per_client=1)
+    stage_map2 = dict(t.knobs.stage_by_boundary)
+    assert set(stage_map2.values()) == {"dp"}    # still protected
+    eng2 = t.engine
+    m3 = t.train_epoch(batches_per_client=1)
+    assert dict(t.knobs.stage_by_boundary or {}) == stage_map2
+    assert t.engine is eng2
+    assert np.isfinite(m2["d_loss"]) and np.isfinite(m3["d_loss"])
+
+
+def test_per_boundary_stages_price_and_sign_independently(parts):
+    """core/split: a stages list prices each boundary with ITS stage and
+    the signature distinguishes per-boundary assignments from uniform."""
+    t = FSLGANTrainer(_cfg(**{"split.enabled": True}), parts, seed=0)
+    cid = max(t.split_execs, key=lambda c: t.split_execs[c].num_boundaries)
+    ex = t.split_execs[cid]
+    nb = ex.num_boundaries
+    assert nb >= 2
+    from repro.core.split import SplitExecution, make_boundary_stage
+    mixed = [make_boundary_stage(t.cfg.split, "int8" if b == 0 else
+                                 "identity") for b in range(nb)]
+    ex2 = SplitExecution(ex.plan, ex.apply_layer, ex.tails, stages=mixed)
+    assert ex2.signature != ex.signature
+    x_shape = (t.batch_size, 28, 28, 1)
+    tot_id, per_id = ex.step_wire_bytes(t.state.d_params[cid], x_shape)
+    tot_mix, per_mix = ex2.step_wire_bytes(t.state.d_params[cid], x_shape)
+    assert per_mix[0]["fwd"] < per_id[0]["fwd"]      # int8 shrank index 0
+    assert per_mix[1:] == per_id[1:]                 # others untouched
+    assert tot_mix < tot_id
+    # all-identity stages list == uniform identity, bit-exact gradients
+    ex3 = SplitExecution(ex.plan, ex.apply_layer, ex.tails,
+                         stages=[make_boundary_stage(t.cfg.split,
+                                                     "identity")] * nb)
+    real = jnp.asarray(parts[cid][: t.batch_size])
+    l1, g1 = ex.value_and_grad(t.state.d_params[cid], real, real)
+    l3, g3 = ex3.value_and_grad(t.state.d_params[cid], real, real)
+    assert float(l1) == float(l3)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g3)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# adaptive codec, end to end through the engine
+# ---------------------------------------------------------------------------
+
+def test_adaptive_codec_commits_within_budget_and_beats_lossless(parts):
+    rounds = 3
+    over = {"control.mode": "adaptive", "control.controllers": ["codec"],
+            "control.error_budget": 0.05, "fed.topk_frac": 0.01}
+    t = FSLGANTrainer(_cfg(**over), parts, seed=0)
+    for _ in range(rounds):
+        t.train_epoch(batches_per_client=1)
+    trace = [fb.codec for fb in t.feedback]
+    assert trace[0] == "topk"                # probe the cheapest first
+    assert trace[-1] == "int8"               # cheapest within budget
+    assert t.engine.codec_name == "int8"
+    assert t.feedback[-1].codec_error <= 0.05
+    # adaptive uplink total < the lossless static run's total
+    t_none = FSLGANTrainer(_cfg(), parts, seed=0)
+    for _ in range(rounds):
+        t_none.train_epoch(batches_per_client=1)
+    assert t.engine.ledger.total_up < t_none.engine.ledger.total_up
+
+
+def test_suite_order_and_factory_names():
+    cfg = _cfg(**{"control.mode": "adaptive",
+                  "control.controllers": ["deadline", "codec", "sigma"],
+                  "control.epsilon_budget": 1.0,
+                  "control.horizon_rounds": 2})
+    suite = make_controllers(cfg, leaf_sizes=[10])
+    assert suite.names == ("codec", "sigma", "deadline")

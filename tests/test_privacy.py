@@ -34,8 +34,10 @@ from repro.privacy import (ActivationInversionAttack, RDPAccountant,
                            invert_gradients, make_prefix_fn,
                            make_uplink_stage, membership_inference,
                            plan_boundary_depths, psnr,
-                           rdp_sampled_gaussian, ssim)
+                           rdp_sampled_gaussian, sigma_for_epsilon, ssim)
 from repro.privacy.defenses import DPUplinkStage, make_dp_d_step
+
+from _hyp import given, settings, st
 
 KEY = jax.random.PRNGKey(7)
 
@@ -218,6 +220,79 @@ def test_fractional_order_grid_never_worse_than_integer_grid():
     ad.step(500)
     assert ad.epsilon(1e-5)[0] < ai.epsilon(1e-5)[0]
     assert int(ad.epsilon(1e-5)[1]) != ad.epsilon(1e-5)[1]
+
+
+# ---------------------------------------------------------------------------
+# accountant inversion (ISSUE 5 satellite): sigma_for_epsilon + per-step
+# sigma composition — the sigma controller's substrate
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(sigma=st.floats(0.3, 8.0), q=st.sampled_from((1.0, 0.1, 0.05)),
+       steps=st.integers(1, 2000))
+def test_epsilon_monotone_in_sigma_on_fractional_grid(sigma, q, steps):
+    """More noise never reports more epsilon anywhere on the dense grid —
+    the monotonicity sigma_for_epsilon's bisection relies on."""
+    e = dp_epsilon(sigma, q, steps)
+    assert dp_epsilon(sigma * 1.25, q, steps) <= e * (1 + 1e-9)
+    assert dp_epsilon(sigma * 2.0, q, steps) < e
+
+
+@settings(max_examples=25, deadline=None)
+@given(sigma=st.floats(0.4, 6.0), q=st.sampled_from((1.0, 0.1)),
+       steps=st.integers(1, 500))
+def test_sigma_for_epsilon_roundtrips_within_tolerance(sigma, q, steps):
+    """Inverting the epsilon a run actually spent recovers (almost exactly)
+    the sigma it ran with, and the returned sigma never overspends."""
+    eps = dp_epsilon(sigma, q, steps)
+    if not np.isfinite(eps) or eps <= 0:
+        return
+    sig2 = sigma_for_epsilon(eps, steps, 1e-5, q)
+    assert dp_epsilon(sig2, q, steps) <= eps * (1 + 1e-6)   # never exceeds
+    assert abs(sig2 - sigma) / sigma < 5e-3                 # round-trip
+
+
+def test_sigma_for_epsilon_edges():
+    # generous budget clamps at the floor; impossible budget at the cap
+    assert sigma_for_epsilon(1e6, 10, lo=0.5) == 0.5
+    assert sigma_for_epsilon(1e-9, 10**6, hi=50.0) == 50.0
+    with pytest.raises(ValueError):
+        sigma_for_epsilon(0.0, 10)
+
+
+def test_accountant_composes_heterogeneous_sigmas():
+    """Per-round sigma changes compose additively in RDP: a mixed-sigma
+    run spends strictly between the all-low and all-high runs, and
+    projected_epsilon is exactly the epsilon the spend would produce."""
+    lo_acct = RDPAccountant(0.8, 1.0)
+    hi_acct = RDPAccountant(2.0, 1.0)
+    mix = RDPAccountant(0.8, 1.0)
+    lo_acct.step(20)
+    hi_acct.step(20)
+    mix.step(10, noise_multiplier=0.8)
+    proj = mix.projected_epsilon(10, 1e-5, noise_multiplier=2.0)
+    mix.step(10, noise_multiplier=2.0)
+    assert hi_acct.epsilon()[0] < mix.epsilon()[0] < lo_acct.epsilon()[0]
+    assert mix.epsilon()[0] == pytest.approx(proj, rel=1e-12)
+    assert mix.steps == 20
+    # zero-projection degenerate case
+    assert RDPAccountant(1.0, 1.0).projected_epsilon(0) == 0.0
+
+
+def test_accountant_zero_steps_never_poison_totals():
+    """Regression: ``step(0)`` at sigma <= 0 (per-step RDP = inf) must be
+    a no-op, not a 0*inf = NaN write into the running totals — a round
+    where every client straggles records zero releases."""
+    acct = RDPAccountant(0.0, 1.0)
+    acct.step(0)
+    assert acct.epsilon()[0] == 0.0                  # nothing spent
+    assert acct.projected_epsilon(0) == 0.0
+    acct.step(5)                                     # real sigma<=0 spend
+    assert acct.epsilon()[0] == float("inf")         # inf, never NaN
+    mixed = RDPAccountant(1.0, 1.0)
+    mixed.step(3)
+    mixed.step(0, noise_multiplier=0.0)              # no-op, not poison
+    assert np.isfinite(mixed.epsilon()[0])
 
 
 # ---------------------------------------------------------------------------
