@@ -1,0 +1,36 @@
+"""Shared flight-recorder wiring for the trainer benches.
+
+The headline trainer benches (bench_control, bench_fed_runtime,
+bench_privacy) record their runs through ``repro.obs`` so every bench
+invocation leaves trace + metrics + feedback JSONL under
+``benchmarks/obs/<run_id>/`` — the artifacts CI uploads next to the
+BENCH_*.json numbers.  ``obs/`` is runtime output and stays gitignored;
+only the BENCH_*.json summaries are committed as baselines.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict
+
+OBS_DIR = os.path.join(os.path.dirname(__file__), "obs")
+
+
+def obs_over(run_id: str) -> Dict[str, object]:
+    """Config overrides that point a trainer's recorder at
+    ``benchmarks/obs/<run_id>``."""
+    return {"obs.enabled": True, "obs.out_dir": OBS_DIR,
+            "obs.run_id": run_id}
+
+
+def finish(tr) -> str:
+    """Flush a recorded trainer's artifacts; returns the run directory."""
+    tr.recorder.flush()
+    return tr.recorder.run_dir
+
+
+def replay_ok(tr) -> bool:
+    """Flush and replay the recorded run offline through the pure
+    controller fold — True iff the live knob sequence is reproduced
+    bit-exactly (the ISSUE 6 acceptance check, run on bench data)."""
+    from repro.obs import replay_run
+    return replay_run(finish(tr)).matches

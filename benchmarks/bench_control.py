@@ -30,6 +30,8 @@ from repro.configs.registry import get_config
 from repro.core.gan import FSLGANTrainer
 from repro.data import partition_dirichlet, synthetic_mnist
 
+from benchmarks._obs import obs_over, replay_ok
+
 JSON_PATH = os.path.join(os.path.dirname(__file__), "BENCH_control.json")
 
 ERROR_BUDGET = 0.05
@@ -85,10 +87,14 @@ def run(fast: bool = False) -> List[Tuple[str, float, str]]:
                      f"err={statics[codec]['final_codec_error']:.4f}"))
     tr = FSLGANTrainer(_cfg(clients, **{
         "control.mode": "adaptive", "control.controllers": ["codec"],
-        "control.error_budget": ERROR_BUDGET}), parts, seed=0)
+        "control.error_budget": ERROR_BUDGET},
+        **obs_over("control_adaptive_codec")), parts, seed=0)
     t0 = time.time()
     adaptive = _run_rounds(tr, rounds, batches)
     us_adaptive = (time.time() - t0) * 1e6 / rounds
+    # flight-recorder acceptance on bench data: the recorded feedback
+    # JSONL replayed offline reproduces the live codec decisions
+    adaptive["replay_ok"] = replay_ok(tr)
     # the frontier comparison: best static = fewest bytes among codecs
     # whose final delta error stays inside the budget
     in_budget = {k: v for k, v in statics.items()
@@ -101,7 +107,8 @@ def run(fast: bool = False) -> List[Tuple[str, float, str]]:
                  f"up={adaptive['up_bytes']} "
                  f"err={adaptive['final_codec_error']:.4f} "
                  f"trace={'>'.join(adaptive['codec_trace'])} "
-                 f"best_static={best_static} frontier_ok={bytes_ok and err_ok}"))
+                 f"best_static={best_static} frontier_ok={bytes_ok and err_ok} "
+                 f"replay_ok={adaptive['replay_ok']}"))
     results["codec"] = {"static": statics, "adaptive": adaptive,
                         "best_static": best_static,
                         "adaptive_bytes_le_best_static": bytes_ok,

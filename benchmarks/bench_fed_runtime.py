@@ -28,6 +28,8 @@ from repro.configs.registry import get_config
 from repro.core.gan import FSLGANTrainer
 from repro.data import partition_dirichlet, synthetic_mnist
 
+from benchmarks._obs import finish, obs_over
+
 JSON_PATH = os.path.join(os.path.dirname(__file__), "BENCH_fed_runtime.json")
 
 
@@ -117,7 +119,11 @@ def run(fast: bool = False) -> List[Tuple[str, float, str]]:
     }
     results["scheduling"] = {}
     for name, over in scenarios.items():
-        tr = FSLGANTrainer(_cfg(clients, **over), parts, seed=0)
+        # each scheduling scenario leaves a recorded trace + metrics run
+        # under benchmarks/obs/ (sync barrier vs async event loop spans)
+        tr = FSLGANTrainer(_cfg(clients, **over,
+                                **obs_over(f"fed_sched_{name}")),
+                           parts, seed=0)
         t0 = time.time()
         ms = [tr.train_epoch(batches_per_client=batches)
               for _ in range(2 if fast else 3)]
@@ -135,7 +141,9 @@ def run(fast: bool = False) -> List[Tuple[str, float, str]]:
             "stragglers": m["stragglers"],
             "mean_staleness": m["mean_staleness"],
             "d_loss": None if not np.isfinite(m["d_loss"])
-            else m["d_loss"]}
+            else m["d_loss"],
+            "trace_spans": len(tr.recorder.tracer.spans)}
+        finish(tr)
 
     with open(JSON_PATH, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)

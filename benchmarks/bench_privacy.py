@@ -46,6 +46,8 @@ from repro.privacy import (ActivationInversionAttack, best_match_psnr,
                            make_prefix_fn, make_shipped_prefix_fn,
                            plan_boundary_depths)
 
+from benchmarks._obs import finish, obs_over
+
 JSON_PATH = os.path.join(os.path.dirname(__file__), "BENCH_privacy.json")
 
 
@@ -139,8 +141,13 @@ def _split_boundary_attack(fast: bool, parts):
     for stage in stages:
         over = {"split.enabled": True, "split.boundary_stage": stage,
                 "split.stage_clip": 5.0, "split.stage_sigma": 0.5}
-        tr = FSLGANTrainer(_cfg(2, **over), parts, seed=0)
+        # recorded: the trace carries one span per boundary crossing, so
+        # the attacked tensors map 1:1 onto spans in benchmarks/obs/
+        tr = FSLGANTrainer(_cfg(2, **over,
+                                **obs_over(f"privacy_split_{stage}")),
+                           parts, seed=0)
         m = tr.train_epoch(batches_per_client=1)
+        finish(tr)
         # deepest-split client => per-boundary rows actually sweep depth
         cid = max(tr._active_clients(),
                   key=lambda c: tr.split_execs[c].num_boundaries)

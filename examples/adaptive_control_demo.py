@@ -1,5 +1,5 @@
-"""Closed-loop control walkthrough (ISSUE 5): measure -> decide -> retune,
-every round.
+"""Closed-loop control walkthrough (ISSUE 5 + 6): measure -> decide ->
+retune, every round — with the flight recorder keeping the books.
 
 Four controllers run simultaneously on one federated split-GAN run:
 
@@ -15,17 +15,20 @@ Four controllers run simultaneously on one federated split-GAN run:
   deadline — sets the sync straggler deadline at a quantile of the
              measured per-client finish-time distribution.
 
-Every decision is computed from the previous rounds' RoundFeedback records
-alone (control/feedback.py) — the same typed record this demo prints, so
-the output doubles as the feedback schema documentation.
+Since ISSUE 6 every round's RoundFeedback + the knob decision it produced
+land in the flight recorder (``repro.obs``): the table below is rendered
+from the recorder's typed metrics registry, and at the end the recorded
+feedback JSONL is replayed OFFLINE through the same pure controllers —
+reproducing the live knob sequence bit-exactly.  That replay loop is how
+controllers get tuned without rerunning training (ROADMAP item 4).
 
 Run: PYTHONPATH=src python examples/adaptive_control_demo.py
+     -> writes obs_runs/adaptive-demo/{feedback,knobs,metrics}.jsonl + trace.json
 """
-import numpy as np
-
 from repro.configs.registry import get_config
 from repro.core.gan import FSLGANTrainer
 from repro.data import partition_dirichlet, synthetic_mnist
+from repro.obs import load_run, replay_run
 
 CLIENTS = 2
 ROUNDS = 4
@@ -55,38 +58,56 @@ def main():
         "control.deadline_quantile": 0.5,
         "control.deadline_slack": 1.6,
         "control.probe_batch": 8,
+        "obs.enabled": True,
+        "obs.out_dir": "obs_runs",
+        "obs.run_id": "adaptive-demo",
     })
     imgs, labels = synthetic_mnist(60 * CLIENTS, seed=0)
     parts = partition_dirichlet(imgs, labels, CLIENTS, alpha=0.5, seed=0)
     tr = FSLGANTrainer(cfg, parts, seed=0)
+    reg = tr.recorder.registry
 
-    print(f"== {ROUNDS} adaptive rounds "
+    print(f"== {ROUNDS} adaptive rounds, recorded "
           f"(eps budget {EPS_BUDGET}, error budget 0.05) ==")
     hdr = (f"{'r':>2} {'codec':>6} {'err':>7} {'up_kB':>7} {'sigma':>6} "
-           f"{'eps':>6} {'deadline':>9} {'strat':>13} {'straggl':>7}")
+           f"{'eps':>6} {'deadline':>9} {'straggl':>7}")
     print(hdr)
+    up_prev = 0
     for r in range(ROUNDS):
-        m = tr.train_epoch(batches_per_client=1)
-        fb = tr.feedback[-1]
-        print(f"{r:>2} {fb.codec:>6} {fb.codec_error:7.4f} "
-              f"{fb.up_bytes / 1e3:7.1f} {fb.sigma:6.2f} "
-              f"{fb.dp_epsilon:6.3f} {fb.deadline_s:9.1f} "
-              f"{fb.split_strategy:>13} {fb.stragglers:>7}")
-    assert fb.dp_epsilon <= EPS_BUDGET, "sigma controller overspent!"
+        tr.train_epoch(batches_per_client=1)
+        # every column below reads the recorder's typed registry — the
+        # same numbers metrics.jsonl persists for offline tooling
+        fb, k = tr.feedback[-1], tr.knobs
+        up = reg["wire.up_bytes"].value
+        print(f"{r:>2} {k.codec:>6} {reg['codec.rel_error'].value:7.4f} "
+              f"{(up - up_prev) / 1e3:7.1f} {fb.sigma:6.2f} "
+              f"{reg['privacy.epsilon'].value:6.3f} {k.deadline_s:9.1f} "
+              f"{reg['fed.straggler_drops'].value:7.0f}")
+        up_prev = up
+    assert reg["privacy.epsilon"].value <= EPS_BUDGET, "sigma overspent!"
+    tr.recorder.flush()
 
-    print("\n== per-boundary stage assignment after dCor drift ==")
-    for cid, ex in sorted(tr.split_execs.items()):
-        dcor = tr.feedback[-1].boundary_dcor.get(cid, ())
-        stages = [s.name for s in ex.stages]
-        print(f"  {cid}: stages={stages} measured dCor="
-              f"{[round(v, 2) for v in dcor]}")
+    print("\n== the registry after the run (metrics.jsonl, last line) ==")
+    print(tr.recorder.render_summary())
 
-    print("\n== the RoundFeedback record the controllers consumed ==")
-    for k, v in tr.feedback[-1].summary().items():
-        print(f"  {k:>16}: {v}")
+    print("== offline replay of the recorded run ==")
+    run_dir = tr.recorder.run_dir
+    rec = load_run(run_dir)
+    res = replay_run(run_dir)
+    print(f"  {run_dir}: {rec.num_rounds} rounds of RoundFeedback")
+    print(f"  replayed through the pure controller fold: "
+          f"matches live decisions bit-exactly = {res.matches}")
+    for r, k in enumerate(res.decisions):
+        stages = dict(sorted((k.stage_by_boundary or {}).items()))
+        print(f"  r{r}: codec={k.codec:>5} sigma={k.sigma:.3f} "
+              f"deadline={k.deadline_s:7.1f} stages={stages or '{}'}")
+    assert res.matches
+
     print("\nfields -> controllers: codec/up_bytes/codec_error -> codec; "
           "sigma/dp_steps/dp_epsilon -> sigma; device_loads/boundary_dcor "
-          "-> split; client_finish_s -> deadline.")
+          "-> split; client_finish_s -> deadline.  Tune a controller by "
+          "editing it and re-running replay_run() on this directory — no "
+          "training required.")
 
 
 if __name__ == "__main__":

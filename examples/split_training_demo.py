@@ -9,12 +9,16 @@ per-device load + LAN bytes.  A final readout attacks the tensors the
 round actually shipped (post-stage), per boundary.
 
 Since ISSUE 5 every one of these measurements lands in a typed
-``RoundFeedback`` record (``trainer.feedback``) — printed below — which is
-what the control plane's split controller consumes to replan and noise
-leaky boundaries: see ``examples/adaptive_control_demo.py`` for the
-closed loop.  ``examples/device_selection_demo.py`` is the plan-only view.
+``RoundFeedback`` record, and since ISSUE 6 the flight recorder
+(``repro.obs``) persists them all: the cost readouts below are rendered
+from the recorder's metrics registry (the same numbers
+``metrics.jsonl`` carries), and the run leaves a Chrome-trace file with
+one span per boundary crossing — see ``examples/trace_viewer_demo.py``.
+``examples/adaptive_control_demo.py`` closes the loop on these
+measurements; ``examples/device_selection_demo.py`` is the plan-only view.
 
 Run: PYTHONPATH=src python examples/split_training_demo.py
+     -> writes obs_runs/split-demo-*/{metrics,feedback}.jsonl + trace.json
 """
 import jax
 import jax.numpy as jnp
@@ -41,6 +45,9 @@ def build_trainer(stage: str) -> FSLGANTrainer:
         "split.boundary_stage": stage,
         "split.stage_clip": 5.0,
         "split.stage_sigma": 0.5,
+        "obs.enabled": True,
+        "obs.out_dir": "obs_runs",
+        "obs.run_id": f"split-demo-{stage}",
     })
     imgs, labels = synthetic_mnist(60 * CLIENTS, seed=0)
     parts = partition_dirichlet(imgs, labels, CLIENTS, alpha=0.5, seed=0)
@@ -60,16 +67,23 @@ def main():
 
     print("\n== one federated round, trained through the split ==")
     m = tr.train_epoch(batches_per_client=BATCHES)
-    print(f"  d_loss {m['d_loss']:.4f}  g_loss {m['g_loss']:.4f}")
-    print(f"  round time      {m['round_time_s']:.1f}s (virtual, priced "
-          f"from MEASURED boundary bytes)")
-    print(f"  LAN boundary    {m['lan_mbytes']:.3f} MB shipped this round")
-    print(f"  WAN up/down     {m['up_mbytes']:.3f} / "
-          f"{m['down_mbytes']:.3f} MB")
+    reg = tr.recorder.registry
+    print(f"  d_loss {reg['gan.d_loss'].value:.4f}  "
+          f"g_loss {reg['gan.g_loss'].value:.4f}")
+    print(f"  round time      {reg['fed.round_time_s'].value:.1f}s "
+          f"(virtual, priced from MEASURED boundary bytes)")
+    print(f"  LAN boundary    {reg['wire.lan_bytes'].value / 1e6:.3f} MB "
+          f"shipped this round")
+    print(f"  WAN up/down     {reg['wire.up_bytes'].value / 1e6:.3f} / "
+          f"{reg['wire.down_bytes'].value / 1e6:.3f} MB")
+    print("  per-client wire (ledger observer -> registry):")
+    for cid in sorted(tr._active_clients()):
+        print(f"    {cid}: up {reg[f'wire.client.{cid}.up_bytes'].value:>9.0f} B"
+              f"  lan {reg[f'wire.client.{cid}.lan_bytes'].value:>9.0f} B")
 
     print("\n== the RoundFeedback the round emitted "
-          "(what the split controller reads) ==")
-    fb = tr.feedback[-1]
+          "(recorded to feedback.jsonl; what the split controller reads) ==")
+    fb = tr.recorder.feedback[-1]
     print(f"  lan_bytes={fb.lan_bytes}  up_bytes={fb.up_bytes}  "
           f"round_time_s={fb.round_time_s:.1f}")
     print(f"  device_loads (imbalance drift -> replan): "
@@ -78,6 +92,9 @@ def main():
           f"{ {k: round(v, 1) for k, v in fb.client_finish_s.items()} }")
     print("  boundary_dcor fills in under control.mode='adaptive' "
           "(examples/adaptive_control_demo.py)")
+    tr.recorder.flush()
+    print(f"  trace with per-boundary spans -> "
+          f"{tr.recorder.path('trace.json')}")
 
     print("\n== per-device load (compute units / resident D params) ==")
     param_bytes = {}

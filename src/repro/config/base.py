@@ -53,6 +53,8 @@ FED_BACKENDS = ("loop", "vectorized")
 PRIVACY_MODES = ("dp_sgd", "uplink")
 CONTROL_MODES = ("frozen", "adaptive")
 CONTROLLERS = ("codec", "sigma", "split", "deadline")
+OBS_TRACE_CLOCKS = ("virtual", "wall", "both")
+OBS_SINKS = ("trace", "metrics", "feedback")
 
 
 def _check_name(section: str, field_name: str, value: str,
@@ -517,6 +519,46 @@ class ControlConfig:
 
 
 @dataclass
+class ObsConfig:
+    """Flight recorder (src/repro/obs/): tracing, metrics, and profiling.
+
+    ``enabled=False`` (default) records nothing and leaves every training
+    path untouched — obs-off runs stay bit-exact with the pre-obs build
+    (pinned test).  ``enabled=True`` attaches a :class:`~repro.obs.
+    FlightRecorder` to the trainer:
+
+      * spans for round -> download -> client-execution -> split-segment ->
+        boundary-crossing -> uplink -> aggregate on the engine's virtual
+        clock (plus wall-clock host spans), exported as Chrome-trace JSON;
+      * a typed metric registry fed from each round's ``RoundFeedback``,
+        snapshotted to ``metrics.jsonl``;
+      * the full ``RoundFeedback`` + knob-decision history as JSONL, enough
+        to replay the run through the pure controllers offline
+        (``repro.obs.replay``) and reproduce the knob sequence bit-exactly.
+
+    ``profile_kernels`` additionally times jit compiles and the fedavg /
+    dp_clip kernels (roofline terms); it is gated off by default because
+    profiling runs extra compilations — measurement only, numerics are
+    never touched either way.
+    """
+    enabled: bool = False
+    out_dir: str = "obs_runs"          # per-run dir created under this root
+    run_id: str = ""                   # "" => derived from config + counter
+    # which sinks are live when enabled; subset of OBS_SINKS
+    sinks: Tuple[str, ...] = ("trace", "metrics", "feedback")
+    trace_clock: str = "virtual"       # virtual | wall | both (export clocks)
+    # cap batches whose segment/boundary phases are traced per client per
+    # round (0 = no cap); rounds beyond the cap still get client spans
+    trace_batches: int = 0
+    profile_kernels: bool = False      # jit + kernel timing -> profile.json
+
+    def __post_init__(self) -> None:
+        _check_name("obs", "trace_clock", self.trace_clock, OBS_TRACE_CLOCKS)
+        for s in self.sinks:
+            _check_name("obs", "sinks", s, OBS_SINKS)
+
+
+@dataclass
 class ShapeConfig:
     name: str = "train_4k"
     seq_len: int = 4096
@@ -543,6 +585,7 @@ class RunConfig:
     split: SplitConfig = field(default_factory=SplitConfig)
     privacy: PrivacyConfig = field(default_factory=PrivacyConfig)
     control: ControlConfig = field(default_factory=ControlConfig)
+    obs: ObsConfig = field(default_factory=ObsConfig)
     shape: ShapeConfig = field(default_factory=lambda: INPUT_SHAPES["train_4k"])
     seed: int = 0
 
@@ -617,7 +660,8 @@ _NESTED = {
     RunConfig: {"model": ModelConfig, "parallel": ParallelConfig,
                 "optim": OptimConfig, "fsl": FSLConfig, "fed": FedConfig,
                 "split": SplitConfig, "privacy": PrivacyConfig,
-                "control": ControlConfig, "shape": ShapeConfig},
+                "control": ControlConfig, "obs": ObsConfig,
+                "shape": ShapeConfig},
 }
 
 

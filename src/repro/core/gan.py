@@ -69,6 +69,7 @@ from repro.fed.transport import apply_delta, delta_tree, fake_batch_bytes
 from repro.models.dcgan import (disc_apply, disc_apply_layer, disc_init,
                                 disc_layer_costs, disc_layer_names,
                                 gen_apply, gen_init)
+from repro.obs import FlightRecorder, profile_engine_kernels
 from repro.optim import make_optimizer
 from repro.privacy.defenses import (RDPAccountant, make_dp_d_step,
                                     make_uplink_stage)
@@ -180,6 +181,15 @@ class FSLGANTrainer:
         # depend on batches_per_client)
         self.engine: Optional[FederationEngine] = None
         self._engine_batches: Optional[int] = None
+        # flight recorder (cfg.obs): traces, metrics, feedback persistence.
+        # Disabled (default) => None everywhere — the engine emits no spans
+        # and every training path is untouched (pinned bit-exact).
+        self.recorder: Optional[FlightRecorder] = None
+        self._trace_timelines: Dict[str, Any] = {}
+        self._manifest_written = False
+        self._profiled = False
+        if cfg.obs.enabled:
+            self.recorder = FlightRecorder.from_config(cfg)
 
     # ------------------------------------------------------------------
     def _build_steps(self):
@@ -332,7 +342,44 @@ class FSLGANTrainer:
             self.cfg.fed, specs, weighted=self.cfg.fsl.weighted_average,
             uplink_stage=self._uplink_stage)
         self._engine_batches = batches_per_client
+        if self.recorder is not None:
+            self._attach_recorder(by_id)
         return self.engine
+
+    def _attach_recorder(self, by_id) -> None:
+        """Hook the flight recorder into a (re)built engine: tracer with a
+        virtual-clock offset (the fresh engine's clock restarts at 0, the
+        recording's timeline must stay monotone), the ledger's wire
+        observer, and one split timeline per client for span subdivision."""
+        rec = self.recorder
+        if rec.wants("trace"):
+            tr = rec.tracer
+            tr.set_virtual_offset(tr.last_virtual_end())
+            self.engine.set_tracer(tr, batch_cap=self.cfg.obs.trace_batches)
+        self.engine.ledger.observer = self._observe_wire
+        self._trace_timelines = {}
+        if self.cfg.split.enabled:
+            for cid, ex in self.split_execs.items():
+                cl = by_id.get(cid)
+                if cl is None:
+                    continue
+                tf = {d.device_id: d.time_factor for d in cl.devices}
+                self._trace_timelines[cid] = ex.round_timeline(
+                    tf, lan_latency_s=self.cfg.fsl.lan_latency_s,
+                    hop_bytes=self._split_hop_events.get(cid),
+                    lan_bandwidth_bps=self.cfg.split.lan_bandwidth_bps)
+
+    def _observe_wire(self, cid: str, up: int, down: int, lan: int) -> None:
+        """TrafficLedger observer -> per-client cumulative wire counters
+        (the per-round totals come from RoundFeedback via observe_round;
+        distinct namespaces, no double counting)."""
+        reg = self.recorder.registry
+        if up:
+            reg.counter(f"wire.client.{cid}.up_bytes").inc(up)
+        if down:
+            reg.counter(f"wire.client.{cid}.down_bytes").inc(down)
+        if lan:
+            reg.counter(f"wire.client.{cid}.lan_bytes").inc(lan)
 
     def _sample_round_batches(self, cid: str, steps: int
                               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -377,17 +424,26 @@ class FSLGANTrainer:
         return (self.cfg.control.mode == "adaptive"
                 and bool(self.cfg.control.controllers))
 
+    def _controller_inputs(self, batches_per_client: int
+                           ) -> Tuple[List[int], int]:
+        """The non-config inputs ``make_controllers`` needs: uplink-tree
+        leaf sizes (codec byte prediction) and the expected DP releases per
+        round.  Shared between the live suite build and the recorder's
+        manifest — replay must rebuild the exact same suite."""
+        leaf_sizes = [int(l.size) for l in jax.tree.leaves(
+            self.state.d_params[self.client_ids[0]])]
+        if self.cfg.privacy.mode == "dp_sgd":
+            hint = sum(self._client_steps(cid, batches_per_client)
+                       for cid in self._active_clients())
+        else:                              # uplink: one release per client
+            hint = len(self._active_clients())
+        return leaf_sizes, hint
+
     def _ensure_controllers(self, batches_per_client: int) -> ControllerSuite:
         """Build the controller suite on first use (the DP steps-per-round
         hint depends on the round length)."""
         if self._suite is None:
-            leaf_sizes = [int(l.size) for l in jax.tree.leaves(
-                self.state.d_params[self.client_ids[0]])]
-            if self.cfg.privacy.mode == "dp_sgd":
-                hint = sum(self._client_steps(cid, batches_per_client)
-                           for cid in self._active_clients())
-            else:                          # uplink: one release per client
-                hint = len(self._active_clients())
+            leaf_sizes, hint = self._controller_inputs(batches_per_client)
             self._suite = make_controllers(
                 self.cfg, leaf_sizes=leaf_sizes, steps_per_round_hint=hint)
         return self._suite
@@ -487,6 +543,15 @@ class FSLGANTrainer:
         """
         backend = backend or self.cfg.fed.backend
         st = self.state
+        if self.recorder is not None and not self._manifest_written:
+            leaf_sizes, hint = self._controller_inputs(batches_per_client)
+            self.recorder.set_manifest(self.cfg, leaf_sizes=leaf_sizes,
+                                       steps_per_round_hint=hint)
+            self._manifest_written = True
+            if self.cfg.obs.profile_kernels and not self._profiled:
+                self.recorder.write_profile(
+                    profile_engine_kernels(self.cfg))
+                self._profiled = True
         if self._adaptive():
             self._apply_knobs(self._ensure_controllers(batches_per_client)(
                 self.feedback, self.knobs))
@@ -512,7 +577,8 @@ class FSLGANTrainer:
                             self._bind_round(batches_per_client, backend),
                             down_bytes=batches_per_client * batch_b,
                             down_bytes_by_client=down_by_client,
-                            lan_bytes_by_client=lan_by_client)
+                            lan_bytes_by_client=lan_by_client,
+                            timeline_by_client=self._trace_timelines or None)
         d_avg = rep.global_params
         for cid, opt in rep.opt_states.items():
             st.d_opt[cid] = opt
@@ -573,7 +639,7 @@ class FSLGANTrainer:
         if self._adaptive() and "split" in self.cfg.control.controllers \
                 and self.split_execs:
             probe = self._probe_boundary_dcor()
-        self.feedback.append(RoundFeedback(
+        fb = RoundFeedback(
             round_index=st.step - 1,
             backend=backend,
             codec=eng.codec_name,
@@ -596,7 +662,14 @@ class FSLGANTrainer:
             dp_steps=(self.accountant.steps - acct_steps_before
                       if self.accountant else 0),
             device_loads=loads,
-            boundary_dcor=probe))
+            boundary_dcor=probe)
+        self.feedback.append(fb)
+        if self.recorder is not None:
+            # feedback + the knobs in force during this round (the
+            # decision the offline replay must reproduce), then re-export
+            # the trace so a killed run still leaves a loadable file
+            self.recorder.on_round(fb, self.knobs)
+            self.recorder.flush()
         return self._record(metrics)
 
     # ------------------------------------------------------------------

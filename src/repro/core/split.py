@@ -477,6 +477,86 @@ class SplitExecution:
             self._shape_cache[ck] = [tuple(s.shape) for s in shapes]
         return self._shape_cache[ck]
 
+    def segment_costs(self) -> List[float]:
+        """Compute units per device segment (portions merged exactly as
+        ``plan_segments`` merges them)."""
+        costs: List[float] = []
+        prev: Optional[str] = None
+        for p in self.plan.portions:
+            if prev == p.device_id:
+                costs[-1] += p.cost
+            else:
+                costs.append(p.cost)
+                prev = p.device_id
+        return costs
+
+    def round_timeline(self, time_factors: Dict[str, float], *,
+                       lan_latency_s: float = 0.050,
+                       compute_unit_s: float = 0.010,
+                       bwd_fwd_ratio: float = 2.0,
+                       hop_bytes: Optional[Sequence[int]] = None,
+                       lan_bandwidth_bps: float = 100e6
+                       ) -> Tuple[List[Dict[str, Any]], float]:
+        """The ordered phases of ONE local batch under this plan, as the
+        flight recorder traces them: forward segment computes and boundary
+        hops chain down the device list, then the backward pass walks the
+        same chain in reverse (segment computes scaled ``bwd_fwd_ratio``).
+
+        ``time_factors`` maps device id -> Time_Factor; ``hop_bytes``
+        (optional) lists the bytes of each hop event in the flattened
+        ``[b0.fwd, b0.bwd, b1.fwd, ...]`` order the trainer's
+        ``_split_hop_events`` uses — given, each hop costs
+        ``lan_latency_s + 8*bytes/bw``; absent, the analytic
+        ``lan_latency_s`` per hop.
+
+        Returns ``(phases, batch_time_s)``: phases are dicts with
+        ``name``/``cat``/``track``/``t0``/``t1``/``args`` (times relative
+        to batch start) whose durations sum EXACTLY to
+        ``core/simulate.plan_epoch_time``'s per-batch time under the same
+        arguments — the trace is the price, subdivided, never a second
+        model of it (pinned in tests).
+        """
+        seg_costs = self.segment_costs()
+        bw = max(float(lan_bandwidth_bps), 1.0)
+
+        def hop_time(b: int, direction: int) -> float:
+            if hop_bytes is None:
+                return lan_latency_s
+            return lan_latency_s + 8.0 * int(hop_bytes[2 * b + direction]) / bw
+
+        def seg_time(si: int, ratio: float) -> float:
+            dev = self.segments[si][0]
+            return seg_costs[si] * compute_unit_s * time_factors[dev] * ratio
+
+        phases: List[Dict[str, Any]] = []
+        t = 0.0
+
+        def emit(name: str, cat: str, track: str, dur: float, **args):
+            nonlocal t
+            phases.append({"name": name, "cat": cat, "track": track,
+                           "t0": t, "t1": t + dur, "args": args})
+            t += dur
+
+        for si, (dev, names) in enumerate(self.segments):
+            emit(f"fwd {dev}", "segment", dev, seg_time(si, 1.0),
+                 layers=len(names))
+            if si < len(self.segments) - 1:
+                b = self.boundaries[si]
+                emit(f"b{b.index} fwd {b.from_device}->{b.to_device}",
+                     "boundary", b.from_device, hop_time(si, 0),
+                     boundary=b.index, direction="fwd",
+                     stage=self.stages[si].name)
+        for si in range(len(self.segments) - 1, -1, -1):
+            dev = self.segments[si][0]
+            emit(f"bwd {dev}", "segment", dev, seg_time(si, bwd_fwd_ratio))
+            if si > 0:
+                b = self.boundaries[si - 1]
+                emit(f"b{b.index} bwd {b.to_device}->{b.from_device}",
+                     "boundary", b.to_device, hop_time(si - 1, 1),
+                     boundary=b.index, direction="bwd",
+                     stage=self.stages[si - 1].name)
+        return phases, t
+
     def step_wire_bytes(self, params, x_shape: Sequence[int],
                         dtype=jnp.float32) -> Tuple[int, List[Dict[str, int]]]:
         """Measured LAN bytes of ONE local step under this plan + stage.

@@ -133,6 +133,12 @@ class FederationEngine:
         self.version = 0
         self.ledger = TrafficLedger()      # cumulative across rounds
         self._lan_by: Dict[str, int] = {}  # this round's LAN bytes/client
+        # observability (repro.obs): optional tracer + per-client split
+        # timelines; None/empty means no spans are emitted — pricing,
+        # scheduling and numerics are identical either way
+        self.tracer = None
+        self._trace_batch_cap = 0
+        self._timelines: Dict[str, Any] = {}
 
     # ------------------------------------------------------------------
     def set_codec(self, name: str, topk_frac: Optional[float] = None) -> None:
@@ -151,6 +157,15 @@ class FederationEngine:
     def set_deadline(self, deadline_s: float) -> None:
         """Retune the sync straggler deadline (deadline controller)."""
         self.deadline_s = float(deadline_s)
+
+    def set_tracer(self, tracer, *, batch_cap: int = 0) -> None:
+        """Attach a :class:`repro.obs.Tracer`; subsequent rounds emit
+        virtual-clock spans (round -> download -> client-execution ->
+        split-segment/boundary -> uplink -> aggregate).  ``batch_cap``
+        bounds how many batches per client get per-phase split spans
+        (0 = all).  ``None`` detaches."""
+        self.tracer = tracer
+        self._trace_batch_cap = int(batch_cap)
 
     # ------------------------------------------------------------------
     def _codec_roundtrip(self, cid: str, base_tree, params
@@ -183,7 +198,8 @@ class FederationEngine:
     # ------------------------------------------------------------------
     def run_round(self, global_tree, program, *, down_bytes: int = 0,
                   down_bytes_by_client: Optional[Dict[str, int]] = None,
-                  lan_bytes_by_client: Optional[Dict[str, int]] = None
+                  lan_bytes_by_client: Optional[Dict[str, int]] = None,
+                  timeline_by_client: Optional[Dict[str, Any]] = None
                   ) -> RoundReport:
         """One FL round.  ``program``: a client program (``fed/programs``)
         or a legacy bare callable.  ``down_bytes``: server->client fake
@@ -193,11 +209,15 @@ class FederationEngine:
         ``lan_bytes_by_client``: measured split-boundary bytes of one local
         round (``core/split.SplitExecution.step_wire_bytes`` x steps) —
         recorded per *execution*, straggler or not, because the LAN traffic
-        happens whether or not the update lands."""
+        happens whether or not the update lands.
+        ``timeline_by_client``: one batch's ordered split phases per client
+        (``core/split.SplitExecution.round_timeline`` output) — only read
+        when a tracer is attached, to subdivide client-execution spans."""
         program = as_program(program)
         down_by = dict(down_bytes_by_client or {})
         db = lambda cid: down_by.get(cid, down_bytes)  # noqa: E731
         self._lan_by = dict(lan_bytes_by_client or {})
+        self._timelines = dict(timeline_by_client or {})
         if self.cfg.mode == "sync":
             rep = self._run_sync(global_tree, program, db)
         else:
@@ -212,9 +232,114 @@ class FederationEngine:
         return rep
 
     # ------------------------------------------------------------------
+    # span emission (repro.obs).  Spans are recorded retroactively from
+    # the round's priced times once they are all known — the discrete-
+    # event engine schedules whole client windows, it never "waits".
+    # ------------------------------------------------------------------
+    def _emit_exec_span(self, tr, parent, cid: str, start: float,
+                        compute_dur: float, args: Dict[str, Any]) -> int:
+        """Client-execution span [start, start+compute_dur], subdivided
+        into per-batch split-segment / boundary-crossing phases when a
+        timeline is known for this client."""
+        sid = tr.record(f"exec {cid}", cat="client", track=cid,
+                        v_start=start, v_end=start + compute_dur,
+                        parent=parent, args=args)
+        tl = self._timelines.get(cid)
+        if not tl:
+            return sid
+        phases, batch_time = tl
+        if batch_time <= 0.0 or not phases:
+            return sid
+        steps = self.specs[cid].local_steps \
+            or max(1, int(round(compute_dur / batch_time)))
+        n = steps if self._trace_batch_cap <= 0 \
+            else min(steps, self._trace_batch_cap)
+        for b in range(n):
+            off = start + b * batch_time
+            bid = tr.record(f"batch {b}", cat="batch", track=cid,
+                            v_start=off, v_end=off + batch_time, parent=sid)
+            for ph in phases:
+                tr.record(ph["name"], cat=ph["cat"], track=ph["track"],
+                          v_start=off + ph["t0"], v_end=off + ph["t1"],
+                          parent=bid, args=ph["args"])
+        return sid
+
+    def _emit_sync_spans(self, rep: RoundReport, t0: float,
+                         down_t: Dict[str, float]) -> None:
+        tr = self.tracer
+        rnd = tr.record(
+            f"round {self.round_idx}", cat="round", track="server",
+            v_start=t0, v_end=t0 + rep.round_time_s,
+            args={"mode": "sync", "participated": len(rep.participated),
+                  "stragglers": len(rep.stragglers),
+                  "codec": self.codec_name, "deadline_s": self.deadline_s})
+        for cid, dt in down_t.items():
+            spec = self.specs[cid]
+            tr.record(f"down {cid}", cat="downlink", track=cid,
+                      v_start=t0, v_end=t0 + dt, parent=rnd,
+                      args={"bytes": rep.traffic.down_bytes.get(cid, 0)})
+            args: Dict[str, Any] = {}
+            if cid in rep.stragglers:
+                args["dropped"] = True
+            # ran iff the codec round-tripped its update this round
+            if cid not in rep.codec_error:
+                args["executed"] = False   # provably-late lower bound
+                self._emit_exec_span(tr, rnd, cid, t0 + dt,
+                                     spec.compute_time_s, args)
+                continue
+            self._emit_exec_span(tr, rnd, cid, t0 + dt,
+                                 spec.compute_time_s, args)
+            fin = rep.finish_s[cid]
+            up_dur = max(0.0, fin - dt - spec.compute_time_s)
+            tr.record(f"up {cid}", cat="uplink", track=cid,
+                      v_start=t0 + fin - up_dur, v_end=t0 + fin, parent=rnd,
+                      args={"bytes": rep.traffic.up_bytes.get(cid, 0),
+                            "codec": self.codec_name,
+                            "landed": cid in rep.participated})
+        tr.record("aggregate", cat="aggregate", track="server",
+                  v_start=t0 + rep.round_time_s, v_end=t0 + rep.round_time_s,
+                  parent=rnd,
+                  args={"num_updates": len(rep.participated),
+                        "version": rep.version})
+
+    def _emit_async_spans(self, rep: RoundReport, t0: float, last_t: float,
+                          events: List[Dict[str, Any]]) -> None:
+        tr = self.tracer
+        rnd = tr.record(
+            f"round {self.round_idx}", cat="round", track="server",
+            v_start=t0, v_end=last_t,
+            args={"mode": self.cfg.mode,
+                  "participated": len(rep.participated),
+                  "stragglers": len(rep.stragglers),
+                  "codec": self.codec_name})
+        for ev in events:
+            cid = ev.get("cid", "")
+            if ev["kind"] == "down":
+                tr.record(f"down {cid}", cat="downlink", track=cid,
+                          v_start=ev["t0"], v_end=ev["t1"], parent=rnd,
+                          args={"bytes": ev["bytes"],
+                                "cycle": ev["cycle"]})
+            elif ev["kind"] == "exec":
+                self._emit_exec_span(tr, rnd, cid, ev["t0"],
+                                     ev["t1"] - ev["t0"],
+                                     {"cycle": ev["cycle"]})
+            elif ev["kind"] == "up":
+                tr.record(f"up {cid}", cat="uplink", track=cid,
+                          v_start=ev["t0"], v_end=ev["t1"], parent=rnd,
+                          args={"bytes": ev["bytes"],
+                                "codec": self.codec_name})
+            else:                          # arrive -> server-side apply
+                tr.record(f"aggregate {cid}", cat="aggregate",
+                          track="server", v_start=ev["t"], v_end=ev["t"],
+                          parent=rnd,
+                          args={"staleness": ev["staleness"],
+                                "landed": ev["landed"]})
+
+    # ------------------------------------------------------------------
     def _run_sync(self, global_tree, program, db) -> RoundReport:
         rep = RoundReport(global_params=global_tree)
         participants, rep.unavailable = self._split_roster()
+        t0 = self.clock
         deadline = self.deadline_s
         down_t = {cid: self.downlink.transfer_time(db(cid))
                   for cid in participants}
@@ -276,6 +401,8 @@ class FederationEngine:
         rep.clock_s = self.clock
         rep.global_params = new_global
         rep.version = self.version
+        if self.tracer is not None:
+            self._emit_sync_spans(rep, t0, down_t)
         return rep
 
     # ------------------------------------------------------------------
@@ -289,12 +416,17 @@ class FederationEngine:
         queue = EventQueue()
         # (snapshot tree, version at download) per in-flight client
         snapshots: Dict[str, Tuple[Any, int]] = {}
+        tev: List[Dict[str, Any]] = []     # trace records (tracer attached)
 
         for cid in participants:
             snapshots[cid] = (global_tree, self.version)
             rep.traffic.record(cid, down=db(cid))
             queue.push(t0 + down_t[cid] + self.specs[cid].compute_time_s,
                        FINISH, cid, payload={"cycle": 1})
+            if self.tracer is not None:
+                tev.append({"kind": "down", "cid": cid, "t0": t0,
+                            "t1": t0 + down_t[cid], "bytes": db(cid),
+                            "cycle": 1})
 
         last_t = t0
         while queue:
@@ -313,18 +445,33 @@ class FederationEngine:
                 rep.codec_error[cid] = cerr
                 # the opt state rides with the arrival: it only commits if
                 # the update actually lands inside the deadline
-                queue.push(ev.time + self.uplink.transfer_time(up_b),
-                           ARRIVE, cid,
+                up_t = self.uplink.transfer_time(up_b)
+                queue.push(ev.time + up_t, ARRIVE, cid,
                            payload={"decoded": decoded, "snap_ver": snap_ver,
                                     "cycle": ev.payload["cycle"],
                                     "opt_state": res.opt_state})
+                if self.tracer is not None:
+                    tev.append({"kind": "exec", "cid": cid,
+                                "t0": ev.time - spec.compute_time_s,
+                                "t1": ev.time,
+                                "cycle": ev.payload["cycle"]})
+                    tev.append({"kind": "up", "cid": cid, "t0": ev.time,
+                                "t1": ev.time + up_t, "bytes": up_b})
                 continue
             # ARRIVE
             rep.finish_s[cid] = ev.time - t0      # last arrival per client
             if deadline and ev.time - t0 > deadline:
                 rep.stragglers.append(cid)
+                if self.tracer is not None:
+                    tev.append({"kind": "arrive", "cid": cid, "t": ev.time,
+                                "staleness":
+                                    self.version - ev.payload["snap_ver"],
+                                "landed": False})
                 continue
             staleness = self.version - ev.payload["snap_ver"]
+            if self.tracer is not None:
+                tev.append({"kind": "arrive", "cid": cid, "t": ev.time,
+                            "staleness": staleness, "landed": True})
             rep.staleness[cid] = staleness
             rep.staleness_events.append(staleness)
             global_tree, bumped = self.policy.on_update(
@@ -343,6 +490,10 @@ class FederationEngine:
                 rep.traffic.record(cid, down=db(cid))
                 queue.push(ev.time + down_t[cid] + spec.compute_time_s,
                            FINISH, cid, payload={"cycle": cycle + 1})
+                if self.tracer is not None:
+                    tev.append({"kind": "down", "cid": cid, "t0": ev.time,
+                                "t1": ev.time + down_t[cid],
+                                "bytes": db(cid), "cycle": cycle + 1})
 
         global_tree = self.policy.on_round_end(global_tree)
         self.version += 1 if rep.participated else 0
@@ -351,4 +502,6 @@ class FederationEngine:
         rep.clock_s = self.clock
         rep.global_params = global_tree
         rep.version = self.version
+        if self.tracer is not None:
+            self._emit_async_spans(rep, t0, last_t, tev)
         return rep

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -123,6 +123,11 @@ class TrafficLedger:
     up_bytes: Dict[str, int] = field(default_factory=dict)
     down_bytes: Dict[str, int] = field(default_factory=dict)
     lan_bytes: Dict[str, int] = field(default_factory=dict)
+    # observability hook: called as observer(client_id, up, down, lan) on
+    # every record (repro.obs feeds per-client wire counters from it);
+    # None — the default — keeps the ledger a plain accumulator
+    observer: Optional[Callable[[str, int, int, int], None]] = \
+        field(default=None, repr=False, compare=False)
 
     def record(self, client_id: str, *, up: int = 0, down: int = 0,
                lan: int = 0) -> None:
@@ -132,6 +137,8 @@ class TrafficLedger:
         if lan:
             self.lan_bytes[client_id] = (self.lan_bytes.get(client_id, 0)
                                          + int(lan))
+        if self.observer is not None:
+            self.observer(client_id, int(up), int(down), int(lan))
 
     @property
     def total_up(self) -> int:

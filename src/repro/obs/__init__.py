@@ -1,0 +1,31 @@
+"""Flight recorder for the federated split engine: tracing, metrics,
+recording + replay, and profiling (see ISSUE 6 / ROADMAP item 4).
+
+  * :mod:`repro.obs.trace`    — two-clock nested spans + Chrome-trace export
+  * :mod:`repro.obs.metrics`  — typed counter/gauge/histogram registry + JSONL
+  * :mod:`repro.obs.recorder` — per-run persistence of feedback/knobs/metrics
+  * :mod:`repro.obs.replay`   — offline controller replay over recorded logs
+  * :mod:`repro.obs.profile`  — jit + kernel timing feeding the roofline model
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, JsonlSink,
+                               MetricsRegistry, load_jsonl, observe_round)
+from repro.obs.profile import (KernelProfile, profile_dp_clip,
+                               profile_engine_kernels, profile_fedavg,
+                               profile_jit)
+from repro.obs.recorder import (FlightRecorder, RunRecord, feedback_from_dict,
+                                feedback_to_dict, knobs_from_dict,
+                                knobs_to_dict, load_run)
+from repro.obs.replay import (ReplayResult, replay_decisions, replay_run,
+                              suite_from_manifest)
+from repro.obs.trace import (Span, Tracer, validate_chrome_trace)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "JsonlSink", "MetricsRegistry",
+    "load_jsonl", "observe_round",
+    "KernelProfile", "profile_dp_clip", "profile_engine_kernels",
+    "profile_fedavg", "profile_jit",
+    "FlightRecorder", "RunRecord", "feedback_from_dict", "feedback_to_dict",
+    "knobs_from_dict", "knobs_to_dict", "load_run",
+    "ReplayResult", "replay_decisions", "replay_run", "suite_from_manifest",
+    "Span", "Tracer", "validate_chrome_trace",
+]

@@ -1,0 +1,135 @@
+"""Profiling hooks: jit compile-time and per-kernel timing, feeding the
+roofline model.
+
+Everything here is measurement-only and OFF by default
+(``cfg.obs.profile_kernels=False``): profiling triggers extra jit
+compilations of the hot aggregation/privacy kernels (fedavg, dp_clip) on
+synthetic inputs, so the gate exists to keep ``control=frozen`` runs doing
+zero extra work — numerics are untouched either way (the profiled
+programs never feed training state).
+
+Each profile records the three costs a kernel pays:
+
+  * ``lower_s`` / ``compile_s`` — jit trace + XLA compile wall time
+    (the constant SplitEasy warns dominates short on-device runs);
+  * ``run_s``   — best-of-N executed wall time (block_until_ready);
+  * roofline terms — flops / bytes from ``compiled.cost_analysis()``
+    against the target HwSpec (``repro.roofline.analysis.kernel_terms``),
+    i.e. where the kernel sits on the compute/memory roof.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import asdict, dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.roofline.analysis import kernel_terms
+from repro.roofline.hw import TPU_V5E, HwSpec
+
+
+@dataclass
+class KernelProfile:
+    name: str
+    lower_s: float
+    compile_s: float
+    run_s: float                  # best-of-N executed time
+    runs: int
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    compute_term_s: float = 0.0
+    memory_term_s: float = 0.0
+    arithmetic_intensity: float = 0.0
+
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+
+def profile_jit(name: str, fn: Callable, *args, hw: HwSpec = TPU_V5E,
+                runs: int = 3) -> KernelProfile:
+    """Lower + compile + time one callable on the given args.
+
+    ``fn`` is traced fresh through ``jax.jit`` so the lower/compile split
+    is measured even when the callable is already cached elsewhere.
+    """
+    jfn = jax.jit(fn)
+    t0 = time.perf_counter()
+    lowered = jfn.lower(*args)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+    best = float("inf")
+    for _ in range(max(1, runs)):
+        r0 = time.perf_counter()
+        out = compiled(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - r0)
+    terms = kernel_terms(compiled, hw)
+    return KernelProfile(name=name, lower_s=t1 - t0, compile_s=t2 - t1,
+                         run_s=best, runs=max(1, runs), **terms)
+
+
+# ---------------------------------------------------------------------------
+# the engine's hot kernels on synthetic inputs
+# ---------------------------------------------------------------------------
+
+def profile_fedavg(*, num_clients: int = 4, n: int = 8192,
+                   interpret: bool = True, hw: HwSpec = TPU_V5E,
+                   runs: int = 3) -> KernelProfile:
+    """The fedavg aggregation kernel: (C, N) stacked client updates ->
+    weighted mean.  ``interpret=True`` runs the Pallas kernel in interpret
+    mode (the CPU-safe path CI uses)."""
+    from repro.kernels.fedavg.ops import fedavg_flat
+    key = jax.random.PRNGKey(0)
+    stacked = jax.random.normal(key, (num_clients, n), jnp.float32)
+    weights = jnp.ones((num_clients,), jnp.float32)
+
+    def fn(s, w):
+        return fedavg_flat(s, w, interpret=interpret)
+
+    return profile_jit(f"fedavg_c{num_clients}_n{n}", fn, stacked, weights,
+                       hw=hw, runs=runs)
+
+
+def profile_dp_clip(*, batch: int = 8, n: int = 4096, clip: float = 1.0,
+                    sigma: float = 1.0, use_kernel: bool = False,
+                    interpret: bool = True, hw: HwSpec = TPU_V5E,
+                    runs: int = 3) -> KernelProfile:
+    """The dp_clip privatization: per-example (B, N) grads -> clipped,
+    noised sum (the DP-SGD inner release)."""
+    from repro.kernels.dp_clip.ops import dp_clip_noise_flat
+    key = jax.random.PRNGKey(1)
+    k1, k2 = jax.random.split(key)
+    stacked = jax.random.normal(k1, (batch, n), jnp.float32)
+    noise = jax.random.normal(k2, (n,), jnp.float32)
+    c = jnp.asarray(clip, jnp.float32)
+    s = jnp.asarray(sigma * clip, jnp.float32)
+
+    def fn(g, nz):
+        return dp_clip_noise_flat(g, c, s, nz, use_kernel=use_kernel,
+                                  interpret=interpret)
+
+    kind = "kernel" if use_kernel else "ref"
+    return profile_jit(f"dp_clip_{kind}_b{batch}_n{n}", fn, stacked, noise,
+                       hw=hw, runs=runs)
+
+
+def profile_engine_kernels(cfg=None, *, hw: HwSpec = TPU_V5E,
+                           runs: int = 3) -> Dict[str, Dict[str, Any]]:
+    """Profile the kernels one engine round leans on, sized from ``cfg``
+    when given (aggregation width = number of clients; dp_clip on when the
+    privacy subsystem is).  Returns ``{name: profile dict}`` — what the
+    recorder writes to ``profile.json``."""
+    num_clients = cfg.fsl.num_clients if cfg is not None else 4
+    profiles = [profile_fedavg(num_clients=max(2, num_clients),
+                               interpret=True, hw=hw, runs=runs)]
+    dp_on = cfg is None or cfg.privacy.enabled
+    if dp_on:
+        # interpret mode keeps the Pallas path CPU-safe regardless of the
+        # training config's kernel flags — this is a probe, not training
+        profiles.append(profile_dp_clip(
+            use_kernel=bool(cfg and cfg.privacy.use_kernel),
+            interpret=True, hw=hw, runs=runs))
+    return {p.name: p.to_dict() for p in profiles}

@@ -121,6 +121,21 @@ class RooflineReport:
         return json.dumps(self.to_dict(), indent=2)
 
 
+def kernel_terms(compiled, hw: HwSpec = TPU_V5E) -> Dict[str, float]:
+    """Roofline terms of ONE compiled kernel/program — the light-weight
+    form the obs profiler (``repro.obs.profile``) feeds from jit artifacts:
+    flops / bytes from ``cost_analysis`` plus the compute and memory terms
+    against ``hw``.  No HLO parsing (single-device kernels have no
+    collectives)."""
+    ca = cost_analysis_dict(compiled)
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    return {"flops": flops, "bytes_accessed": byts,
+            "compute_term_s": flops / hw.peak_flops_bf16,
+            "memory_term_s": byts / hw.hbm_bw,
+            "arithmetic_intensity": flops / byts if byts else 0.0}
+
+
 def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
                      chips: int, model_flops: float,
                      hw: HwSpec = TPU_V5E,
