@@ -1,11 +1,18 @@
 """Shared flight-recorder wiring for the trainer benches.
 
-The headline trainer benches (bench_control, bench_fed_runtime,
-bench_privacy) record their runs through ``repro.obs`` so every bench
-invocation leaves trace + metrics + feedback JSONL under
-``benchmarks/obs/<run_id>/`` — the artifacts CI uploads next to the
-BENCH_*.json numbers.  ``obs/`` is runtime output and stays gitignored;
-only the BENCH_*.json summaries are committed as baselines.
+Every trainer bench (bench_control, bench_fed_runtime, bench_privacy,
+bench_convergence, bench_images) records its runs through ``repro.obs``
+so every bench invocation leaves trace + metrics + feedback (+ digests)
+JSONL under ``benchmarks/obs/<run_id>/`` — the artifacts CI uploads next
+to the BENCH_*.json numbers, and the inputs ``repro.obs.diff`` compares
+across invocations.  ``obs/`` is runtime output and stays gitignored;
+only the BENCH_*.json summaries are committed as baselines (gated by
+``python -m repro.obs.regress``).
+
+``FlightRecorder.flush`` is explicitly idempotent (pinned in
+tests/test_obs.py), so ``finish()`` flushing and a caller flushing again
+— e.g. ``replay_ok`` after a bench already called ``finish`` — costs one
+trace export, not two.
 """
 from __future__ import annotations
 

@@ -13,6 +13,7 @@ from typing import List, Tuple
 
 import numpy as np
 
+from benchmarks._obs import finish, obs_over
 from repro.configs.registry import get_config
 from repro.core.gan import FSLGANTrainer
 from repro.data import partition_dirichlet, synthetic_mnist
@@ -30,6 +31,7 @@ def run(fast: bool = False, counts=(1, 3, 5), epochs: int = 12,
             "shape.global_batch": 32,
             "fsl.num_clients": n_disc,
             "model.dcgan.base_filters": 8,
+            **obs_over(f"convergence_{n_disc}d"),
         })
         parts = partition_dirichlet(imgs, labels, n_disc, alpha=0.5, seed=0)
         tr = FSLGANTrainer(cfg, parts, seed=0)
@@ -37,6 +39,7 @@ def run(fast: bool = False, counts=(1, 3, 5), epochs: int = 12,
         hist = [tr.train_epoch(batches_per_client=batches_per_client)
                 for _ in range(epochs)]
         secs = time.time() - t0
+        finish(tr)
         g = [h["g_loss"] for h in hist]
         # smooth the tail (GAN losses oscillate)
         tail = float(np.mean(g[-max(2, epochs // 3):]))

@@ -12,6 +12,7 @@ from typing import List, Tuple
 
 import numpy as np
 
+from benchmarks._obs import finish, obs_over
 from repro.configs.registry import get_config
 from repro.core.gan import FSLGANTrainer
 from repro.data import partition_dirichlet, synthetic_mnist
@@ -28,7 +29,7 @@ def run(fast: bool = False, epochs: int = 8) -> List[Tuple[str, float, str]]:
     imgs, labels = synthetic_mnist(1200, seed=0)
     cfg = get_config("dcgan-mnist").override({
         "shape.global_batch": 32, "fsl.num_clients": 3,
-        "model.dcgan.base_filters": 8})
+        "model.dcgan.base_filters": 8, **obs_over("images")})
     parts = partition_dirichlet(imgs, labels, 3, alpha=0.5, seed=0)
     tr = FSLGANTrainer(cfg, parts, seed=0)
     g0 = tr.generate(64)
@@ -37,6 +38,7 @@ def run(fast: bool = False, epochs: int = 8) -> List[Tuple[str, float, str]]:
     for _ in range(epochs):
         tr.train_epoch(batches_per_client=3)
     secs = time.time() - t0
+    finish(tr)
     g1 = tr.generate(64)
     mse1, std1 = _proxies(g1, imgs)
     return [

@@ -3,6 +3,15 @@
 Prints ``name,us_per_call,derived`` CSV rows. Set BENCH_FAST=1 for a quick
 pass (fewer epochs/seeds).
 
+Every trainer bench records flight-recorder artifacts under
+``benchmarks/obs/`` (see _obs.py).  The BENCH_*.json baselines some
+benches (re)write are regression-gated: after a bench pass, run
+
+    python -m repro.obs.regress --bench-dir benchmarks --baseline-git HEAD
+
+to compare the fresh numbers against the committed baselines (CI does
+this in the bench-regress job and fails on regression).
+
   bench_time          Fig 2  epoch time vs splitting strategy
   bench_convergence   Fig 3  generator loss vs #discriminators
   bench_images        Fig 4  image-quality proxies

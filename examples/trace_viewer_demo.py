@@ -1,5 +1,7 @@
 """Flight-recorder trace walkthrough (ISSUE 6): run a federated split
-round with tracing on, export Chrome-trace JSON, and read it back.
+round with tracing on, export Chrome-trace JSON, and read it back —
+plus the watchtower layer on top (ISSUE 7): health alerts and per-round
+state digests printed alongside the spans.
 
 The engine emits nested spans on its discrete-event virtual clock for
 round -> downlink -> client execution -> batch -> split segment ->
@@ -36,6 +38,10 @@ def main():
         "obs.enabled": True,
         "obs.out_dir": OUT,
         "obs.run_id": "trace-demo",
+        # the watchtower (ISSUE 7): numeric-health monitors on every
+        # round, warn-only policy — a healthy demo prints zero alerts
+        "obs.health.enabled": True,
+        "obs.health.policy": "warn",
     })
     imgs, labels = synthetic_mnist(60 * CLIENTS, seed=0)
     parts = partition_dirichlet(imgs, labels, CLIENTS, alpha=0.5, seed=0)
@@ -70,6 +76,19 @@ def main():
                if child.cat == "boundary" else "")
         print(f"    {child.v_start:9.3f} -> {child.v_end:9.3f}  "
               f"{child.cat:>8}  {child.name}{tag}")
+
+    print("\n== watchtower: health alerts + state digests ==")
+    if tr.health_alerts:
+        for a in tr.health_alerts:
+            print(f"  round {a.round_index} [{a.severity:>5}] "
+                  f"{a.check}: {a.message}")
+    else:
+        print("  no health alerts (all monitors quiet — see "
+              "alerts.jsonl for the persisted record)")
+    for d in tr.recorder.digests:
+        print(f"  round {d.round_index} global digest {d.global_digest} "
+              f"l2={d.global_sketch[0]:.4f}"
+              f"{'  (ROLLED BACK)' if d.rolled_back else ''}")
 
     print(f"\nopen {trace_path} in chrome://tracing or ui.perfetto.dev — "
           "pid 1 is the virtual clock, one thread per client track.")

@@ -54,7 +54,9 @@ PRIVACY_MODES = ("dp_sgd", "uplink")
 CONTROL_MODES = ("frozen", "adaptive")
 CONTROLLERS = ("codec", "sigma", "split", "deadline")
 OBS_TRACE_CLOCKS = ("virtual", "wall", "both")
-OBS_SINKS = ("trace", "metrics", "feedback")
+OBS_SINKS = ("trace", "metrics", "feedback", "alerts", "digests")
+# what a fatal health verdict does to the run (obs/health.py)
+HEALTH_POLICIES = ("record", "warn", "abort", "rollback")
 
 
 def _check_name(section: str, field_name: str, value: str,
@@ -519,6 +521,43 @@ class ControlConfig:
 
 
 @dataclass
+class HealthConfig:
+    """Numeric-health monitors (obs/health.py): per-round verdicts over the
+    freshly-aggregated global state and the ``RoundFeedback`` history.
+
+    ``enabled=False`` (default) runs no monitor — nothing is scanned and
+    training is untouched.  Enabled, every round is checked for non-finite
+    global params / losses (fatal) and for heuristic drift (warn): D/G
+    loss-ratio blowup, update-norm spikes, codec-error spikes, epsilon
+    overspend and straggler-rate runaway.  Every verdict is a typed
+    :class:`~repro.obs.HealthAlert` recorded to ``alerts.jsonl`` and the
+    metric registry; what a FATAL verdict additionally does is ``policy``:
+
+      * ``record``   — log only; training continues on the poisoned state
+                       (monitors-on stays bit-exact with monitors-off);
+      * ``warn``     — log + a Python warning;
+      * ``abort``    — raise :class:`~repro.obs.HealthAbort`;
+      * ``rollback`` — restore the last healthy global params + optimizer
+                       state (one poisoned round degrades gracefully
+                       instead of killing the run).  Non-recoverable fatal
+                       alerts (epsilon overspend: the noise was already
+                       released) degrade to ``warn``.
+    """
+    enabled: bool = False
+    policy: str = "record"             # record | warn | abort | rollback
+    window: int = 4                    # trailing rounds for spike baselines
+    min_history: int = 2               # rounds before heuristic monitors arm
+    loss_ratio_max: float = 50.0       # max(d/g, g/d) above this -> warn
+    update_norm_factor: float = 10.0   # spike vs trailing median -> warn
+    codec_error_factor: float = 10.0   # spike vs trailing median -> warn
+    epsilon_budget: float = 0.0        # 0 = off; spend above this -> fatal
+    straggler_rate_max: float = 0.5    # windowed straggler rate -> warn
+
+    def __post_init__(self) -> None:
+        _check_name("obs.health", "policy", self.policy, HEALTH_POLICIES)
+
+
+@dataclass
 class ObsConfig:
     """Flight recorder (src/repro/obs/): tracing, metrics, and profiling.
 
@@ -545,12 +584,17 @@ class ObsConfig:
     out_dir: str = "obs_runs"          # per-run dir created under this root
     run_id: str = ""                   # "" => derived from config + counter
     # which sinks are live when enabled; subset of OBS_SINKS
-    sinks: Tuple[str, ...] = ("trace", "metrics", "feedback")
+    sinks: Tuple[str, ...] = ("trace", "metrics", "feedback", "alerts",
+                              "digests")
     trace_clock: str = "virtual"       # virtual | wall | both (export clocks)
     # cap batches whose segment/boundary phases are traced per client per
     # round (0 = no cap); rounds beyond the cap still get client spans
     trace_batches: int = 0
     profile_kernels: bool = False      # jit + kernel timing -> profile.json
+    # numeric-health monitors (obs/health.py).  Orthogonal to ``enabled``:
+    # health checks run whenever health.enabled is set, recorder or not —
+    # a run can watch its own numerics without persisting anything.
+    health: HealthConfig = field(default_factory=HealthConfig)
 
     def __post_init__(self) -> None:
         _check_name("obs", "trace_clock", self.trace_clock, OBS_TRACE_CLOCKS)
@@ -657,6 +701,7 @@ def _from_dict(cls: Any, d: Dict[str, Any]) -> Any:
 _NESTED = {
     ModelConfig: {"moe": MoEConfig, "mla": MLAConfig, "rwkv": RWKVConfig,
                   "rglru": RGLRUConfig, "encdec": EncDecConfig, "dcgan": DCGANConfig},
+    ObsConfig: {"health": HealthConfig},
     RunConfig: {"model": ModelConfig, "parallel": ParallelConfig,
                 "optim": OptimConfig, "fsl": FSLConfig, "fed": FedConfig,
                 "split": SplitConfig, "privacy": PrivacyConfig,

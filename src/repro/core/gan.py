@@ -47,6 +47,7 @@ that seed loop as the pinned numeric reference.
 from __future__ import annotations
 
 import functools
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -70,6 +71,9 @@ from repro.models.dcgan import (disc_apply, disc_apply_layer, disc_init,
                                 disc_layer_costs, disc_layer_names,
                                 gen_apply, gen_init)
 from repro.obs import FlightRecorder, profile_engine_kernels
+from repro.obs.digest import RoundDigest, state_digest, tree_digest
+from repro.obs.health import (SEV_FATAL, HealthAbort, HealthAlert,
+                              HealthMonitor)
 from repro.optim import make_optimizer
 from repro.privacy.defenses import (RDPAccountant, make_dp_d_step,
                                     make_uplink_stage)
@@ -190,6 +194,16 @@ class FSLGANTrainer:
         self._profiled = False
         if cfg.obs.enabled:
             self.recorder = FlightRecorder.from_config(cfg)
+        # watchtower (cfg.obs.health): read-only per-round monitors.
+        # Orthogonal to the recorder — monitors run without persistence
+        # (alerts stay on self.health_alerts), and policy='record' is
+        # bit-exact with monitors off because checks never write training
+        # state.  Rollback keeps one snapshot of the last healthy state.
+        self.monitor: Optional[HealthMonitor] = None
+        self.health_alerts: List[HealthAlert] = []
+        self._healthy_snapshot: Optional[Tuple[Any, Any, Any, Any]] = None
+        if cfg.obs.health.enabled:
+            self.monitor = HealthMonitor(cfg.obs.health)
 
     # ------------------------------------------------------------------
     def _build_steps(self):
@@ -356,6 +370,11 @@ class FSLGANTrainer:
             tr = rec.tracer
             tr.set_virtual_offset(tr.last_virtual_end())
             self.engine.set_tracer(tr, batch_cap=self.cfg.obs.trace_batches)
+        if rec.wants("digests"):
+            # stamp RoundReport.global_digest on the as-aggregated tree —
+            # pre-health-action, so digests.jsonl can show what a rolled-
+            # back round actually aggregated
+            self.engine.set_digester(tree_digest)
         self.engine.ledger.observer = self._observe_wire
         self._trace_timelines = {}
         if self.cfg.split.enabled:
@@ -501,6 +520,63 @@ class FSLGANTrainer:
             out[cid] = tuple(dcors)
         return out
 
+    # ------------------------------------------------------------------
+    # watchtower (cfg.obs.health)
+    # ------------------------------------------------------------------
+    def _snapshot_state(self) -> Tuple[Any, Any, Any, Any]:
+        """Copy of the committed training state (all D replicas + opts, G
+        params + opt) — what ``policy='rollback'`` restores.  Host RNG and
+        the engine's clock/codec residuals are deliberately NOT captured:
+        rollback restarts from healthy *parameters* with fresh data, it
+        does not rewind time."""
+        st = self.state
+        cp = functools.partial(jax.tree.map, jnp.copy)
+        return (cp(st.d_params), cp(st.d_opt),
+                cp(st.g_params), cp(st.g_opt))
+
+    def _restore_snapshot(self) -> None:
+        d_params, d_opt, g_params, g_opt = self._healthy_snapshot
+        st = self.state
+        # jax arrays are immutable, so handing the snapshot trees back is
+        # safe; copy anyway so a later snapshot refresh never aliases
+        cp = functools.partial(jax.tree.map, jnp.copy)
+        st.d_params, st.d_opt = cp(d_params), cp(d_opt)
+        st.g_params, st.g_opt = cp(g_params), cp(g_opt)
+
+    def _apply_health_policy(self, alerts: List[HealthAlert]
+                             ) -> Tuple[bool, bool, Optional[HealthAlert]]:
+        """Turn this round's alerts into the configured action.  Returns
+        ``(rolled_back, state_healthy, abort_alert)``; the caller records
+        everything first and raises ``abort_alert`` last, so an aborting
+        run still leaves a complete ``alerts.jsonl``.
+
+        ``state_healthy`` is False only when a non-finite fatal fired and
+        was NOT repaired — the caller must not refresh the rollback
+        snapshot from poisoned state."""
+        pol = self.cfg.obs.health.policy
+        fatal = [a for a in alerts if a.severity == SEV_FATAL]
+        poisoned = any(a.check in ("nonfinite_params", "nonfinite_loss")
+                       for a in fatal)
+        rolled, abort_alert = False, None
+        if pol == "record":
+            return rolled, not poisoned, abort_alert
+        to_warn = list(alerts)
+        if pol == "abort" and fatal:
+            abort_alert = fatal[0]
+            to_warn = [a for a in alerts if a is not abort_alert]
+        elif pol == "rollback" and fatal:
+            recoverable = [a for a in fatal if a.recoverable]
+            if recoverable and self._healthy_snapshot is not None:
+                self._restore_snapshot()
+                rolled, poisoned = True, False
+            # non-recoverable fatals (epsilon overspend) and a poisoned
+            # round 0 with nothing to restore degrade to warnings below
+        for a in to_warn:
+            warnings.warn(
+                f"[health] round {a.round_index} {a.check} "
+                f"({a.severity}): {a.message}", RuntimeWarning)
+        return rolled, not poisoned, abort_alert
+
     def _g_updates(self, d_avg, batches: int) -> List[float]:
         """Server G update against the averaged D (never touches real data)."""
         st = self.state
@@ -540,9 +616,24 @@ class FSLGANTrainer:
         (codec swap, sigma rebind, split regroup, deadline retune); a new
         ``RoundFeedback`` is appended AFTER it either way (``self.feedback``
         — frozen mode measures without steering).
+
+        The watchtower (``cfg.obs.health``) closes the round: monitors
+        scan the aggregated state + feedback and the configured policy
+        acts on alerts — ``record``/``warn`` observe, ``abort`` raises
+        :class:`~repro.obs.health.HealthAbort`, ``rollback`` restores the
+        last healthy state so one poisoned round degrades gracefully.
+        When the recorder's ``digests`` sink is on, the round also commits
+        a content digest of the post-action global state
+        (``digests.jsonl``).
         """
         backend = backend or self.cfg.fed.backend
         st = self.state
+        if self.monitor is not None \
+                and self.cfg.obs.health.policy == "rollback" \
+                and self._healthy_snapshot is None:
+            # round-start state = the last known-healthy state a poisoned
+            # round 0 can fall back to
+            self._healthy_snapshot = self._snapshot_state()
         if self.recorder is not None and not self._manifest_written:
             leaf_sizes, hint = self._controller_inputs(batches_per_client)
             self.recorder.set_manifest(self.cfg, leaf_sizes=leaf_sizes,
@@ -664,12 +755,46 @@ class FSLGANTrainer:
             device_loads=loads,
             boundary_dcor=probe)
         self.feedback.append(fb)
+
+        # watchtower: check the round, act per policy, THEN digest the
+        # committed state — so a rolled-back round's committed digest
+        # equals the last healthy one while RoundReport.global_digest
+        # (stamped pre-action by the engine's digester) keeps what the
+        # poisoned aggregate actually was.
+        alerts: List[HealthAlert] = []
+        rolled_back, state_healthy, abort_alert = False, True, None
+        if self.monitor is not None:
+            alerts = self.monitor.check_round(fb, params=d_avg,
+                                              update_base=global_d)
+            self.health_alerts.extend(alerts)
+            if alerts:
+                rolled_back, state_healthy, abort_alert = \
+                    self._apply_health_policy(alerts)
+        digest: Optional[RoundDigest] = None
+        if self.recorder is not None and self.recorder.wants("digests"):
+            digest = state_digest(
+                st.d_params[self._active_clients()[0]], st.d_opt,
+                st.g_params, st.g_opt, round_index=fb.round_index,
+                aggregated=rep.global_digest or "",
+                rolled_back=rolled_back)
         if self.recorder is not None:
             # feedback + the knobs in force during this round (the
             # decision the offline replay must reproduce), then re-export
             # the trace so a killed run still leaves a loadable file
             self.recorder.on_round(fb, self.knobs)
+            for a in alerts:
+                self.recorder.on_alert(a)
+            if digest is not None:
+                self.recorder.on_digest(digest)
             self.recorder.flush()
+        if self.monitor is not None \
+                and self.cfg.obs.health.policy == "rollback" \
+                and state_healthy:
+            # refresh the rollback point: the state now committed is
+            # healthy (either genuinely, or because we just restored it)
+            self._healthy_snapshot = self._snapshot_state()
+        if abort_alert is not None:
+            raise HealthAbort(abort_alert)
         return self._record(metrics)
 
     # ------------------------------------------------------------------

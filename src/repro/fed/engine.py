@@ -95,6 +95,11 @@ class RoundReport:
     # bytes, one point on the bytes-vs-error frontier the codec controller
     # walks.
     codec_error: Dict[str, float] = field(default_factory=dict)
+    # content digest of the as-aggregated global_params, stamped by the
+    # engine's digester hook (set_digester) the moment aggregation lands —
+    # BEFORE any health action touches the tree, so a rolled-back round
+    # still records what the aggregate actually was
+    global_digest: Optional[str] = None
 
     @property
     def mean_staleness(self) -> float:
@@ -139,6 +144,9 @@ class FederationEngine:
         self.tracer = None
         self._trace_batch_cap = 0
         self._timelines: Dict[str, Any] = {}
+        # optional content-digest hook (repro.obs.digest.tree_digest):
+        # stamps RoundReport.global_digest on the as-aggregated tree
+        self._digester = None
 
     # ------------------------------------------------------------------
     def set_codec(self, name: str, topk_frac: Optional[float] = None) -> None:
@@ -166,6 +174,14 @@ class FederationEngine:
         (0 = all).  ``None`` detaches."""
         self.tracer = tracer
         self._trace_batch_cap = int(batch_cap)
+
+    def set_digester(self, fn) -> None:
+        """Attach a content-digest function ``tree -> str`` (typically
+        :func:`repro.obs.digest.tree_digest`); each subsequent round stamps
+        ``RoundReport.global_digest`` with the digest of the as-aggregated
+        global tree.  Purely observational — the tree itself is untouched.
+        ``None`` detaches."""
+        self._digester = fn
 
     # ------------------------------------------------------------------
     def _codec_roundtrip(self, cid: str, base_tree, params
@@ -223,6 +239,8 @@ class FederationEngine:
         else:
             rep = self._run_async(global_tree, program, db)
         self.round_idx += 1
+        if self._digester is not None:
+            rep.global_digest = self._digester(rep.global_params)
         for cid in rep.traffic.up_bytes:
             self.ledger.record(cid, up=rep.traffic.up_bytes[cid])
         for cid in rep.traffic.down_bytes:

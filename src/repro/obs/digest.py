@@ -1,0 +1,113 @@
+"""Per-round content digests of the global training state.
+
+A digest makes a bit-exactness claim checkable *across runs from artifacts
+alone*: two runs whose ``digests.jsonl`` rows match round for round held
+byte-identical global state at every round boundary — no need to hold both
+runs in memory, or even run them on the same day.  The recorder writes one
+:class:`RoundDigest` per round; ``repro.obs.diff`` aligns and compares
+them, and localizes the first diverging round.
+
+Two comparison granularities, because the repo pins two kinds of equality:
+
+  * **hash** (:func:`tree_digest`) — a blake2b over every leaf's
+    dtype, shape and raw bytes, path-tagged so structure matters.  Equal
+    hashes == bit-identical trees.  This is the artifact form of the
+    BIT-EXACT pins (obs-on == obs-off, engine loop == seed sequential,
+    frozen == static).
+  * **sketch** (:func:`tree_sketch`) — a tiny float summary (L2 norm,
+    sum, absmax, leaf count) serialized at full precision.  Hashes can't
+    measure *distance*; the sketch is what lets loop-vs-vectorized — a
+    TOLERANCE pin since PR 3 (different XLA programs, ~1e-5 fp32 drift) —
+    be checked across runs too, and lets ``diff.py`` report the magnitude
+    of a numeric divergence instead of just its existence.
+"""
+from __future__ import annotations
+
+import hashlib
+import math
+from dataclasses import asdict, dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def tree_digest(tree: Any) -> str:
+    """Content hash of a pytree: blake2b over each leaf's path, dtype,
+    shape and raw bytes (dict keys traverse sorted, so the walk order is
+    deterministic).  Equal digests <=> bit-identical trees."""
+    h = hashlib.blake2b(digest_size=16)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(leaf)
+        h.update(jax.tree_util.keystr(path).encode())
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def tree_sketch(tree: Any) -> Tuple[float, float, float, int]:
+    """``(l2, sum, absmax, leaves)`` over the tree's inexact leaves —
+    the tolerance-comparable companion to :func:`tree_digest`."""
+    sq, total, mx, n = 0.0, 0.0, 0.0, 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        arr = np.asarray(leaf)
+        n += 1
+        if not np.issubdtype(arr.dtype, np.inexact):
+            continue
+        a64 = arr.astype(np.float64)
+        sq += float(np.sum(a64 * a64))
+        total += float(np.sum(a64))
+        if arr.size:
+            mx = max(mx, float(np.max(np.abs(a64))))
+    return (math.sqrt(sq), total, mx, n)
+
+
+@dataclass(frozen=True)
+class RoundDigest:
+    """One round's committed global state, content-addressed.
+
+    ``global_digest`` hashes the broadcast global discriminator (what every
+    replica equals after the round), ``opt_digest`` the per-client
+    optimizer states that committed, ``gan_digest`` the server generator
+    (params + opt).  ``aggregated_digest`` is the engine's as-aggregated
+    global tree BEFORE any health action — under ``policy='rollback'`` a
+    poisoned round records the NaN'd aggregate there while the committed
+    ``global_digest`` equals the restored (last healthy) state, which is
+    exactly the graceful-degradation pin."""
+    round_index: int
+    global_digest: str
+    opt_digest: str = ""
+    gan_digest: str = ""
+    aggregated_digest: str = ""
+    rolled_back: bool = False
+    # tolerance-comparable sketch of the committed global discriminator
+    global_sketch: Tuple[float, float, float, int] = (0.0, 0.0, 0.0, 0)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+
+def digest_to_dict(d: RoundDigest) -> Dict[str, Any]:
+    return asdict(d)
+
+
+def digest_from_dict(d: Dict[str, Any]) -> RoundDigest:
+    d = dict(d)
+    d["global_sketch"] = tuple(d.get("global_sketch", (0.0, 0.0, 0.0, 0)))
+    return RoundDigest(**d)
+
+
+def state_digest(d_params: Any, d_opt: Any, g_params: Any, g_opt: Any,
+                 *, round_index: int, aggregated: str = "",
+                 rolled_back: bool = False) -> RoundDigest:
+    """Digest one trainer round's committed state (the single assembly
+    point the trainer and the in-memory recompute tests share)."""
+    return RoundDigest(
+        round_index=round_index,
+        global_digest=tree_digest(d_params),
+        opt_digest=tree_digest(d_opt),
+        gan_digest=tree_digest((g_params, g_opt)),
+        aggregated_digest=aggregated,
+        rolled_back=rolled_back,
+        global_sketch=tree_sketch(d_params))

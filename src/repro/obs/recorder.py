@@ -12,7 +12,13 @@ Layout of one run directory (``<cfg.obs.out_dir>/<run_id>/``):
     round (the controller's decision sequence — what replay must
     reproduce bit-exactly);
   * ``metrics.jsonl``   — one metric-registry snapshot per round;
-  * ``trace.json``      — the Chrome-trace export, written at ``flush()``.
+  * ``trace.json``      — the Chrome-trace export, written at ``flush()``;
+  * ``alerts.jsonl``    — typed :class:`~repro.obs.health.HealthAlert`
+    records, one per tripped health check (PR 7);
+  * ``digests.jsonl``   — one :class:`~repro.obs.digest.RoundDigest` per
+    round: the committed global state, content-addressed, which is what
+    lets ``repro.obs.diff`` check bit-exactness claims across runs from
+    artifacts alone.
 
 Serialization is plain JSON via Python's repr-based float formatting,
 which round-trips every finite float bit-exactly — the foundation of the
@@ -28,6 +34,8 @@ from dataclasses import asdict, dataclass, field
 from typing import Any, Dict, List, Optional
 
 from repro.control.feedback import ControlKnobs, RoundFeedback
+from repro.obs.digest import RoundDigest, digest_from_dict, digest_to_dict
+from repro.obs.health import HealthAlert, alert_from_dict, alert_to_dict
 from repro.obs.metrics import (JsonlSink, MetricsRegistry, load_jsonl,
                                observe_round)
 from repro.obs.trace import Tracer
@@ -38,6 +46,8 @@ KNOBS = "knobs.jsonl"
 METRICS = "metrics.jsonl"
 TRACE = "trace.json"
 PROFILE = "profile.json"
+ALERTS = "alerts.jsonl"
+DIGESTS = "digests.jsonl"
 
 
 # ---------------------------------------------------------------------------
@@ -81,12 +91,13 @@ class FlightRecorder:
     """Owns the run directory, the tracer, and the metric registry.
 
     ``sinks`` selects what gets persisted (``trace`` / ``metrics`` /
-    ``feedback``); the in-memory tracer and registry always run so demos
-    can render from them even without persistence.
+    ``feedback`` / ``alerts`` / ``digests``); the in-memory tracer and
+    registry always run so demos can render from them even without
+    persistence.
     """
 
     def __init__(self, run_dir: str, *, run_id: Optional[str] = None,
-                 sinks=("trace", "metrics", "feedback"),
+                 sinks=("trace", "metrics", "feedback", "alerts", "digests"),
                  trace_clock: str = "virtual", trace_batches: int = 0):
         self.run_dir = run_dir
         self.run_id = run_id or os.path.basename(run_dir)
@@ -98,12 +109,22 @@ class FlightRecorder:
         self.registry = MetricsRegistry()
         self.feedback: List[RoundFeedback] = []
         self.knob_log: List[ControlKnobs] = []
+        self.alerts: List[HealthAlert] = []
+        self.digests: List[RoundDigest] = []
         self._fb_sink = (JsonlSink(self.path(FEEDBACK))
                          if "feedback" in self.sinks else None)
         self._knob_sink = (JsonlSink(self.path(KNOBS))
                            if "feedback" in self.sinks else None)
         self._metric_sink = (JsonlSink(self.path(METRICS))
                              if "metrics" in self.sinks else None)
+        self._alert_sink = (JsonlSink(self.path(ALERTS))
+                            if "alerts" in self.sinks else None)
+        self._digest_sink = (JsonlSink(self.path(DIGESTS))
+                             if "digests" in self.sinks else None)
+        # flush() idempotence: count of spans already exported, so a
+        # second flush with no new spans is a no-op (see flush docstring)
+        self._flushed_spans = 0
+        self._trace_path: Optional[str] = None
 
     # ------------------------------------------------------------------
     @classmethod
@@ -153,6 +174,25 @@ class FlightRecorder:
             self._metric_sink.write({"round": fb.round_index,
                                      "metrics": self.registry.snapshot()})
 
+    def on_alert(self, alert: HealthAlert) -> None:
+        """Record one tripped health check (``repro.obs.health``) to the
+        ``alerts.jsonl`` sink and the metrics registry."""
+        self.alerts.append(alert)
+        self.registry.counter(
+            "health_alerts", help="health alerts, all checks").inc()
+        self.registry.counter(
+            f"health_alerts_{alert.check}",
+            help=f"health alerts from the {alert.check} check").inc()
+        if self._alert_sink is not None:
+            self._alert_sink.write(alert_to_dict(alert))
+
+    def on_digest(self, digest: RoundDigest) -> None:
+        """Record one round's committed-state content digest
+        (``repro.obs.digest``) to the ``digests.jsonl`` sink."""
+        self.digests.append(digest)
+        if self._digest_sink is not None:
+            self._digest_sink.write(digest_to_dict(digest))
+
     def write_profile(self, profile: Dict[str, Any]) -> str:
         path = self.path(PROFILE)
         with open(path, "w") as f:
@@ -162,14 +202,25 @@ class FlightRecorder:
     # ------------------------------------------------------------------
     def flush(self) -> Optional[str]:
         """Export the Chrome trace (when the trace sink is on); returns its
-        path.  Idempotent — call after every epoch or once at the end."""
+        path.  Explicitly IDEMPOTENT: a flush with no spans recorded since
+        the previous flush re-exports nothing and returns the cached path —
+        so ``benchmarks/_obs.py:finish`` flushing and its caller flushing
+        again (the old double-flush path) costs one export, not two, and a
+        reader mid-inspecting ``trace.json`` never sees it rewritten
+        gratuitously.  Call after every epoch or once at the end."""
         if "trace" not in self.sinks or not self.tracer.spans:
-            return None
-        return self.tracer.export_chrome(self.path(TRACE), self.trace_clock)
+            return self._trace_path
+        if len(self.tracer.spans) == self._flushed_spans:
+            return self._trace_path
+        self._trace_path = self.tracer.export_chrome(
+            self.path(TRACE), self.trace_clock)
+        self._flushed_spans = len(self.tracer.spans)
+        return self._trace_path
 
     def close(self) -> None:
         self.flush()
-        for s in (self._fb_sink, self._knob_sink, self._metric_sink):
+        for s in (self._fb_sink, self._knob_sink, self._metric_sink,
+                  self._alert_sink, self._digest_sink):
             if s is not None:
                 s.close()
 
@@ -189,6 +240,8 @@ class RunRecord:
     feedback: List[RoundFeedback] = field(default_factory=list)
     knobs: List[ControlKnobs] = field(default_factory=list)
     metrics: List[Dict[str, Any]] = field(default_factory=list)
+    alerts: List[HealthAlert] = field(default_factory=list)
+    digests: List[RoundDigest] = field(default_factory=list)
 
     @property
     def num_rounds(self) -> int:
@@ -210,4 +263,10 @@ def load_run(run_dir: str) -> RunRecord:
     mpath = os.path.join(run_dir, METRICS)
     if os.path.exists(mpath):
         rec.metrics = load_jsonl(mpath)
+    apath = os.path.join(run_dir, ALERTS)
+    if os.path.exists(apath):
+        rec.alerts = [alert_from_dict(d) for d in load_jsonl(apath)]
+    dpath = os.path.join(run_dir, DIGESTS)
+    if os.path.exists(dpath):
+        rec.digests = [digest_from_dict(d) for d in load_jsonl(dpath)]
     return rec

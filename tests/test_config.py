@@ -165,3 +165,15 @@ def test_control_section_validates_names_at_construction():
     cfg = _dcgan().override({"control.mode": "adaptive",
                              "control.controllers": ["codec", "sigma"]})
     assert cfg.control.controllers == ("codec", "sigma")
+
+
+def test_health_section_validates_policy_at_construction():
+    from repro.config import HealthConfig
+    with pytest.raises(ValueError, match=r"obs\.health\.policy.*'panic'"):
+        HealthConfig(policy="panic")
+    with pytest.raises(ValueError, match=r"obs\.health\.policy"):
+        _dcgan().override({"obs.health.policy": "crash"})
+    cfg = _dcgan().override({"obs.health.enabled": True,
+                             "obs.health.policy": "rollback"})
+    assert cfg.obs.health.policy == "rollback"
+    assert cfg.to_dict()["obs"]["health"]["enabled"] is True

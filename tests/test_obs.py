@@ -315,6 +315,114 @@ def test_profiling_writes_roofline_terms_when_enabled(tmp_path, parts):
 
 
 # ---------------------------------------------------------------------------
+# flush idempotence (ISSUE 7 satellite: the _obs.py double-flush path)
+# ---------------------------------------------------------------------------
+
+def test_flush_is_idempotent(recorded_run):
+    """A second flush with no new spans must not re-export the trace —
+    finish() flushing and its caller flushing again costs one export."""
+    tr, run_dir = recorded_run
+    rec = tr.recorder
+    path = rec.flush()
+    assert path == os.path.join(run_dir, "trace.json")
+    mtime = os.path.getmtime(path)
+    with open(path) as f:
+        before = f.read()
+    os.utime(path, (mtime - 10, mtime - 10))     # make any rewrite visible
+    assert rec.flush() == path                   # cached path, no export
+    assert os.path.getmtime(path) == pytest.approx(mtime - 10)
+    with open(path) as f:
+        assert f.read() == before
+    # new spans re-arm the export
+    rec.tracer.record("probe", cat="round", track="server",
+                      v_start=0.0, v_end=0.0)
+    assert rec.flush() == path
+    assert os.path.getmtime(path) > mtime - 10
+
+
+# ---------------------------------------------------------------------------
+# digests: artifact-level bit-exactness pins (ISSUE 7 satellite)
+# ---------------------------------------------------------------------------
+
+def _state_digests(tr):
+    """Recompute the committed-state digest sequence a recorder would have
+    written for this trainer's CURRENT state (single round boundary)."""
+    from repro.obs import state_digest
+    st = tr.state
+    cid0 = tr._active_clients()[0]
+    return state_digest(st.d_params[cid0], st.d_opt, st.g_params,
+                        st.g_opt, round_index=st.step - 1)
+
+
+def test_recorded_run_writes_digests_and_alert_sink(recorded_run):
+    _, run_dir = recorded_run
+    rec = load_run(run_dir)
+    assert len(rec.digests) == 3
+    assert [d.round_index for d in rec.digests] == [0, 1, 2]
+    for d in rec.digests:
+        assert len(d.global_digest) == 32 and len(d.opt_digest) == 32
+        assert not d.rolled_back
+        assert d.global_sketch[0] > 0            # L2 of a real tree
+    # the committed digest equals the engine's as-aggregated digest in a
+    # healthy run (no health action ever touched the tree)
+    for d in rec.digests:
+        assert d.aggregated_digest == d.global_digest
+
+
+def test_digests_obs_on_matches_obs_off_state(tmp_path, parts):
+    """obs-on == obs-off, at the artifact level: the digests a recorded
+    run persists equal digests recomputed from an identical run that
+    never recorded anything."""
+    cfg_on = _cfg(**{"obs.enabled": True, "obs.out_dir": str(tmp_path),
+                     "obs.run_id": "don"})
+    tr_on = FSLGANTrainer(cfg_on, parts, seed=0)
+    tr_off = FSLGANTrainer(_cfg(), parts, seed=0)
+    off_digests = []
+    for _ in range(2):
+        tr_on.train_epoch(batches_per_client=2)
+        tr_off.train_epoch(batches_per_client=2)
+        off_digests.append(_state_digests(tr_off))
+    rec = load_run(os.path.join(str(tmp_path), "don"))
+    assert [d.global_digest for d in rec.digests] \
+        == [d.global_digest for d in off_digests]
+    assert [d.opt_digest for d in rec.digests] \
+        == [d.opt_digest for d in off_digests]
+    assert [d.gan_digest for d in rec.digests] \
+        == [d.gan_digest for d in off_digests]
+
+
+def test_digests_loop_vs_vectorized_backend(tmp_path, parts):
+    """Cross-backend digest stability: loop and vectorized dispatch are a
+    TOLERANCE pin (different XLA programs, ~1e-5 fp32 drift — same bound
+    as the in-memory pin in test_fed_runtime), so their digest *sketches*
+    must agree tightly while diff.py classifies the digest mismatch as
+    numeric divergence at equal knobs."""
+    import numpy as np
+    from repro.obs import diff_runs
+    dirs = {}
+    for backend in ("loop", "vectorized"):
+        cfg = _cfg(**{"fed.backend": backend, "obs.enabled": True,
+                      "obs.out_dir": str(tmp_path),
+                      "obs.run_id": f"b_{backend}"})
+        tr = FSLGANTrainer(cfg, parts, seed=0)
+        for _ in range(2):
+            tr.train_epoch(batches_per_client=2)
+        dirs[backend] = os.path.join(str(tmp_path), f"b_{backend}")
+    ra = load_run(dirs["loop"])
+    rb = load_run(dirs["vectorized"])
+    for da, db in zip(ra.digests, rb.digests):
+        np.testing.assert_allclose(da.global_sketch[:3], db.global_sketch[:3],
+                                   rtol=1e-4, atol=1e-5)
+        assert da.global_sketch[3] == db.global_sketch[3]   # leaf counts
+    d = diff_runs(dirs["loop"], dirs["vectorized"])
+    fd = d.first_divergence
+    assert fd is not None and fd.kind == "numeric"
+    assert fd.field.startswith("digest.")
+    # the knobs never diverged — no controller-kind entries at all
+    assert not any(e.kind == "controller" for e in d.entries)
+
+
+# ---------------------------------------------------------------------------
 # config surface
 # ---------------------------------------------------------------------------
 

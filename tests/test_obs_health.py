@@ -1,0 +1,413 @@
+"""Watchtower pins (ISSUE 7): health monitors + policy actions, cross-run
+divergence diffing, and the bench regression gate.
+
+The acceptance pins live here:
+
+  * an injected NaN round under ``policy="rollback"`` restores the last
+    healthy digest and training CONTINUES, with the alert in
+    ``alerts.jsonl``; under ``abort`` the trainer raises; under ``record``
+    the trajectory stays bit-exact with monitors off;
+  * ``repro.obs.diff`` localizes a seeded one-knob divergence to the
+    exact round and field, and classifies a seeded numeric perturbation
+    as digest-divergence-at-equal-knobs;
+  * ``repro.obs.regress`` passes on the unmodified tree and fails when a
+    baseline metric is synthetically degraded.
+"""
+import copy
+import json
+import math
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.control.feedback import RoundFeedback
+from repro.core.gan import FSLGANTrainer
+from repro.data import partition_dirichlet, synthetic_mnist
+from repro.obs import (HealthAbort, HealthAlert, HealthMonitor, diff_runs,
+                       load_run)
+from repro.obs.health import SEV_FATAL, SEV_WARN, worst
+
+BENCH_DIR = os.path.join(os.path.dirname(__file__), os.pardir, "benchmarks")
+
+
+def _cfg(**over):
+    return get_config("dcgan-mnist").override({
+        "shape.global_batch": 8,
+        "fsl.num_clients": 2,
+        "model.dcgan.base_filters": 8,
+        **over})
+
+
+def _health_over(out, run_id, policy):
+    return {"obs.enabled": True, "obs.out_dir": out, "obs.run_id": run_id,
+            "obs.health.enabled": True, "obs.health.policy": policy}
+
+
+def _poison(tr):
+    """NaN the generator: the next round's fakes, D training, and the
+    aggregated global D all go non-finite."""
+    tr.state.g_params = jax.tree.map(lambda x: x * np.float32("nan"),
+                                     tr.state.g_params)
+
+
+@pytest.fixture(scope="module")
+def parts():
+    imgs, labels = synthetic_mnist(120, seed=0)
+    return partition_dirichlet(imgs, labels, 2, alpha=0.5, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# monitor unit behavior (no training loop)
+# ---------------------------------------------------------------------------
+
+def _mon(**over):
+    from repro.config import HealthConfig
+    return HealthMonitor(HealthConfig(enabled=True, **over))
+
+
+def _fb(r, **over):
+    base = dict(round_index=r, backend="loop", codec="none", sigma=0.0,
+                deadline_s=0.0, split_strategy="sorted_multi",
+                up_bytes=1000, down_bytes=1000, lan_bytes=0,
+                codec_error=float("nan"), uplink_bps=1e6,
+                round_time_s=1.0, clock_s=float(r + 1),
+                num_clients=2, stragglers=0, d_loss=0.5, g_loss=0.5)
+    base.update(over)
+    return RoundFeedback(**base)
+
+
+def test_monitor_flags_nonfinite_params():
+    mon = _mon()
+    bad = {"w": np.array([1.0, np.nan, np.inf], np.float32)}
+    alerts = mon.check_round(_fb(0), params=bad)
+    a = worst(alerts)
+    assert a is not None and a.check == "nonfinite_params"
+    assert a.severity == SEV_FATAL and a.recoverable
+    assert a.value == 2.0                        # one NaN + one Inf
+
+
+def test_monitor_nan_loss_is_unmeasured_until_seen_finite():
+    mon = _mon()
+    # round 0: both losses NaN = never measured -> silent
+    assert mon.check_round(_fb(0, d_loss=float("nan"),
+                               g_loss=float("nan"))) == []
+    # round 1: d_loss goes live
+    assert mon.check_round(_fb(1, g_loss=float("nan"))) == []
+    # round 2: a live signal going NaN IS an alert; g_loss stays silent
+    alerts = mon.check_round(_fb(2, d_loss=float("nan"),
+                                 g_loss=float("nan")))
+    assert [a.check for a in alerts] == ["nonfinite_loss"]
+    assert "d_loss" in alerts[0].message
+    # Inf always flags, even on a fresh monitor
+    fresh = _mon()
+    alerts = fresh.check_round(_fb(0, d_loss=float("inf")))
+    assert any(a.check == "nonfinite_loss" for a in alerts)
+
+
+def test_monitor_loss_ratio_window():
+    mon = _mon(loss_ratio_max=50.0)
+    assert mon.check_round(_fb(0, d_loss=2.0, g_loss=1.0)) == []
+    for d, g in ((100.0, 1.0), (1.0, 100.0)):    # both directions trip
+        alerts = _mon(loss_ratio_max=50.0).check_round(
+            _fb(0, d_loss=d, g_loss=g))
+        assert [a.check for a in alerts] == ["loss_ratio"]
+        assert alerts[0].severity == SEV_WARN
+        assert alerts[0].value == pytest.approx(100.0)
+
+
+def test_monitor_update_norm_spike_needs_history():
+    mon = _mon(window=4, min_history=2, update_norm_factor=10.0)
+    base = {"w": np.zeros(4, np.float32)}
+    small = {"w": np.full(4, 0.01, np.float32)}
+    big = {"w": np.full(4, 5.0, np.float32)}
+    for r in range(3):                           # build the window quietly
+        assert mon.check_round(_fb(r), params=small, update_base=base) == []
+    alerts = mon.check_round(_fb(3), params=big, update_base=base)
+    assert [a.check for a in alerts] == ["update_norm"]
+    assert alerts[0].value > alerts[0].threshold
+
+
+def test_monitor_codec_error_spike():
+    mon = _mon(window=4, min_history=2, codec_error_factor=10.0)
+    assert mon.check_round(_fb(0, codec_error=1.0)) == []
+    assert mon.check_round(_fb(1, codec_error=1.0)) == []
+    alerts = mon.check_round(_fb(2, codec_error=50.0))
+    assert [a.check for a in alerts] == ["codec_error_spike"]
+
+
+def test_monitor_epsilon_overspend_is_fatal_nonrecoverable():
+    mon = _mon(epsilon_budget=1.0)
+    assert mon.check_round(_fb(0, dp_epsilon=0.5)) == []
+    alerts = mon.check_round(_fb(1, dp_epsilon=2.0))
+    assert [a.check for a in alerts] == ["epsilon_overspend"]
+    assert alerts[0].severity == SEV_FATAL and not alerts[0].recoverable
+    # budget 0 (default) disables the check entirely
+    assert _mon().check_round(_fb(0, dp_epsilon=2.0)) == []
+
+
+def test_monitor_straggler_runaway_needs_full_hot_window():
+    mon = _mon(window=3, min_history=2, straggler_rate_max=0.5)
+    hot = dict(num_clients=2, stragglers=2)
+    assert mon.check_round(_fb(0, **hot)) == []
+    assert mon.check_round(_fb(1, **hot)) == []
+    alerts = mon.check_round(_fb(2, **hot))
+    assert [a.check for a in alerts] == ["straggler_runaway"]
+    # one cool round resets the streak
+    assert mon.check_round(_fb(3, num_clients=2, stragglers=0)) == []
+    assert mon.check_round(_fb(4, **hot)) == []
+
+
+def test_alert_roundtrips_through_dicts():
+    from repro.obs import alert_from_dict, alert_to_dict
+    a = HealthAlert(3, "nonfinite_params", SEV_FATAL, 7.0, 0.0, "boom",
+                    recoverable=False)
+    assert alert_from_dict(json.loads(json.dumps(alert_to_dict(a)))) == a
+
+
+# ---------------------------------------------------------------------------
+# injected-fault policy pins (the trainer acting on alerts)
+# ---------------------------------------------------------------------------
+
+def test_rollback_restores_last_healthy_digest(tmp_path, parts):
+    """THE graceful-degradation pin: poison round 1, train on — the
+    committed state snaps back to round 0's digest and round 2 recovers."""
+    cfg = _cfg(**_health_over(str(tmp_path), "rb", "rollback"))
+    tr = FSLGANTrainer(cfg, parts, seed=0)
+    m0 = tr.train_epoch(batches_per_client=2)
+    assert math.isfinite(m0["d_loss"])
+    _poison(tr)
+    m1 = tr.train_epoch(batches_per_client=2)     # detected + rolled back
+    assert not math.isfinite(m1["d_loss"])        # the round itself was lost
+    m2 = tr.train_epoch(batches_per_client=2)     # ...but training recovered
+    assert math.isfinite(m2["d_loss"])
+
+    rec = load_run(os.path.join(str(tmp_path), "rb"))
+    d0, d1, d2 = rec.digests
+    assert d1.rolled_back and not d0.rolled_back and not d2.rolled_back
+    # committed state == last healthy state, while the engine-stamped
+    # as-aggregated digest keeps what the poisoned round actually produced
+    assert d1.global_digest == d0.global_digest
+    assert d1.opt_digest == d0.opt_digest
+    assert d1.gan_digest == d0.gan_digest
+    assert d1.aggregated_digest not in ("", d1.global_digest)
+    # round 2 moved on from the restored state
+    assert d2.global_digest != d1.global_digest
+    # the alert trail persisted to alerts.jsonl
+    assert any(a.check == "nonfinite_params" and a.round_index == 1
+               and a.severity == SEV_FATAL and a.recoverable
+               for a in rec.alerts)
+
+
+def test_abort_policy_raises_after_recording(tmp_path, parts):
+    cfg = _cfg(**_health_over(str(tmp_path), "ab", "abort"))
+    tr = FSLGANTrainer(cfg, parts, seed=0)
+    tr.train_epoch(batches_per_client=2)
+    _poison(tr)
+    with pytest.raises(HealthAbort) as exc:
+        tr.train_epoch(batches_per_client=2)
+    assert exc.value.alert.severity == SEV_FATAL
+    assert exc.value.alert.round_index == 1
+    # the aborting round still left a complete artifact trail
+    rec = load_run(os.path.join(str(tmp_path), "ab"))
+    assert rec.num_rounds == 2
+    assert len(rec.digests) == 2 and not rec.digests[1].rolled_back
+    assert any(a.severity == SEV_FATAL and a.round_index == 1
+               for a in rec.alerts)
+
+
+def test_warn_policy_warns_and_trains_on(tmp_path, parts):
+    cfg = _cfg(**_health_over(str(tmp_path), "wn", "warn"))
+    tr = FSLGANTrainer(cfg, parts, seed=0)
+    tr.train_epoch(batches_per_client=2)
+    _poison(tr)
+    with pytest.warns(RuntimeWarning, match="nonfinite"):
+        tr.train_epoch(batches_per_client=2)
+    rec = load_run(os.path.join(str(tmp_path), "wn"))
+    # no rollback: the poisoned state really committed
+    assert not rec.digests[1].rolled_back
+    assert rec.digests[1].global_digest != rec.digests[0].global_digest
+
+
+def test_record_policy_is_bit_exact_with_monitors_off(parts):
+    """Monitors only read — the record policy's trajectory is identical
+    to a run that never armed them."""
+    tr_on = FSLGANTrainer(_cfg(**{"obs.health.enabled": True,
+                                  "obs.health.policy": "record"}),
+                          parts, seed=0)
+    tr_off = FSLGANTrainer(_cfg(), parts, seed=0)
+    for _ in range(2):
+        m_on = tr_on.train_epoch(batches_per_client=2)
+        m_off = tr_off.train_epoch(batches_per_client=2)
+        assert (m_on["d_loss"], m_on["g_loss"], m_on["round_time_s"]) \
+            == (m_off["d_loss"], m_off["g_loss"], m_off["round_time_s"])
+    assert tr_on.health_alerts == []             # healthy run stays quiet
+
+
+def test_record_policy_logs_without_acting(parts):
+    tr = FSLGANTrainer(_cfg(**{"obs.health.enabled": True,
+                               "obs.health.policy": "record"}),
+                       parts, seed=0)
+    tr.train_epoch(batches_per_client=2)
+    _poison(tr)
+    tr.train_epoch(batches_per_client=2)         # no raise, no rollback
+    assert any(a.severity == SEV_FATAL for a in tr.health_alerts)
+
+
+# ---------------------------------------------------------------------------
+# diff: cross-run divergence localization pins
+# ---------------------------------------------------------------------------
+
+def _run(out, run_id, parts, n_rounds=2, perturb_after=None, **over):
+    cfg = _cfg(**{"obs.enabled": True, "obs.out_dir": out,
+                  "obs.run_id": run_id, **over})
+    tr = FSLGANTrainer(cfg, parts, seed=0)
+    for r in range(n_rounds):
+        tr.train_epoch(batches_per_client=2)
+        if perturb_after == r:
+            tr.state.d_params = jax.tree.map(
+                lambda x: x * np.float32(1.0 + 1e-3), tr.state.d_params)
+    return os.path.join(out, run_id)
+
+
+def test_diff_identical_runs(tmp_path, parts):
+    da = _run(str(tmp_path), "a", parts)
+    db = _run(str(tmp_path), "b", parts)
+    d = diff_runs(da, db)
+    assert d.identical and d.kind is None and d.first_divergence is None
+    assert d.config_diffs == []                  # obs.* excluded by design
+    assert d.replay_ok_a and d.replay_ok_b
+    assert "identical" in d.report()
+
+
+def test_diff_localizes_one_knob_divergence(tmp_path, parts):
+    """Seeded single-knob difference -> exact round + field, controller
+    kind, with the config diff named."""
+    da = _run(str(tmp_path), "ka", parts)
+    db = _run(str(tmp_path), "kb", parts, **{"fed.codec": "fp16"})
+    d = diff_runs(da, db)
+    fd = d.first_divergence
+    assert fd is not None
+    assert (fd.round_index, fd.field, fd.kind) == (0, "knobs.codec",
+                                                   "controller")
+    assert (fd.a, fd.b) == ("none", "fp16")
+    assert ("fed.codec", "none", "fp16") in d.config_diffs
+    # steering explains everything downstream: no entry is ever blamed
+    # on numerics once the knobs split
+    assert all(e.kind == "controller" for e in d.entries)
+    # each side is still a pure function of its own history
+    assert d.replay_ok_a and d.replay_ok_b
+
+
+def test_diff_classifies_numeric_divergence_at_equal_knobs(tmp_path, parts):
+    """Seeded in-memory perturbation between rounds -> digest divergence
+    at EQUAL knobs, classified numeric at the exact round."""
+    da = _run(str(tmp_path), "na", parts)
+    db = _run(str(tmp_path), "nb", parts, perturb_after=0)
+    d = diff_runs(da, db)
+    fd = d.first_divergence
+    assert fd is not None and fd.kind == "numeric"
+    assert fd.round_index == 1                   # round 0 was identical
+    assert fd.field.startswith("digest.")
+    assert d.config_diffs == []
+    assert not any(e.kind == "controller" for e in d.entries)
+    # feedback fallout of the perturbed state is measurement, not cause
+    assert {e.kind for e in d.entries} <= {"numeric", "measurement"}
+
+
+def test_diff_cli_exit_codes(tmp_path, parts):
+    from repro.obs.diff import main
+    da = _run(str(tmp_path), "ca", parts, n_rounds=1)
+    db = _run(str(tmp_path), "cb", parts, n_rounds=1,
+              **{"fed.codec": "fp16"})
+    assert main([da, da]) == 0
+    assert main([da, db]) == 1
+
+
+# ---------------------------------------------------------------------------
+# regress: bench baseline gating pins
+# ---------------------------------------------------------------------------
+
+def _control_bench():
+    with open(os.path.join(BENCH_DIR, "BENCH_control.json")) as f:
+        return json.load(f)
+
+
+def test_regress_rule_table_passes_on_unmodified_tree():
+    from repro.obs.regress import RULES, run_gate
+    checks = run_gate(BENCH_DIR)                 # self-compare
+    assert checks and not any(c.failed for c in checks)
+    assert {c.file for c in checks} == set(RULES)
+
+
+def test_regress_fails_on_degraded_value_metric():
+    from repro.obs.regress import RULES, evaluate, markdown_report
+    base = _control_bench()
+    fresh = copy.deepcopy(base)
+    fresh["codec"]["adaptive"]["up_bytes"] *= 10     # 10x the wire bytes
+    checks = evaluate(fresh, base, RULES["BENCH_control.json"],
+                      file="BENCH_control.json")
+    bad = [c for c in checks if c.failed]
+    assert [c.path for c in bad] == ["codec/adaptive/up_bytes"]
+    assert "REGRESSION" in markdown_report(checks)
+    assert "**FAIL**" in markdown_report(checks)
+
+
+def test_regress_fails_on_flipped_acceptance_gate():
+    from repro.obs.regress import RULES, evaluate
+    base = _control_bench()
+    fresh = copy.deepcopy(base)
+    fresh["codec"]["frontier_ok"] = False
+    checks = evaluate(fresh, base, RULES["BENCH_control.json"],
+                      file="BENCH_control.json")
+    assert any(c.failed and c.path == "codec/frontier_ok" for c in checks)
+
+
+def test_regress_config_gate_skips_values_keeps_booleans():
+    """Different bench shape -> the numbers are incomparable (skip), but
+    acceptance booleans must hold at any size (still fail)."""
+    from repro.obs.regress import RULES, evaluate
+    base = _control_bench()
+    fresh = copy.deepcopy(base)
+    fresh["config"] = {"different": "shape"}
+    fresh["codec"]["adaptive"]["up_bytes"] *= 10     # would fail...
+    fresh["codec"]["frontier_ok"] = False
+    checks = evaluate(fresh, base, RULES["BENCH_control.json"],
+                      file="BENCH_control.json")
+    by_path = {c.path: c for c in checks}
+    assert by_path["codec/adaptive/up_bytes"].status == "skip"
+    assert by_path["codec/frontier_ok"].failed
+
+
+def test_regress_missing_boolean_gate_is_a_regression():
+    from repro.obs.regress import RULES, evaluate
+    base = _control_bench()
+    fresh = copy.deepcopy(base)
+    del fresh["codec"]["frontier_ok"]            # deleting the gate fails it
+    checks = evaluate(fresh, base, RULES["BENCH_control.json"],
+                      file="BENCH_control.json")
+    gate = next(c for c in checks if c.path == "codec/frontier_ok")
+    assert gate.failed and "absent" in gate.note
+
+
+def test_regress_noisy_tolerance_is_overridable():
+    from repro.obs.regress import Rule, evaluate
+    base = {"dispatch": {"loop_us": 100.0}}
+    fresh = {"dispatch": {"loop_us": 250.0}}     # 2.5x slower
+    rules = (Rule("dispatch/*_us", "lower", 1.0, noisy=True),)
+    assert any(c.failed for c in evaluate(fresh, base, rules))
+    assert not any(c.failed for c in evaluate(fresh, base, rules,
+                                              noisy_rel_tol=3.0))
+
+
+def test_regress_cli(tmp_path):
+    from repro.obs.regress import main
+    assert main(["--bench-dir", str(tmp_path)]) == 2     # nothing to gate
+    report = str(tmp_path / "report.md")
+    assert main(["--bench-dir", BENCH_DIR, "--report", report]) == 0
+    with open(report) as f:
+        text = f.read()
+    assert text.startswith("# Bench regression report")
+    assert "**PASS**" in text
