@@ -10,6 +10,10 @@ Three questions the runtime makes measurable:
      per PS-FedGAN's accounting.
   3. **Scheduling**: sync barrier vs FedAsync vs FedBuff virtual wall-clock
      per round, with and without a straggler deadline.
+  4. **Pipeline**: micro-batched split execution — virtual round time vs
+     the number of micro-batches K (the 1F1B overlap schedule from
+     core/pipeline feeding plan_epoch_time), plus the fused boundary
+     stage (kernels/boundary_fuse) against the unfused composition.
 
 Besides CSV rows, writes machine-readable ``BENCH_fed_runtime.json`` next
 to this file (gitignored; parity with ``BENCH_privacy.json``) so the
@@ -82,9 +86,24 @@ def run(fast: bool = False) -> List[Tuple[str, float, str]]:
     rows.append(("fed_round_engine[vectorized]", us_vec,
                  f"speedup={us_loop / max(us_vec, 1e-9):.2f}x vs loop "
                  "(one jitted vmap program)"))
+    # backend="auto": one-shot timed probe on the first round picks the
+    # faster dispatch for this host (fixes the vectorized-on-CPU trap)
+    tr_auto = FSLGANTrainer(_cfg(clients), parts, seed=0)
+    us_auto = _time_epochs(
+        lambda: tr_auto.train_epoch(batches_per_client=batches,
+                                    backend="auto"), reps)
+    auto_fb = next(fb for fb in tr_auto.feedback if fb.backend_probe_us)
+    rows.append(("fed_round_engine[auto]", us_auto,
+                 f"chose {auto_fb.backend} (probe: "
+                 + " ".join(f"{k}={v:.0f}us"
+                            for k, v in sorted(
+                                auto_fb.backend_probe_us.items())) + ")"))
     results["dispatch"] = {
         "sequential_us": us_seq, "engine_loop_us": us_loop,
         "engine_vectorized_us": us_vec,
+        "engine_auto_us": us_auto,
+        "auto_choice": auto_fb.backend,
+        "auto_probe_us": dict(auto_fb.backend_probe_us),
         "vectorized_speedup_vs_loop": us_loop / max(us_vec, 1e-9),
         "vectorized_speedup_vs_sequential": us_seq / max(us_vec, 1e-9)}
 
@@ -144,6 +163,79 @@ def run(fast: bool = False) -> List[Tuple[str, float, str]]:
             else m["d_loss"],
             "trace_spans": len(tr.recorder.tracer.spans)}
         finish(tr)
+
+    # 4. pipeline: micro-batched split execution vs K ----------------------
+    results["pipeline"] = {}
+    pipe_metrics = {}
+    for k in (1, 2, 4):
+        tr = FSLGANTrainer(_cfg(clients, **{
+            "split.enabled": True,
+            "split.pipeline_microbatches": k}), parts, seed=0)
+        t0 = time.time()
+        m = tr.train_epoch(batches_per_client=batches)
+        us = (time.time() - t0) * 1e6
+        fb = tr.feedback[-1]
+        rows.append((f"fed_pipeline[k{k}]", us,
+                     f"round_s={m['round_time_s']:.1f} "
+                     f"overlap_speedup={fb.pipeline_speedup:.2f} "
+                     f"d_loss={m['d_loss']:.3f}"))
+        pipe_metrics[k] = m
+        results["pipeline"][f"k{k}"] = {
+            "us_per_epoch": us, "round_time_s": m["round_time_s"],
+            "pipeline_speedup": fb.pipeline_speedup,
+            "d_loss": None if not np.isfinite(m["d_loss"])
+            else m["d_loss"]}
+    r1 = pipe_metrics[1]["round_time_s"]
+    r4 = pipe_metrics[4]["round_time_s"]
+    d1, d4 = pipe_metrics[1]["d_loss"], pipe_metrics[4]["d_loss"]
+    results["pipeline"]["round_speedup_k4_vs_k1"] = r1 / max(r4, 1e-9)
+    # acceptance gates: overlap must shorten the virtual round, and the
+    # micro-batched loss must track the monolithic one closely
+    results["pipeline"]["speedup_ok"] = bool(r4 < r1)
+    results["pipeline"]["numerics_ok"] = bool(
+        abs(d4 - d1) <= 1e-2 * max(abs(d1), 1e-9))
+
+    # fused boundary stage vs the unfused two-stage composition
+    import jax
+    import jax.numpy as jnp
+    from repro.core.split import ComposedBoundaryStage, FusedBoundaryStage, \
+        make_boundary_stage
+    from repro.roofline.analysis import fused_boundary_terms
+    bsz, feat = 16, 6272          # one conv0 crossing of the smoke model
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (bsz, feat), jnp.float32)
+    scfg = _cfg(clients, **{"split.boundary_stage": "int8+dp",
+                            "split.stage_clip": 1.0,
+                            "split.stage_sigma": 0.5}).split
+    fused = make_boundary_stage(scfg, "int8+dp")
+    composed = ComposedBoundaryStage(
+        [make_boundary_stage(scfg, "int8"), make_boundary_stage(scfg, "dp")])
+    assert isinstance(fused, FusedBoundaryStage)
+
+    def _stage_us(stage):
+        def step():
+            out = stage.apply(x, key)
+            jax.block_until_ready(out)
+            return out
+        out = step()
+        t0 = time.time()
+        for _ in range(reps):
+            step()
+        return out, (time.time() - t0) * 1e6 / reps
+
+    out_c, us_c = _stage_us(composed)
+    out_f, us_f = _stage_us(fused)
+    err = float(jnp.max(jnp.abs(out_c - out_f)))
+    rows.append(("fed_boundary_fuse[int8+dp]", us_f,
+                 f"composed={us_c:.0f}us speedup={us_c / max(us_f, 1e-9):.2f}x "
+                 f"max_err={err:.2e}"))
+    results["pipeline"]["boundary_fuse"] = {
+        "composed_us": us_c, "fused_us": us_f,
+        "fused_speedup": us_c / max(us_f, 1e-9),
+        "max_abs_err": err,
+        # fma re-association under jit puts the two paths ~1 ulp apart
+        "fused_matches": bool(err <= 1e-5),
+        "roofline": fused_boundary_terms(bsz, feat, codec="int8")}
 
     with open(JSON_PATH, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.boundary_fuse.ops import fused_boundary_flat
+from repro.kernels.boundary_fuse.ref import fused_boundary_ref
 from repro.kernels.fedavg.ops import fedavg_flat
 from repro.kernels.fedavg.ref import fedavg_ref
 from repro.kernels.flash_attention.ops import flash_attention
@@ -67,5 +69,19 @@ def run(fast: bool = False) -> List[Tuple[str, float, str]]:
     out_f, us = _time(fedavg_flat, st, wts, interpret=True)
     err = float(jnp.max(jnp.abs(out_f - fedavg_ref(st, wts / wts.sum()))))
     rows.append(("kernel_fedavg[c5_n65536]", us,
+                 f"max_err_vs_oracle={err:.2e}"))
+
+    # fused boundary stage (codec qdq + per-example clip + noise)
+    bb, nn = 8, 4096
+    x = jax.random.normal(jax.random.fold_in(key, 7), (bb, nn), jnp.float32)
+    noise = jax.random.normal(jax.random.fold_in(key, 8), (bb, nn),
+                              jnp.float32)
+    clip = jnp.asarray(1.0, jnp.float32)
+    scale = jnp.asarray(0.5, jnp.float32)
+    out_b, us = _time(fused_boundary_flat, x, clip, scale, noise,
+                      codec="int8", use_kernel=True, interpret=True)
+    ref_b = fused_boundary_ref(x, clip, scale, noise, codec="int8")
+    err = float(jnp.max(jnp.abs(out_b - ref_b)))
+    rows.append((f"kernel_boundary_fuse[int8_b{bb}_n{nn}]", us,
                  f"max_err_vs_oracle={err:.2e}"))
     return rows

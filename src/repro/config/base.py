@@ -45,11 +45,18 @@ ATTN_NONE = "none"            # attention-free (e.g. RWKV)
 # ---------------------------------------------------------------------------
 
 CODECS = ("none", "fp16", "int8", "topk")
-BOUNDARY_STAGES = ("identity", "fp16", "int8", "topk", "dp")
+# "+"-composed names chain stages in order (codec round-trip, then
+# clip+noise); core/split.make_boundary_stage fuses the fusable ones
+# (fp16+dp, int8+dp) into the single-traversal kernels/boundary_fuse op.
+BOUNDARY_STAGES = ("identity", "fp16", "int8", "topk", "dp",
+                   "fp16+dp", "int8+dp", "topk+dp")
 SELECTION_STRATEGIES = ("random_single", "random_multi", "sorted_single",
                         "sorted_multi")
 FED_MODES = ("sync", "fedasync", "fedbuff")
-FED_BACKENDS = ("loop", "vectorized")
+# "auto" probes loop vs vectorized dispatch once on the first round and
+# pins the faster one (core/gan.FSLGANTrainer); fed/programs.BACKENDS
+# stays ("loop", "vectorized") — the executor never sees "auto".
+FED_BACKENDS = ("loop", "vectorized", "auto")
 PRIVACY_MODES = ("dp_sgd", "uplink")
 CONTROL_MODES = ("frozen", "adaptive")
 CONTROLLERS = ("codec", "sigma", "split", "deadline")
@@ -422,8 +429,20 @@ class SplitConfig:
     stage_sigma: float = 0.0           # dp stage: noise multiplier
     seed: int = 0                      # stage noise stream (dp stage)
     # LAN serialization rate for measured-bytes pricing (latency comes
-    # from cfg.fsl.lan_latency_s, the paper's 50 ms)
+    # from lan_latency_s below, falling back to cfg.fsl.lan_latency_s)
     lan_bandwidth_bps: float = 100e6
+    # per-hop LAN latency override for the split chain; 0.0 inherits
+    # cfg.fsl.lan_latency_s (the paper's 50 ms) end-to-end
+    lan_latency_s: float = 0.0
+    # 1F1B pipelined local step: micro-batches per batch (1 = sequential
+    # executor, bit-exact with the pre-pipeline step; K > 1 overlaps
+    # device segments, clamped per step to a divisor of the batch size)
+    pipeline_microbatches: int = 1
+    # fuse composed codec+dp stages into kernels/boundary_fuse (the
+    # unfused ComposedBoundaryStage remains the pinned reference)
+    fuse_boundary: bool = True
+    use_kernel: bool = False           # Pallas path for the fused stage
+    kernel_interpret: bool = False     # interpret mode (CPU) for it
 
     def __post_init__(self) -> None:
         _check_name("split", "boundary_stage", self.boundary_stage,
@@ -431,6 +450,14 @@ class SplitConfig:
         if self.strategy:
             _check_name("split", "strategy", self.strategy,
                         SELECTION_STRATEGIES)
+        if self.pipeline_microbatches < 1:
+            raise ValueError(
+                f"split.pipeline_microbatches must be >= 1, got "
+                f"{self.pipeline_microbatches}")
+        if self.lan_latency_s < 0.0:
+            raise ValueError(
+                f"split.lan_latency_s must be >= 0.0, got "
+                f"{self.lan_latency_s}")
 
 
 @dataclass

@@ -256,6 +256,15 @@ class DeadlineController:
     the bulk of the distribution land, tail stragglers are cut.  Needs
     ``warmup`` rounds of feedback before the first decision; small
     (<5% relative) retunes are skipped.
+
+    Pipelining-aware: when the pipelined split executor changes K between
+    rounds, historical finish times were measured under a different
+    overlap schedule.  Each round's times are rescaled by
+    ``fb.pipeline_speedup / current.pipeline_speedup`` — the analytic
+    sequential/pipelined ratio the schedule emitted (finish time scales
+    inversely with it) — so the quantile is taken over a distribution
+    expressed in *current-schedule* seconds.  With K fixed the ratio is
+    1 everywhere and the controller is bit-identical to before.
     """
     name = "deadline"
 
@@ -270,8 +279,11 @@ class DeadlineController:
                  knobs: ControlKnobs) -> ControlKnobs:
         if len(history) < self.warmup:
             return knobs
-        times = sorted(t for fb in history[-self.window:]
-                       for t in fb.client_finish_s.values())
+        cur = getattr(history[-1], "pipeline_speedup", 1.0) or 1.0
+        times = sorted(
+            t * (getattr(fb, "pipeline_speedup", 1.0) or 1.0) / cur
+            for fb in history[-self.window:]
+            for t in fb.client_finish_s.values())
         if not times:
             return knobs
         idx = min(len(times) - 1,

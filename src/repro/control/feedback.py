@@ -90,6 +90,16 @@ class RoundFeedback:
     device_loads: Mapping[str, float] = field(default_factory=dict)
     boundary_dcor: Mapping[str, Tuple[float, ...]] = field(
         default_factory=dict)          # per split client, per boundary idx
+    # pipelined split execution (core/pipeline): micro-batches per batch
+    # in force this round, and the mean analytic sequential/pipelined
+    # per-batch ratio across split clients (1.0 when not pipelined).
+    # The deadline controller rescales historical finish times by this
+    # ratio when K changes between rounds.
+    pipeline_microbatches: int = 1
+    pipeline_speedup: float = 1.0
+    # backend="auto": dispatch probe wall-times (µs per backend) from
+    # the round that ran the probe; empty otherwise
+    backend_probe_us: Mapping[str, float] = field(default_factory=dict)
 
     def summary(self) -> Dict[str, object]:
         """Compact printable view (the demos use this as schema docs)."""

@@ -60,6 +60,7 @@ from repro.control import (ControllerSuite, ControlKnobs, RoundFeedback,
                            knobs_from_config, make_controllers)
 from repro.core.devices import make_pool
 from repro.core.fedavg import fedavg
+from repro.core.pipeline import effective_microbatches
 from repro.core.selection import plan_all_clients
 from repro.core.simulate import plan_epoch_time
 from repro.core.split import (SplitExecution, SplitPlan, make_boundary_stage,
@@ -185,6 +186,13 @@ class FSLGANTrainer:
         # depend on batches_per_client)
         self.engine: Optional[FederationEngine] = None
         self._engine_batches: Optional[int] = None
+        # backend="auto": the one-shot dispatch probe's pick + wall-times,
+        # pinned for the trainer's lifetime after the first round
+        self._auto_backend: Optional[str] = None
+        # mean analytic sequential/pipelined per-batch ratio across split
+        # clients (1.0 unsplit or K == 1); set by _ensure_engine, carried
+        # into RoundFeedback for the deadline controller's rescaling
+        self._pipeline_speedup: float = 1.0
         # flight recorder (cfg.obs): traces, metrics, feedback persistence.
         # Disabled (default) => None everywhere — the engine emits no spans
         # and every training path is untouched (pinned bit-exact).
@@ -266,9 +274,11 @@ class FSLGANTrainer:
             # wire bytes are a pure function of (split signature, x_shape)
             # — measure once per signature, not once per client
             bytes_by_sig: Dict[Any, Tuple[int, List[Dict[str, int]]]] = {}
+            pipeline_k = self._pipeline_k()
             for cid, plan in self.plans.items():
                 ex = SplitExecution(plan, apply_layer, tails, stage=stage,
-                                    stages=self._boundary_stages(plan))
+                                    stages=self._boundary_stages(plan),
+                                    pipeline_microbatches=pipeline_k)
                 self.split_execs[cid] = ex
                 if ex.signature not in bytes_by_sig:
                     bytes_by_sig[ex.signature] = ex.step_wire_bytes(
@@ -325,6 +335,22 @@ class FSLGANTrainer:
     def _client_steps(self, cid: str, default: int) -> int:
         return int(self.cfg.fed.client_local_steps.get(cid, default))
 
+    def _lan_latency_s(self) -> float:
+        """Per-hop LAN latency for the split chain: the
+        ``cfg.split.lan_latency_s`` override when set, else the paper's
+        ``cfg.fsl.lan_latency_s`` (50 ms) — configurable end-to-end, never
+        the pricing functions' hard-coded default."""
+        return self.cfg.split.lan_latency_s or self.cfg.fsl.lan_latency_s
+
+    def _pipeline_k(self) -> int:
+        """Micro-batches per batch for the pipelined split step: the
+        configured K clamped to a divisor of the batch size (1 when split
+        execution is off)."""
+        if not self.cfg.split.enabled:
+            return 1
+        return effective_microbatches(self.batch_size,
+                                      self.cfg.split.pipeline_microbatches)
+
     def _ensure_engine(self, batches_per_client: int) -> FederationEngine:
         """(Re)build the engine when the local-round length changes — client
         compute times are priced per round (per-client ``local_steps``
@@ -335,23 +361,33 @@ class FSLGANTrainer:
             return self.engine
         by_id = {cl.client_id: cl for cl in self.pool}
         specs = []
+        pipeline_k = self._pipeline_k()
+        speedups: List[float] = []
         for cid in self._active_clients():
             steps = self._client_steps(cid, batches_per_client)
             if cid in self.plans and cid in by_id:
                 # split-executed clients are priced from the MEASURED
                 # per-boundary bytes their step actually ships; unsplit
-                # training falls back to the analytic hop constant
-                ct = plan_epoch_time(
+                # training falls back to the analytic hop constant.
+                # Pipelined steps (K > 1) are priced by the 1F1B overlap
+                # schedule's makespan, not the additive chain.
+                price = functools.partial(
+                    plan_epoch_time,
                     self.plans[cid], by_id[cid], batches_per_epoch=steps,
-                    lan_latency_s=self.cfg.fsl.lan_latency_s,
+                    lan_latency_s=self._lan_latency_s(),
                     boundary_bytes=self._split_hop_events.get(cid),
                     lan_bandwidth_bps=self.cfg.split.lan_bandwidth_bps)
+                ct = price(pipeline_microbatches=pipeline_k)
+                if pipeline_k > 1 and cid in self.split_execs and ct > 0.0:
+                    speedups.append(price(pipeline_microbatches=1) / ct)
             else:
                 ct = 0.0
             specs.append(ClientSpec(
                 cid, float(len(self.client_data[cid])), ct,
                 lr_scale=float(self.cfg.fed.client_lr_scales.get(cid, 1.0)),
                 local_steps=steps))
+        self._pipeline_speedup = float(np.mean(speedups)) if speedups \
+            else 1.0
         self.engine = FederationEngine(
             self.cfg.fed, specs, weighted=self.cfg.fsl.weighted_average,
             uplink_stage=self._uplink_stage)
@@ -383,8 +419,10 @@ class FSLGANTrainer:
                 if cl is None:
                     continue
                 tf = {d.device_id: d.time_factor for d in cl.devices}
+                # round_timeline emits overlapping 1F1B spans when the
+                # executor is pipelined (K from ex.pipeline_microbatches)
                 self._trace_timelines[cid] = ex.round_timeline(
-                    tf, lan_latency_s=self.cfg.fsl.lan_latency_s,
+                    tf, lan_latency_s=self._lan_latency_s(),
                     hop_bytes=self._split_hop_events.get(cid),
                     lan_bandwidth_bps=self.cfg.split.lan_bandwidth_bps)
 
@@ -435,6 +473,55 @@ class FSLGANTrainer:
             opt_lookup=lambda cid: self.state.d_opt[cid],
             default_steps=batches_per_client, hyper=hyper,
             round_key=round_key)
+
+    def _resolve_auto_backend(self, batches_per_client: int
+                              ) -> Tuple[str, Dict[str, float]]:
+        """``backend="auto"``: one-shot timed probe of both dispatch paths.
+
+        Runs each backend's full round dispatch over the active roster on
+        zero batches — one warm-up execution (compile) then one timed
+        execution — and pins the faster backend for the trainer's
+        lifetime.  The probe consumes no host RNG and commits no training
+        state (``ClientResult`` is pure and discarded), and warming both
+        backends populates the program's per-signature step caches, so
+        the winning backend's real round pays no additional compile.
+        Returns ``(backend, probe_us)``; ``probe_us`` is empty on every
+        round after the probe ran.
+        """
+        if self._auto_backend is not None:
+            return self._auto_backend, {}
+        import time as _time
+        cids = self._active_clients()
+        c = self.c
+        max_steps = max(self._client_steps(cid, batches_per_client)
+                        for cid in cids)
+        zeros = jnp.zeros((max_steps, self.batch_size, c.image_size,
+                           c.image_size, c.channels), jnp.float32)
+        key = jax.random.PRNGKey(0) if self.program.needs_key else None
+        hyper = None
+        if self.engine is not None:
+            hyper = {cid: ClientHyper(lr_scale=spec.lr_scale,
+                                      local_steps=spec.local_steps)
+                     for cid, spec in self.engine.specs.items()}
+        global_d = self.state.d_params[cids[0]]
+        probe_us: Dict[str, float] = {}
+        for be in ("loop", "vectorized"):
+            def run_once():
+                ex = RoundExecutor(
+                    self.program, backend=be,
+                    sample=lambda cid, steps: (zeros[:steps], zeros[:steps]),
+                    opt_lookup=lambda cid: self.state.d_opt[cid],
+                    default_steps=batches_per_client, hyper=hyper,
+                    round_key=key)
+                jax.block_until_ready(
+                    [r.params for r in ex.run(list(cids), global_d)])
+            run_once()                       # compile + warm
+            t0 = _time.perf_counter()
+            run_once()
+            probe_us[be] = (_time.perf_counter() - t0) * 1e6
+        self._auto_backend = "loop" \
+            if probe_us["loop"] <= probe_us["vectorized"] else "vectorized"
+        return self._auto_backend, probe_us
 
     # ------------------------------------------------------------------
     # control plane (cfg.control)
@@ -603,7 +690,10 @@ class FSLGANTrainer:
         compiled — ``"loop"`` (per-client jitted steps; with the default
         sync/no-codec/no-privacy config this reproduces the seed's
         sequential loop bit-for-bit) or ``"vectorized"`` (every scheduled
-        client's whole round as ONE jitted vmap/scan program).  Privacy
+        client's whole round as ONE jitted vmap/scan program).
+        ``"auto"`` probes both dispatch paths once on the first round
+        (``_resolve_auto_backend``) and pins the measured-faster one —
+        the pick and probe times land in ``RoundFeedback``.  Privacy
         (``cfg.privacy``) composes with either backend: DP-SGD inside the
         compiled step, uplink DP as the engine's pre-codec stage.
 
@@ -647,6 +737,10 @@ class FSLGANTrainer:
             self._apply_knobs(self._ensure_controllers(batches_per_client)(
                 self.feedback, self.knobs))
         eng = self._ensure_engine(batches_per_client)
+        probe_us: Dict[str, float] = {}
+        if backend == "auto":
+            backend, probe_us = self._resolve_auto_backend(
+                batches_per_client)
         if self._adaptive():
             eng.set_codec(self.knobs.codec, self.knobs.topk_frac)
             eng.set_deadline(self.knobs.deadline_s)
@@ -753,7 +847,10 @@ class FSLGANTrainer:
             dp_steps=(self.accountant.steps - acct_steps_before
                       if self.accountant else 0),
             device_loads=loads,
-            boundary_dcor=probe)
+            boundary_dcor=probe,
+            pipeline_microbatches=self._pipeline_k(),
+            pipeline_speedup=self._pipeline_speedup,
+            backend_probe_us=probe_us)
         self.feedback.append(fb)
 
         # watchtower: check the round, act per policy, THEN digest the

@@ -38,11 +38,18 @@ def plan_epoch_time(plan: SplitPlan, client: Client,
                     lan_latency_s: float = 0.050,
                     compute_unit_s: float = 0.010,
                     boundary_bytes: Optional[Sequence[int]] = None,
-                    lan_bandwidth_bps: float = 100e6) -> float:
+                    lan_bandwidth_bps: float = 100e6,
+                    pipeline_microbatches: int = 1) -> float:
     """Seconds for one epoch of discriminator training under this plan.
 
-    The SL chain is sequential per batch: every device computes its portion
-    (fwd then bwd), activations/gradients hop the LAN at each boundary.
+    Sequential (``pipeline_microbatches = 1``): the SL chain is additive
+    per batch — every device computes its portion (fwd then bwd),
+    activations/gradients hop the LAN at each boundary, nothing
+    overlaps.  Pipelined (``K > 1``): the per-batch time is the makespan
+    of the explicit 1F1B :class:`core.pipeline.OverlapSchedule` — device
+    segments overlap across micro-batches, hops carry ``1/K`` of the
+    payload each, and the additive model is the schedule's own ``K = 1``
+    degenerate case (exactly, pinned).
 
     LAN pricing has two modes:
 
@@ -56,6 +63,21 @@ def plan_epoch_time(plan: SplitPlan, client: Client,
         This is what prices plans that train unsplit.
     """
     tf = {d.device_id: d.time_factor for d in client.devices}
+    if pipeline_microbatches > 1 and plan.num_boundaries > 0:
+        from repro.core.pipeline import schedule_for
+        segs: List[Tuple[str, float]] = []
+        for p in plan.portions:
+            if segs and segs[-1][0] == p.device_id:
+                segs[-1] = (p.device_id, segs[-1][1] + p.cost)
+            else:
+                segs.append((p.device_id, p.cost))
+        sched = schedule_for(
+            [c for _, c in segs], [d for d, _ in segs], tf,
+            num_microbatches=pipeline_microbatches,
+            compute_unit_s=compute_unit_s, bwd_fwd_ratio=BWD_FWD_RATIO,
+            lan_latency_s=lan_latency_s, hop_bytes=boundary_bytes,
+            lan_bandwidth_bps=lan_bandwidth_bps)
+        return sched.makespan * batches_per_epoch
     compute = sum(p.cost * compute_unit_s * tf[p.device_id] * (1 + BWD_FWD_RATIO)
                   for p in plan.portions)
     if boundary_bytes is None:

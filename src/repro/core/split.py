@@ -267,13 +267,119 @@ class GaussianBoundaryStage(BoundaryStage):
         return y.reshape(x.shape).astype(x.dtype)
 
 
+class ComposedBoundaryStage(BoundaryStage):
+    """Sequential composition of boundary stages (applied in listed
+    order, e.g. ``int8+dp`` = codec round-trip, then clip+noise).
+
+    Wire pricing uses the FIRST codec stage in the chain (the codec's
+    encoding is the payload that crosses the LAN; the clip+noise is the
+    sender-side privatization of what that encoding will deliver).  The
+    step key is passed to every sub-stage unchanged — only one
+    stochastic stage may appear per composition, which keeps the fused
+    implementation bit-compatible."""
+
+    def __init__(self, stages: Sequence[BoundaryStage]):
+        self.stages_seq = list(stages)
+        if sum(1 for s in self.stages_seq if s.stochastic) > 1:
+            raise ValueError("at most one stochastic stage per composition")
+        self.name = "+".join(s.name for s in self.stages_seq)
+        self.stochastic = any(s.stochastic for s in self.stages_seq)
+
+    @property
+    def signature(self) -> Tuple:
+        return ("compose",) + tuple(s.signature for s in self.stages_seq)
+
+    def apply(self, x: jnp.ndarray, key=None) -> jnp.ndarray:
+        for s in self.stages_seq:
+            x = s.apply(x, key)
+        return x
+
+    def wire_bytes(self, shape: Sequence[int], dtype=jnp.float32) -> int:
+        for s in self.stages_seq:
+            if isinstance(s, CodecBoundaryStage):
+                return s.wire_bytes(shape, dtype)
+        return tensor_wire_bytes(shape, dtype)
+
+
+class FusedBoundaryStage(BoundaryStage):
+    """``codec + dp`` composition in ONE traversal: quantize/dequantize,
+    per-example clip and Gaussian noise fused into a single pass
+    (``kernels/boundary_fuse``) instead of the three separate traversals
+    ``CodecBoundaryStage`` → ``GaussianBoundaryStage`` makes over every
+    shipped tensor.  Numerics are pinned against the unfused composition
+    (tests/test_pipeline.py); fusable codecs are the elementwise ones
+    (``fp16``, ``int8`` and the degenerate ``none``) — global top-k
+    selection is not streamable tile-by-tile and stays composed."""
+
+    FUSABLE = ("none", "fp16", "int8")
+    stochastic = True
+
+    def __init__(self, codec_name: str, clip: float, sigma: float, *,
+                 use_kernel: bool = False, interpret: bool = False):
+        if codec_name not in self.FUSABLE:
+            raise ValueError(f"codec {codec_name!r} is not fusable "
+                             f"(expected one of {self.FUSABLE})")
+        self.codec_name = codec_name
+        self.clip = float(clip)
+        self.sigma = float(sigma)
+        self.use_kernel = bool(use_kernel)
+        self.interpret = bool(interpret)
+        self.name = "dp" if codec_name == "none" else f"{codec_name}+dp"
+
+    @property
+    def signature(self) -> Tuple:
+        return ("fused", self.codec_name, self.clip, self.sigma,
+                self.use_kernel, self.interpret)
+
+    def apply(self, x: jnp.ndarray, key=None) -> jnp.ndarray:
+        from repro.kernels.boundary_fuse.ops import fused_boundary_flat
+        flat = x.reshape(x.shape[0], -1).astype(jnp.float32)
+        noise_scale = 0.0
+        noise = jnp.zeros_like(flat)
+        if self.sigma > 0.0 and key is not None:
+            # Same draw (key, flat shape) as GaussianBoundaryStage, so
+            # fused == composed holds bit-for-bit per noise sample.
+            noise_scale = self.sigma * self.clip
+            noise = jax.random.normal(key, flat.shape, jnp.float32)
+        y = fused_boundary_flat(flat, self.clip, noise_scale, noise,
+                                codec=self.codec_name,
+                                use_kernel=self.use_kernel,
+                                interpret=self.interpret)
+        return y.reshape(x.shape).astype(x.dtype)
+
+    def wire_bytes(self, shape: Sequence[int], dtype=jnp.float32) -> int:
+        if self.codec_name == "none":
+            return tensor_wire_bytes(shape, dtype)
+        from repro.fed.transport import make_codec
+        _, nbytes = make_codec(self.codec_name).roundtrip(
+            jnp.zeros(tuple(shape), dtype))
+        return int(nbytes)
+
+
 def make_boundary_stage(split_cfg, name: Optional[str] = None
                         ) -> BoundaryStage:
     """Factory keyed by ``config.SplitConfig.boundary_stage``; ``name``
     overrides it (the split controller builds per-boundary stages from the
-    same clip/sigma/frac parameters, varying only the stage kind)."""
+    same clip/sigma/frac parameters, varying only the stage kind).
+
+    Composed names (``"fp16+dp"``, ``"int8+dp"``, ``"topk+dp"``) chain
+    stages in order; when the chain is a fusable codec followed by
+    ``dp`` and ``split_cfg.fuse_boundary`` is not disabled, the fused
+    single-traversal implementation is selected automatically.
+    """
     if name is None:
         name = getattr(split_cfg, "boundary_stage", "identity")
+    if "+" in name:
+        parts = [p for p in name.split("+") if p]
+        if (len(parts) == 2 and parts[1] == "dp"
+                and parts[0] in FusedBoundaryStage.FUSABLE
+                and getattr(split_cfg, "fuse_boundary", True)):
+            return FusedBoundaryStage(
+                parts[0], split_cfg.stage_clip, split_cfg.stage_sigma,
+                use_kernel=getattr(split_cfg, "use_kernel", False),
+                interpret=getattr(split_cfg, "kernel_interpret", False))
+        return ComposedBoundaryStage(
+            [make_boundary_stage(split_cfg, p) for p in parts])
     if name in ("", "identity", "none"):
         return BoundaryStage()
     if name == "dp":
@@ -303,17 +409,26 @@ class SplitExecution:
 
     def __init__(self, plan: SplitPlan, apply_layer, tails: Sequence, *,
                  stage: Optional[BoundaryStage] = None,
-                 stages: Optional[Sequence[BoundaryStage]] = None):
+                 stages: Optional[Sequence[BoundaryStage]] = None,
+                 pipeline_microbatches: int = 1):
         """``stage`` applies one stage uniformly at every boundary;
         ``stages`` assigns a stage PER boundary (index-aligned with
         ``self.boundaries``) — the split controller's lever for noising
         only the boundaries the attack actually reads.  Passing both uses
         ``stages`` and keeps ``stage`` as the documented uniform default.
+
+        ``pipeline_microbatches`` > 1 makes ``value_and_grad`` run the
+        1F1B-pipelined step (``run_pipelined``): each batch splits into
+        that many micro-batches so device segments overlap, with the
+        per-batch wall time priced by ``overlap_schedule`` instead of
+        the additive chain.  ``1`` (default) is the sequential step,
+        bit-exact with the pre-pipeline executor.
         """
         self.plan = plan
         self.apply_layer = apply_layer
         self.tails = tuple(tails)
         self.stage = stage or BoundaryStage()
+        self.pipeline_microbatches = max(1, int(pipeline_microbatches))
         self.segments = plan_segments(plan)
         self.boundaries: List[Boundary] = []
         depth = 0
@@ -351,9 +466,15 @@ class SplitExecution:
         """Compilation key: two plans with the same boundary depths and
         the same (fully parameterized) per-boundary stages compile to the
         same staged program — device *identity* only affects pricing,
-        never math."""
-        return (tuple(b.depth for b in self.boundaries),
+        never math.  Pipelined executions (``pipeline_microbatches > 1``)
+        carry K in the signature: a pipelined step compiles to different
+        XLA than the sequential one and must never share its cache slot
+        (``fed/programs.LocalProgram`` dedups on this)."""
+        base = (tuple(b.depth for b in self.boundaries),
                 tuple(s.signature for s in self.stages))
+        if self.pipeline_microbatches > 1:
+            return base + (("pipeline", self.pipeline_microbatches),)
+        return base
 
     # ------------------------------------------------------------------
     def _segment_fn(self, names: Tuple[str, ...]):
@@ -423,11 +544,71 @@ class SplitExecution:
                     records["bwd"][si - 1] = g_act
         return loss, grads, records
 
+    def run_pipelined(self, params, batches: Sequence[jnp.ndarray],
+                      key=None, collect: bool = False,
+                      num_microbatches: Optional[int] = None):
+        """The 1F1B-pipelined local step: split each pass's batch into K
+        equal micro-batches and run the staged chain per micro-batch, so
+        on real hardware segment ``s`` of micro-batch ``m`` overlaps
+        segment ``s+1`` of micro-batch ``m-1`` (the schedule
+        ``overlap_schedule`` prices).  Math: with equal chunks and
+        mean-reducing loss tails, loss and grads are the micro-batch
+        means — tolerance-pinned against the mean of per-chunk monolithic
+        gradients (the exact equivalence; batch-norm layers see
+        per-micro-batch statistics, the usual grad-accumulation shift
+        from the full-batch gradient).
+
+        ``K = 1`` (or a batch K does not divide — clamped to the nearest
+        divisor, see ``core.pipeline.effective_microbatches``) falls
+        through to ``run`` unchanged: bit-exact with the sequential
+        step, pinned.  Stochastic stage keys fold the micro-batch index
+        (``fold_in(key, m)``) so micro-batches draw independent noise;
+        at ``K = 1`` the key is used as-is, preserving the pin.
+        """
+        from repro.core.pipeline import effective_microbatches
+        if len(batches) != self.num_passes:
+            raise ValueError(f"{len(batches)} batches for "
+                             f"{self.num_passes} loss tails")
+        req = self.pipeline_microbatches if num_microbatches is None \
+            else int(num_microbatches)
+        bsz = min(int(b.shape[0]) for b in batches)
+        k = effective_microbatches(bsz, req)
+        if k == 1:
+            return self.run(params, batches, key, collect)
+        if key is None and self.stochastic:
+            key = jax.random.PRNGKey(0)
+        mb = bsz // k
+        loss = None
+        grads = None
+        recs = []
+        for m in range(k):
+            chunk = tuple(b[m * mb:(m + 1) * mb] for b in batches)
+            mkey = None if key is None else jax.random.fold_in(key, m)
+            l, g, r = self.run(params, chunk, mkey, collect)
+            loss = l if loss is None else loss + l
+            grads = g if grads is None else jax.tree.map(jnp.add, grads, g)
+            recs.append(r)
+        inv = 1.0 / k
+        loss = loss * inv
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        records = {"fwd": [None] * self.num_boundaries,
+                   "bwd": [None] * self.num_boundaries}
+        if collect:
+            for d in ("fwd", "bwd"):
+                for b in range(self.num_boundaries):
+                    records[d][b] = tuple(
+                        jnp.concatenate([r[d][b][p] for r in recs], axis=0)
+                        for p in range(self.num_passes))
+        return loss, grads, records
+
     def value_and_grad(self, params, real, fake, key=None):
         """The D-loss contract of ``fed/programs.make_local_step``:
         ``(params, real, fake, key) -> (loss, grads)`` through the staged
-        execution."""
-        loss, grads, _ = self.run(params, (real, fake), key)
+        execution — pipelined when ``pipeline_microbatches > 1``."""
+        if self.pipeline_microbatches > 1:
+            loss, grads, _ = self.run_pipelined(params, (real, fake), key)
+        else:
+            loss, grads, _ = self.run(params, (real, fake), key)
         return loss, grads
 
     # ------------------------------------------------------------------
@@ -453,8 +634,12 @@ class SplitExecution:
     def shipped_boundaries(self, params, real, fake, key=None
                            ) -> Dict[str, List[Tuple[jnp.ndarray, ...]]]:
         """Every boundary tensor one local step ships (fwd activations and
-        bwd activation-grads, both passes), as staged."""
-        _, _, records = self.run(params, (real, fake), key, collect=True)
+        bwd activation-grads, both passes), as staged — per-micro-batch
+        tensors concatenated back to the full-batch view when the step
+        is pipelined (what the LAN observer sees is unchanged in union,
+        just split across K messages)."""
+        _, _, records = self.run_pipelined(params, (real, fake), key,
+                                           collect=True)
         return records
 
     # ------------------------------------------------------------------
@@ -490,12 +675,33 @@ class SplitExecution:
                 prev = p.device_id
         return costs
 
+    def overlap_schedule(self, time_factors: Dict[str, float], *,
+                         lan_latency_s: float = 0.050,
+                         compute_unit_s: float = 0.010,
+                         bwd_fwd_ratio: float = 2.0,
+                         hop_bytes: Optional[Sequence[int]] = None,
+                         lan_bandwidth_bps: float = 100e6,
+                         pipeline_microbatches: Optional[int] = None):
+        """The explicit 1F1B :class:`core.pipeline.OverlapSchedule` for
+        one batch of this plan (K defaults to the executor's configured
+        ``pipeline_microbatches``)."""
+        from repro.core.pipeline import schedule_for
+        k = self.pipeline_microbatches if pipeline_microbatches is None \
+            else int(pipeline_microbatches)
+        return schedule_for(
+            self.segment_costs(), [dev for dev, _ in self.segments],
+            time_factors, num_microbatches=k,
+            compute_unit_s=compute_unit_s, bwd_fwd_ratio=bwd_fwd_ratio,
+            lan_latency_s=lan_latency_s, hop_bytes=hop_bytes,
+            lan_bandwidth_bps=lan_bandwidth_bps)
+
     def round_timeline(self, time_factors: Dict[str, float], *,
                        lan_latency_s: float = 0.050,
                        compute_unit_s: float = 0.010,
                        bwd_fwd_ratio: float = 2.0,
                        hop_bytes: Optional[Sequence[int]] = None,
-                       lan_bandwidth_bps: float = 100e6
+                       lan_bandwidth_bps: float = 100e6,
+                       pipeline_microbatches: Optional[int] = None
                        ) -> Tuple[List[Dict[str, Any]], float]:
         """The ordered phases of ONE local batch under this plan, as the
         flight recorder traces them: forward segment computes and boundary
@@ -511,11 +717,51 @@ class SplitExecution:
 
         Returns ``(phases, batch_time_s)``: phases are dicts with
         ``name``/``cat``/``track``/``t0``/``t1``/``args`` (times relative
-        to batch start) whose durations sum EXACTLY to
-        ``core/simulate.plan_epoch_time``'s per-batch time under the same
-        arguments — the trace is the price, subdivided, never a second
-        model of it (pinned in tests).
+        to batch start).  Sequential (``K = 1``) phases chain end to end
+        and their durations sum EXACTLY to ``core/simulate.
+        plan_epoch_time``'s per-batch time under the same arguments — the
+        trace is the price, subdivided, never a second model of it
+        (pinned in tests).  Pipelined (``K > 1``, defaulting to the
+        executor's ``pipeline_microbatches``) phases come from the 1F1B
+        overlap schedule — per-micro-batch spans that genuinely overlap
+        across devices, with ``batch_time_s`` the schedule makespan,
+        still equal to ``plan_epoch_time``'s per-batch time at the same
+        K (same pin).
         """
+        k = self.pipeline_microbatches if pipeline_microbatches is None \
+            else int(pipeline_microbatches)
+        if k > 1 and self.num_boundaries > 0:
+            sched = self.overlap_schedule(
+                time_factors, lan_latency_s=lan_latency_s,
+                compute_unit_s=compute_unit_s, bwd_fwd_ratio=bwd_fwd_ratio,
+                hop_bytes=hop_bytes, lan_bandwidth_bps=lan_bandwidth_bps,
+                pipeline_microbatches=k)
+            phases: List[Dict[str, Any]] = []
+            for task in sched.tasks:
+                if task.kind in ("fwd", "bwd"):
+                    dev = task.device
+                    phases.append({
+                        "name": f"{task.kind} {dev} mb{task.microbatch}",
+                        "cat": "segment", "track": dev,
+                        "t0": task.t0, "t1": task.t1,
+                        "args": {"microbatch": task.microbatch,
+                                 "segment": task.index}})
+                else:
+                    b = self.boundaries[task.index]
+                    direction = "fwd" if task.kind == "hop_fwd" else "bwd"
+                    frm, to = (b.from_device, b.to_device) \
+                        if direction == "fwd" \
+                        else (b.to_device, b.from_device)
+                    phases.append({
+                        "name": f"b{b.index} {direction} {frm}->{to} "
+                                f"mb{task.microbatch}",
+                        "cat": "boundary", "track": frm,
+                        "t0": task.t0, "t1": task.t1,
+                        "args": {"boundary": b.index,
+                                 "direction": direction,
+                                 "microbatch": task.microbatch,
+                                 "stage": self.stages[b.index].name}})
+            return phases, sched.makespan
         seg_costs = self.segment_costs()
         bw = max(float(lan_bandwidth_bps), 1.0)
 

@@ -47,6 +47,10 @@ import jax.numpy as jnp
 # loss_fn(params, real_batch, fake_batch) -> scalar loss
 LossFn = Callable[[Any, jnp.ndarray, jnp.ndarray], jnp.ndarray]
 
+# The executor's real dispatch paths.  config.FED_BACKENDS additionally
+# accepts "auto" — resolved by the trainer's first-round dispatch probe
+# (core/gan.FSLGANTrainer._resolve_auto_backend) before any RoundExecutor
+# is built, so "auto" never reaches this module.
 BACKENDS = ("loop", "vectorized")
 
 
@@ -268,7 +272,10 @@ class LocalProgram:
     # ------------------------------------------------------------------
     def signature_for(self, cid: str):
         """Compilation key for one client: its plan's boundary-depth/stage
-        signature, or None for the monolithic step."""
+        signature, or None for the monolithic step.  Pipelined split
+        executions (``pipeline_microbatches > 1``) carry K inside the
+        signature, so their micro-batched steps compile — and the
+        vectorized backend groups — separately from sequential ones."""
         ex = self.split.get(cid)
         return ex.signature if ex is not None else None
 

@@ -168,12 +168,30 @@ class Codec:
     ``roundtrip(tree)`` returns ``(decoded_tree, wire_bytes)``.  Stateful
     codecs (top-k with error feedback) carry a residual across calls, so the
     engine keeps ONE codec instance PER CLIENT.
+
+    ``encode(x)`` / ``decode(wire, meta, dtype)`` are the per-tensor
+    *buffer* entry points the pipelined split executor ships hops with:
+    ``encode`` returns the actual wire arrays (the quantized buffer plus
+    whatever side metadata decoding needs) instead of a decoded
+    round-trip, and ``decode(*encode(x), x.dtype) == roundtrip(x)[0]``
+    leaf-wise for every stateless codec (pinned in tests).  Both are
+    jit-compatible pure functions of the input tensor.
     """
     name = "none"
     encodes_delta = False
 
     def roundtrip(self, tree) -> Tuple[Any, int]:
         raise NotImplementedError
+
+    def encode(self, x: jnp.ndarray) -> Tuple[Any, Any]:
+        """One tensor -> (wire buffer(s), decode metadata)."""
+        return x, None
+
+    def decode(self, wire, meta, dtype=jnp.float32) -> jnp.ndarray:
+        """Inverse of ``encode``: reconstruct what the receiver computes
+        on (identical to the ``roundtrip`` decode for this tensor)."""
+        del meta
+        return wire.astype(dtype)
 
 
 class IdentityCodec(Codec):
@@ -195,6 +213,13 @@ class FP16Codec(Codec):
             lambda l: l.astype(jnp.float16).astype(l.dtype), tree)
         nbytes = sum(l.size * 2 for l in jax.tree.leaves(tree))
         return dec, int(nbytes)
+
+    def encode(self, x: jnp.ndarray) -> Tuple[Any, Any]:
+        return x.astype(jnp.float16), None
+
+    def decode(self, wire, meta, dtype=jnp.float32) -> jnp.ndarray:
+        del meta
+        return wire.astype(dtype)
 
 
 class Int8Codec(Codec):
@@ -219,6 +244,18 @@ class Int8Codec(Codec):
         dec = jax.tree.map(qdq, tree)
         nbytes = sum(l.size + 4 for l in jax.tree.leaves(tree))
         return dec, int(nbytes)
+
+    def encode(self, x: jnp.ndarray) -> Tuple[Any, Any]:
+        f = x.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(f))
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+        q = jnp.clip(jnp.round(f / scale), -127, 127).astype(jnp.int8)
+        return q, scale
+
+    def decode(self, wire, meta, dtype=jnp.float32) -> jnp.ndarray:
+        # int8 buffer * fp32 scale, matching roundtrip's q * scale in
+        # fp32 before the final cast
+        return (wire.astype(jnp.float32) * meta).astype(dtype)
 
 
 class TopKCodec(Codec):
@@ -261,6 +298,23 @@ class TopKCodec(Codec):
                 lambda l, d: l.astype(jnp.float32) - d.astype(jnp.float32),
                 tree, dec)
         return dec, int(kept_entries * 8)
+
+    def encode(self, x: jnp.ndarray) -> Tuple[Any, Any]:
+        """Stateless (no error feedback) per-tensor buffer encode: the
+        kept values + their flat indices — exactly the 8-bytes-per-entry
+        wire payload ``roundtrip`` prices."""
+        flat = x.astype(jnp.float32).reshape(-1)
+        k = min(flat.size, max(1, int(math.ceil(self.frac * flat.size))))
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        return (flat[idx], idx.astype(jnp.int32)), x.shape
+
+    def decode(self, wire, meta, dtype=jnp.float32) -> jnp.ndarray:
+        vals, idx = wire
+        n = 1
+        for s in meta:
+            n *= int(s)
+        return jnp.zeros((n,), jnp.float32).at[idx].set(vals) \
+            .reshape(meta).astype(dtype)
 
 
 def make_codec(name: str, *, topk_frac: float = 0.01,

@@ -1,0 +1,2 @@
+from repro.kernels.boundary_fuse.ops import fused_boundary_flat  # noqa: F401
+from repro.kernels.boundary_fuse.ref import fused_boundary_ref  # noqa: F401

@@ -1,0 +1,119 @@
+"""Fused boundary-crossing kernel: codec qdq + DP clip + Gaussian noise.
+
+Every tensor that crosses a split boundary under a composed
+``codec+dp`` stage pays three separate traversals today (quantize
+round-trip, per-example clip, noise add — see ``core/split.
+CodecBoundaryStage`` / ``GaussianBoundaryStage``).  This kernel fuses
+them into one streaming pass over the flattened ``(B, N)`` tensor,
+patterned on the two-phase ``kernels/dp_clip`` grid:
+
+  * ``int8`` only — phase 0 streams tiles accumulating the global
+    ``amax`` into a persistent (1, 1) VMEM scratch (the quantization
+    scale needs the whole tensor, like the clip norm does);
+  * phase P-2 streams tiles through the qdq and accumulates per-example
+    partial squared norms into a (B, 1) VMEM scratch;
+  * phase P-1 re-streams each tile, re-applies the qdq (recompute is
+    cheaper than a round-trip to HBM), scales by the per-example clip
+    factor and adds the precomputed noise tile.
+
+So ``fp16``/``none`` compositions run a 2-phase grid (2 reads + 1 write
+per element, the dp_clip floor) and ``int8`` a 3-phase grid (3 reads +
+1 write).  Noise is an input tile, not in-kernel PRNG, so the kernel is
+a deterministic function of its inputs and pins against ref.py in
+interpret mode.  Top-k is NOT fusable: its selection threshold is a
+global order statistic, not a streaming reduction — composed stages
+keep handling it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.boundary_fuse.ref import CODECS, NORM_EPS
+
+
+def _make_fuse_kernel(codec: str, num_phases: int):
+    def kernel(x_ref, scal_ref, noise_ref, o_ref, norm_scr, amax_scr):
+        phase = pl.program_id(0)
+        j = pl.program_id(1)
+
+        @pl.when(jnp.logical_and(phase == 0, j == 0))
+        def _init():
+            norm_scr[...] = jnp.zeros_like(norm_scr)
+            amax_scr[...] = jnp.zeros_like(amax_scr)
+
+        x = x_ref[...].astype(jnp.float32)               # (B, bn)
+
+        if codec == "int8":
+            @pl.when(phase == 0)
+            def _amax():
+                amax_scr[0, 0] = jnp.maximum(amax_scr[0, 0],
+                                             jnp.max(jnp.abs(x)))
+                o_ref[...] = jnp.zeros_like(o_ref)       # placeholder flush
+
+        def qdq():
+            if codec == "fp16":
+                return x.astype(jnp.float16).astype(jnp.float32)
+            if codec == "int8":
+                amax = amax_scr[0, 0]
+                s = jnp.where(amax > 0, amax / 127.0, 1.0)
+                return jnp.clip(jnp.round(x / s), -127.0, 127.0) * s
+            return x
+
+        @pl.when(phase == num_phases - 2)
+        def _accumulate_norms():
+            q = qdq()
+            norm_scr[...] += jnp.sum(q * q, axis=1, keepdims=True)
+            o_ref[...] = jnp.zeros_like(o_ref)           # placeholder flush
+
+        @pl.when(phase == num_phases - 1)
+        def _emit():
+            q = qdq()
+            clip = scal_ref[0, 0]
+            noise_scale = scal_ref[0, 1]
+            norms = jnp.sqrt(norm_scr[...])              # (B, 1)
+            scale = jnp.minimum(1.0, clip / jnp.maximum(norms, NORM_EPS))
+            o_ref[...] = (q * scale
+                          + noise_scale * noise_ref[...]).astype(o_ref.dtype)
+
+    return kernel
+
+
+def boundary_fuse_kernel(x: jnp.ndarray, clip, noise_scale,
+                         noise: jnp.ndarray, *, codec: str = "none",
+                         block_n: int = 2048,
+                         interpret: bool = False) -> jnp.ndarray:
+    """x: (B, N) flattened boundary tensor; noise: (B, N).  -> (B, N) f32.
+
+    Arbitrary N: zero-padded to a block_n multiple (padded lanes add 0
+    to every norm and to the amax, and emit 0 * noise_scale) and sliced
+    back.  ``clip``/``noise_scale`` ride in one (1, 2) scalar tile.
+    """
+    if codec not in CODECS:
+        raise ValueError(f"unknown fusable codec {codec!r}")
+    b, n = x.shape
+    block_n = min(block_n, max(n, 1))
+    pad = (-n) % block_n
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        noise = jnp.pad(noise, ((0, 0), (0, pad)))
+    n_padded = n + pad
+    scal = jnp.stack([jnp.asarray(clip, jnp.float32).reshape(()),
+                      jnp.asarray(noise_scale, jnp.float32).reshape(())]
+                     ).reshape(1, 2)
+    num_phases = 3 if codec == "int8" else 2
+    out = pl.pallas_call(
+        _make_fuse_kernel(codec, num_phases),
+        grid=(num_phases, n_padded // block_n),
+        in_specs=[pl.BlockSpec((b, block_n), lambda i, j: (0, j)),
+                  pl.BlockSpec((1, 2), lambda i, j: (0, 0)),
+                  pl.BlockSpec((b, block_n), lambda i, j: (0, j))],
+        out_specs=pl.BlockSpec((b, block_n), lambda i, j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n_padded), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((b, 1), jnp.float32),
+                        pltpu.VMEM((1, 1), jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.float32), scal, noise.astype(jnp.float32))
+    return out[:, :n] if pad else out

@@ -1,0 +1,31 @@
+"""Public fused-boundary op: the single entry point
+``core/split.FusedBoundaryStage`` calls per crossing.
+
+``use_kernel`` selects the Pallas kernel (TPU; ``interpret=True`` on
+CPU) vs the single-traversal pure-JAX reference — the reference is the
+default off-TPU path, mirroring ``kernels/dp_clip.ops``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.boundary_fuse.kernel import boundary_fuse_kernel
+from repro.kernels.boundary_fuse.ref import fused_boundary_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("codec", "use_kernel", "interpret"))
+def fused_boundary_flat(x: jnp.ndarray, clip, noise_scale,
+                        noise: jnp.ndarray, *, codec: str = "none",
+                        use_kernel: bool = False,
+                        interpret: bool = False) -> jnp.ndarray:
+    """x: (B, N) flattened boundary tensor -> (B, N) f32 staged release
+    (codec qdq, per-example clip to ``clip``, plus
+    ``noise_scale * noise``)."""
+    if use_kernel:
+        return boundary_fuse_kernel(x, clip, noise_scale, noise,
+                                    codec=codec, interpret=interpret)
+    return fused_boundary_ref(x, clip, noise_scale, noise, codec=codec)

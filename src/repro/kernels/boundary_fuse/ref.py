@@ -1,0 +1,52 @@
+"""Pure-JAX reference for the fused boundary stage.
+
+One traversal computing exactly what the unfused
+``CodecBoundaryStage`` -> ``GaussianBoundaryStage`` chain computes over a
+flattened ``(B, N)`` boundary tensor:
+
+    q      = qdq(x)                      # codec quantize/dequantize
+    norms  = ||q_b||_2                   # per example
+    out    = q * min(1, C/norms) + noise_scale * noise
+
+The qdq and clip formulas are copied operation-for-operation from
+``fed/transport.FP16Codec`` / ``Int8Codec`` and
+``core/split.GaussianBoundaryStage`` so the fused stage is bit-equal to
+the composed stages in fp32 (pinned in tests/test_pipeline.py); the
+Pallas kernel (kernel.py) pins against THIS function.  Noise is a
+precomputed input (same ``jax.random.normal`` draw the unfused stage
+makes), never in-kernel PRNG.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NORM_EPS = 1e-12      # shared with kernels/dp_clip: all-zero-example guard
+
+CODECS = ("none", "fp16", "int8")
+
+
+def codec_qdq(x: jnp.ndarray, codec: str) -> jnp.ndarray:
+    """Elementwise quantize/dequantize, matching fed/transport codecs
+    bit-for-bit on fp32 input (int8 amax is over the whole tensor — one
+    boundary tensor is one codec leaf)."""
+    if codec in ("none", "identity", ""):
+        return x
+    if codec == "fp16":
+        return x.astype(jnp.float16).astype(x.dtype)
+    if codec == "int8":
+        amax = jnp.max(jnp.abs(x))
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+        return jnp.clip(jnp.round(x / scale), -127, 127) * scale
+    raise ValueError(f"unknown fusable codec {codec!r} "
+                     f"(expected one of {CODECS})")
+
+
+def fused_boundary_ref(x: jnp.ndarray, clip, noise_scale,
+                       noise: jnp.ndarray, *, codec: str = "none"
+                       ) -> jnp.ndarray:
+    """x: (B, N) f32; noise: (B, N) f32.  -> (B, N) f32."""
+    x = x.astype(jnp.float32)
+    q = codec_qdq(x, codec)
+    norms = jnp.linalg.norm(q, axis=1)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(norms, NORM_EPS))
+    return q * scale[:, None] + noise_scale * noise

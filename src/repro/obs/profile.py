@@ -116,12 +116,40 @@ def profile_dp_clip(*, batch: int = 8, n: int = 4096, clip: float = 1.0,
                        hw=hw, runs=runs)
 
 
+def profile_boundary_fuse(*, batch: int = 8, n: int = 4096,
+                          codec: str = "int8", clip: float = 1.0,
+                          sigma: float = 0.5, use_kernel: bool = False,
+                          interpret: bool = True, hw: HwSpec = TPU_V5E,
+                          runs: int = 3) -> KernelProfile:
+    """The fused boundary-crossing stage (kernels/boundary_fuse): codec
+    qdq + per-example clip + Gaussian noise over one flattened (B, N)
+    boundary tensor — what every hop of a composed ``codec+dp`` split
+    stage pays."""
+    from repro.kernels.boundary_fuse.ops import fused_boundary_flat
+    key = jax.random.PRNGKey(2)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (batch, n), jnp.float32)
+    noise = jax.random.normal(k2, (batch, n), jnp.float32)
+    c = jnp.asarray(clip, jnp.float32)
+    s = jnp.asarray(sigma * clip, jnp.float32)
+
+    def fn(t, nz):
+        return fused_boundary_flat(t, c, s, nz, codec=codec,
+                                   use_kernel=use_kernel,
+                                   interpret=interpret)
+
+    kind = "kernel" if use_kernel else "ref"
+    return profile_jit(f"boundary_fuse_{codec}_{kind}_b{batch}_n{n}",
+                       fn, x, noise, hw=hw, runs=runs)
+
+
 def profile_engine_kernels(cfg=None, *, hw: HwSpec = TPU_V5E,
                            runs: int = 3) -> Dict[str, Dict[str, Any]]:
     """Profile the kernels one engine round leans on, sized from ``cfg``
     when given (aggregation width = number of clients; dp_clip on when the
-    privacy subsystem is).  Returns ``{name: profile dict}`` — what the
-    recorder writes to ``profile.json``."""
+    privacy subsystem is; boundary_fuse when the split stage composes).
+    Returns ``{name: profile dict}`` — what the recorder writes to
+    ``profile.json``."""
     num_clients = cfg.fsl.num_clients if cfg is not None else 4
     profiles = [profile_fedavg(num_clients=max(2, num_clients),
                                interpret=True, hw=hw, runs=runs)]
@@ -132,4 +160,12 @@ def profile_engine_kernels(cfg=None, *, hw: HwSpec = TPU_V5E,
         profiles.append(profile_dp_clip(
             use_kernel=bool(cfg and cfg.privacy.use_kernel),
             interpret=True, hw=hw, runs=runs))
+    stage = cfg.split.boundary_stage if cfg is not None else "int8+dp"
+    if "+" in stage:
+        codec = stage.split("+")[0]
+        if codec in ("fp16", "int8"):
+            profiles.append(profile_boundary_fuse(
+                codec=codec,
+                use_kernel=bool(cfg and cfg.split.use_kernel),
+                interpret=True, hw=hw, runs=runs))
     return {p.name: p.to_dict() for p in profiles}

@@ -84,10 +84,18 @@ RULES: Dict[str, Tuple[Rule, ...]] = {
         Rule("scheduling/*/round_time_s", DIR_EQUAL, 0.01),
         Rule("scheduling/*/trace_spans", DIR_EQUAL, 0.0),
         Rule("scheduling/*/stragglers", DIR_EQUAL, 0.0),
+        # pipelined split execution: acceptance gates hold at any size;
+        # virtual round times are deterministic (priced LAN model)
+        Rule("pipeline/speedup_ok", DIR_TRUE),
+        Rule("pipeline/numerics_ok", DIR_TRUE),
+        Rule("pipeline/boundary_fuse/fused_matches", DIR_TRUE),
+        Rule("pipeline/k*/round_time_s", DIR_EQUAL, 0.01),
         # wall-clock: CI CPUs jitter wildly — wide default, overridable
         Rule("dispatch/*_us", DIR_LOWER, 1.0, noisy=True),
         Rule("codecs/*/us_per_epoch", DIR_LOWER, 1.0, noisy=True),
         Rule("scheduling/*/us_per_epoch", DIR_LOWER, 1.0, noisy=True),
+        Rule("pipeline/k*/us_per_epoch", DIR_LOWER, 1.0, noisy=True),
+        Rule("pipeline/boundary_fuse/*_us", DIR_LOWER, 1.0, noisy=True),
     ),
     "BENCH_privacy.json": (
         # deterministic fixed-prefix probes

@@ -136,6 +136,46 @@ def kernel_terms(compiled, hw: HwSpec = TPU_V5E) -> Dict[str, float]:
             "arithmetic_intensity": flops / byts if byts else 0.0}
 
 
+def fused_boundary_terms(batch: int, features: int, *,
+                         codec: str = "int8", hw: HwSpec = TPU_V5E,
+                         compiled=None) -> Dict[str, float]:
+    """Roofline terms for the fused boundary kernel
+    (``kernels/boundary_fuse``): codec qdq + per-example clip + noise
+    over one flattened ``(batch, features)`` crossing tensor.
+
+    The analytic model follows the kernel's phase structure: the input
+    streams from HBM once per grid phase (2 phases for ``fp16``/``none``,
+    3 for ``int8`` — the extra amax pass), the noise tile is read once
+    and the output written once, all fp32:
+
+        bytes = (phases + 2) * 4 * B * N
+
+    FLOP count is ~2 per element per phase (qdq multiply-round, square +
+    accumulate, scale-and-fma) — small against the byte traffic; the
+    fused stage is memory-bound by construction, which is exactly why
+    fusing three traversals into one pays.  Pass ``compiled`` (a lowered
+    ``fused_boundary_flat`` jit artifact) to merge the XLA-measured
+    ``kernel_terms`` under ``measured_*`` keys.
+    """
+    phases = 3 if codec == "int8" else 2
+    n = float(batch) * float(features)
+    flops = 2.0 * phases * n
+    byts = (phases + 2) * 4.0 * n
+    out = {"codec": codec, "batch": float(batch),
+           "features": float(features), "phases": float(phases),
+           "flops": flops, "bytes_accessed": byts,
+           "compute_term_s": flops / hw.peak_flops_bf16,
+           "memory_term_s": byts / hw.hbm_bw,
+           "arithmetic_intensity": flops / byts,
+           # what fusing saves vs three separate traversals (codec pass +
+           # clip-norm pass + scale/noise pass, each read+write)
+           "unfused_bytes_accessed": 3.0 * 2.0 * 4.0 * n}
+    if compiled is not None:
+        out.update({f"measured_{k}": v
+                    for k, v in kernel_terms(compiled, hw).items()})
+    return out
+
+
 def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
                      chips: int, model_flops: float,
                      hw: HwSpec = TPU_V5E,
