@@ -17,6 +17,7 @@ trace export, not two.
 from __future__ import annotations
 
 import os
+import shutil
 from typing import Dict
 
 OBS_DIR = os.path.join(os.path.dirname(__file__), "obs")
@@ -24,7 +25,11 @@ OBS_DIR = os.path.join(os.path.dirname(__file__), "obs")
 
 def obs_over(run_id: str) -> Dict[str, object]:
     """Config overrides that point a trainer's recorder at
-    ``benchmarks/obs/<run_id>``."""
+    ``benchmarks/obs/<run_id>``.  The run dir is wiped first: the JSONL
+    sinks append, so a stale dir from a previous local bench invocation
+    would splice two knob histories together and break ``replay_ok``
+    (fresh CI checkouts never hit this; dirty working trees did)."""
+    shutil.rmtree(os.path.join(OBS_DIR, run_id), ignore_errors=True)
     return {"obs.enabled": True, "obs.out_dir": OBS_DIR,
             "obs.run_id": run_id}
 

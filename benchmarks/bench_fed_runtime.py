@@ -237,6 +237,107 @@ def run(fast: bool = False) -> List[Tuple[str, float, str]]:
         "fused_matches": bool(err <= 1e-5),
         "roofline": fused_boundary_terms(bsz, feat, codec="int8")}
 
+    # 5. scale: rounds-per-second vs population + sharded dispatch ---------
+    from repro.fed.roster import Roster
+    from repro.fed.transport import tree_bytes
+    results["config"]["devices"] = len(jax.devices())
+    update_b = tree_bytes(
+        tr_vec.state.d_params[next(iter(tr_vec.state.d_params))])
+    participants, r_cohorts = (8, 4) if fast else (32, 8)
+    pops = (100, 10_000, 1_000_000)
+    results["scale"] = {"populations": {}, "update_bytes": int(update_b),
+                        "participants": participants,
+                        "cohorts": r_cohorts,
+                        "fan_in": participants / r_cohorts}
+    eps_by_pop = []
+    for pop in pops:
+        r = Roster(pop, participants=participants, cohorts=r_cohorts,
+                   seed=0)
+        t0 = time.time()
+        s = r.sample_round(0)
+        sample_us = (time.time() - t0) * 1e6
+        flat_rps = r.rounds_per_second(update_b, down_bytes=update_b)
+        hier_rps = r.rounds_per_second(update_b, down_bytes=update_b,
+                                       hierarchical=True)
+        wan_flat = r.wan_bytes_per_round(update_b)
+        wan_hier = r.wan_bytes_per_round(update_b, hierarchical=True)
+        eps = r.amplified_epsilon(1.1, rounds=100)
+        eps_by_pop.append(eps)
+        rows.append((f"fed_scale[pop{pop}]", sample_us,
+                     f"rps={flat_rps:.4f} hier_rps={hier_rps:.4f} "
+                     f"wan_mb={wan_flat / 1e6:.2f}->"
+                     f"{wan_hier / 1e6:.2f} eps100={eps:.3f}"))
+        results["scale"]["populations"][str(pop)] = {
+            "sample_us": sample_us,
+            "rounds_per_s_flat": flat_rps,
+            "rounds_per_s_hier": hier_rps,
+            "wan_bytes_flat": int(wan_flat),
+            "wan_bytes_hier": int(wan_hier),
+            "amplified_epsilon_100r": eps,
+            "deterministic": bool(s == r.sample_round(0))}
+    p = results["scale"]["populations"]
+    results["scale"]["analytic_wan_cut_ok"] = bool(all(
+        v["wan_bytes_flat"] >= results["scale"]["fan_in"]
+        * v["wan_bytes_hier"] for v in p.values()))
+    results["scale"]["deterministic"] = bool(all(
+        v["deterministic"] for v in p.values()))
+    # subsampling amplification: epsilon shrinks as the population grows
+    results["scale"]["epsilon_monotone_ok"] = bool(
+        all(a > b for a, b in zip(eps_by_pop, eps_by_pop[1:])))
+
+    # measured two-tier round at the bench's client count: the hierarchy
+    # must cut WAN uplink by >= the cohort fan-in (clients / cohorts)
+    e_cohorts = 2
+    tr_flat = FSLGANTrainer(_cfg(clients), parts, seed=0)
+    m_flat = tr_flat.train_epoch(batches_per_client=batches,
+                                 backend="vectorized")
+    tr_hier = FSLGANTrainer(
+        _cfg(clients, **{"fed.hierarchy_cohorts": e_cohorts}),
+        parts, seed=0)
+    m_hier = tr_hier.train_epoch(batches_per_client=batches,
+                                 backend="vectorized")
+    up_flat = tr_flat.engine.ledger.total_up
+    up_hier = tr_hier.engine.ledger.total_up
+    fan_in = clients / e_cohorts
+    rows.append((f"fed_scale[hier_c{e_cohorts}]", 0.0,
+                 f"wan_up {up_flat}->{up_hier} "
+                 f"cut={up_flat / max(up_hier, 1):.2f}x "
+                 f"(fan_in={fan_in:.1f}) "
+                 f"edge={tr_hier.engine.ledger.total_edge}"))
+    results["scale"]["hier_round"] = {
+        "cohorts": e_cohorts,
+        "wan_up_bytes_flat": int(up_flat),
+        "wan_up_bytes_hier": int(up_hier),
+        "edge_bytes": int(tr_hier.engine.ledger.total_edge),
+        "wan_cut": up_flat / max(up_hier, 1),
+        "fan_in": fan_in,
+        "wan_cut_ok": bool(up_flat >= fan_in * up_hier),
+        "d_loss_delta": None
+        if not (np.isfinite(m_flat["d_loss"])
+                and np.isfinite(m_hier["d_loss"]))
+        else abs(m_flat["d_loss"] - m_hier["d_loss"])}
+
+    # sharded vs unsharded vectorized dispatch (multi-device only: CPU
+    # runs get > 1 device via --xla_force_host_platform_device_count)
+    tr_unsh = FSLGANTrainer(_cfg(clients), parts, seed=0)
+    us_unsh = _time_epochs(
+        lambda: tr_unsh.train_epoch(batches_per_client=batches,
+                                    backend="vectorized"), reps)
+    tr_sh = FSLGANTrainer(_cfg(clients, **{"fed.shard_clients": True}),
+                          parts, seed=0)
+    us_sh = _time_epochs(
+        lambda: tr_sh.train_epoch(batches_per_client=batches,
+                                  backend="vectorized"), reps)
+    shards = tr_sh.feedback[-1].shards
+    rows.append(("fed_scale[sharded]", us_sh,
+                 f"unsharded={us_unsh:.0f}us shards={shards} "
+                 f"devices={len(jax.devices())} "
+                 f"speedup={us_unsh / max(us_sh, 1e-9):.2f}x"))
+    results["scale"]["sharded"] = {
+        "devices": len(jax.devices()), "shards": int(shards),
+        "unsharded_us": us_unsh, "sharded_us": us_sh,
+        "speedup": us_unsh / max(us_sh, 1e-9)}
+
     with open(JSON_PATH, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
     rows.append(("fed_runtime_json", 0.0, f"wrote {JSON_PATH}"))

@@ -399,12 +399,35 @@ class FedConfig:
     # aggregation hot path
     kernel_aggregation: bool = False   # use the fedavg Pallas kernel
     kernel_interpret: bool = False     # Pallas interpret mode (CPU tests)
+    # population scale: map the vectorized backend's stacked client axis
+    # onto a `clients` device mesh (launch/mesh.make_client_mesh +
+    # sharding/specs.stacked_shardings).  Off (default) keeps every
+    # dispatch single-device — the bit-exact unsharded path.  Testable on
+    # CPU via XLA_FLAGS=--xla_force_host_platform_device_count=N.
+    shard_clients: bool = False
+    # two-tier aggregation: >= 2 groups sync-round clients into that many
+    # edge cohorts, each pre-reducing its clients' updates (the fedavg
+    # kernel when kernel_aggregation) BEFORE the WAN hop — only cohort
+    # aggregates cross the WAN.  0/1 = flat FedAvg (bit-exact default).
+    hierarchy_cohorts: int = 0
+    # the client -> edge-aggregator link (LAN/MAN: faster + nearer than
+    # the WAN); the WAN LinkModels above then price only edge -> server
+    edge_uplink_bps: float = 200e6
+    edge_latency_s: float = 0.005
 
     def __post_init__(self) -> None:
         _check_name("fed", "mode", self.mode, FED_MODES)
         _check_name("fed", "backend", self.backend, FED_BACKENDS)
         _check_name("fed", "codec", self.codec, CODECS,
                     aliases=("", "identity"))
+        if self.hierarchy_cohorts < 0:
+            raise ValueError(
+                f"fed.hierarchy_cohorts must be >= 0, got "
+                f"{self.hierarchy_cohorts}")
+        if self.edge_uplink_bps <= 0.0:
+            raise ValueError(
+                f"fed.edge_uplink_bps must be > 0, got "
+                f"{self.edge_uplink_bps}")
 
 
 @dataclass
@@ -438,6 +461,10 @@ class SplitConfig:
     # executor, bit-exact with the pre-pipeline step; K > 1 overlaps
     # device segments, clamped per step to a divisor of the batch size)
     pipeline_microbatches: int = 1
+    # compile the K-micro-batch loop as ONE lax.scan instead of K unrolled
+    # staged chains (trace size O(1) in K; tolerance-pinned against the
+    # unrolled loop).  Off (default) keeps the unrolled reference path.
+    pipeline_scan: bool = False
     # fuse composed codec+dp stages into kernels/boundary_fuse (the
     # unfused ComposedBoundaryStage remains the pinned reference)
     fuse_boundary: bool = True

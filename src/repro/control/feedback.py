@@ -100,6 +100,13 @@ class RoundFeedback:
     # backend="auto": dispatch probe wall-times (µs per backend) from
     # the round that ran the probe; empty otherwise
     backend_probe_us: Mapping[str, float] = field(default_factory=dict)
+    # population-scale topology in force this round: client->edge bytes
+    # (the pre-reduce hop; 0 on the flat path), edge cohorts (0/1 = flat
+    # single-tier), and `clients`-mesh shards the vectorized dispatch
+    # placed stacked inputs across (1 = single-device).
+    edge_bytes: int = 0
+    cohorts: int = 0
+    shards: int = 1
 
     def summary(self) -> Dict[str, object]:
         """Compact printable view (the demos use this as schema docs)."""
@@ -111,6 +118,7 @@ class RoundFeedback:
             "split_strategy": self.split_strategy,
             "up_bytes": self.up_bytes,
             "lan_bytes": self.lan_bytes,
+            "edge_bytes": self.edge_bytes,
             "codec_error": self.codec_error,
             "round_time_s": round(self.round_time_s, 3),
             "num_clients": self.num_clients,

@@ -278,7 +278,8 @@ class FSLGANTrainer:
             for cid, plan in self.plans.items():
                 ex = SplitExecution(plan, apply_layer, tails, stage=stage,
                                     stages=self._boundary_stages(plan),
-                                    pipeline_microbatches=pipeline_k)
+                                    pipeline_microbatches=pipeline_k,
+                                    pipeline_scan=self.cfg.split.pipeline_scan)
                 self.split_execs[cid] = ex
                 if ex.signature not in bytes_by_sig:
                     bytes_by_sig[ex.signature] = ex.step_wire_bytes(
@@ -388,9 +389,20 @@ class FSLGANTrainer:
                 local_steps=steps))
         self._pipeline_speedup = float(np.mean(speedups)) if speedups \
             else 1.0
+        # static cohort map for two-tier aggregation: roster order sliced
+        # into contiguous cohorts, shared by the engine's edge pre-reduce
+        # AND the executor's (round, cohort, client) noise-key chain so
+        # grouping and key derivation can never disagree
+        self._cohort_of = None
+        cohorts = int(getattr(self.cfg.fed, "hierarchy_cohorts", 0))
+        if cohorts >= 2:
+            from repro.fed.hierarchy import assign_cohorts
+            grouped = assign_cohorts([s.client_id for s in specs], cohorts)
+            cmap = {cid: c for c, ms in grouped.items() for cid in ms}
+            self._cohort_of = lambda cid: cmap.get(cid, 0)
         self.engine = FederationEngine(
             self.cfg.fed, specs, weighted=self.cfg.fsl.weighted_average,
-            uplink_stage=self._uplink_stage)
+            uplink_stage=self._uplink_stage, cohort_of=self._cohort_of)
         self._engine_batches = batches_per_client
         if self.recorder is not None:
             self._attach_recorder(by_id)
@@ -412,6 +424,7 @@ class FSLGANTrainer:
             # back round actually aggregated
             self.engine.set_digester(tree_digest)
         self.engine.ledger.observer = self._observe_wire
+        self.engine.ledger.edge_observer = self._observe_edge
         self._trace_timelines = {}
         if self.cfg.split.enabled:
             for cid, ex in self.split_execs.items():
@@ -437,6 +450,13 @@ class FSLGANTrainer:
             reg.counter(f"wire.client.{cid}.down_bytes").inc(down)
         if lan:
             reg.counter(f"wire.client.{cid}.lan_bytes").inc(lan)
+
+    def _observe_edge(self, cid: str, nbytes: int) -> None:
+        """TrafficLedger edge observer -> per-client client->edge wire
+        counter (the two-tier pre-reduce hop)."""
+        if nbytes:
+            self.recorder.registry.counter(
+                f"wire.client.{cid}.edge_bytes").inc(nbytes)
 
     def _sample_round_batches(self, cid: str, steps: int
                               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -472,7 +492,33 @@ class FSLGANTrainer:
             sample=self._sample_round_batches,
             opt_lookup=lambda cid: self.state.d_opt[cid],
             default_steps=batches_per_client, hyper=hyper,
-            round_key=round_key)
+            round_key=round_key,
+            mesh=self._client_mesh() if backend == "vectorized" else None,
+            cohort_of=getattr(self, "_cohort_of", None))
+
+    def _client_mesh(self):
+        """The cached `clients` mesh (launch/mesh.make_client_mesh) when
+        ``fed.shard_clients`` is on and the host exposes > 1 device —
+        None otherwise, which keeps single-device placement (and the
+        frozen-control bit-exactness pin) untouched."""
+        if not getattr(self.cfg.fed, "shard_clients", False):
+            return None
+        if not getattr(self, "_mesh_resolved", False):
+            from repro.launch.mesh import make_client_mesh, mesh_chips
+            mesh = make_client_mesh()
+            self._mesh = mesh if mesh_chips(mesh) > 1 else None
+            self._mesh_resolved = True
+        return self._mesh
+
+    def _num_shards(self, backend: str) -> int:
+        """`clients`-mesh devices the round's stacked dispatch spanned."""
+        if backend != "vectorized":
+            return 1
+        mesh = self._client_mesh()
+        if mesh is None:
+            return 1
+        from repro.launch.mesh import mesh_chips
+        return int(mesh_chips(mesh))
 
     def _resolve_auto_backend(self, batches_per_client: int
                               ) -> Tuple[str, Dict[str, float]]:
@@ -802,6 +848,8 @@ class FSLGANTrainer:
             "stragglers": float(len(rep.stragglers)),
             "mean_staleness": rep.mean_staleness,
         }
+        if rep.traffic.total_edge:
+            metrics["edge_mbytes"] = rep.traffic.total_edge / 1e6
         loads: Dict[str, float] = {}
         if self.split_execs:
             # executed-split reporting: measured boundary bytes that
@@ -850,7 +898,10 @@ class FSLGANTrainer:
             boundary_dcor=probe,
             pipeline_microbatches=self._pipeline_k(),
             pipeline_speedup=self._pipeline_speedup,
-            backend_probe_us=probe_us)
+            backend_probe_us=probe_us,
+            edge_bytes=int(rep.traffic.total_edge),
+            cohorts=int(getattr(self.cfg.fed, "hierarchy_cohorts", 0)),
+            shards=self._num_shards(backend))
         self.feedback.append(fb)
 
         # watchtower: check the round, act per policy, THEN digest the

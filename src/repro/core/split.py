@@ -410,7 +410,8 @@ class SplitExecution:
     def __init__(self, plan: SplitPlan, apply_layer, tails: Sequence, *,
                  stage: Optional[BoundaryStage] = None,
                  stages: Optional[Sequence[BoundaryStage]] = None,
-                 pipeline_microbatches: int = 1):
+                 pipeline_microbatches: int = 1,
+                 pipeline_scan: bool = False):
         """``stage`` applies one stage uniformly at every boundary;
         ``stages`` assigns a stage PER boundary (index-aligned with
         ``self.boundaries``) — the split controller's lever for noising
@@ -423,12 +424,20 @@ class SplitExecution:
         per-batch wall time priced by ``overlap_schedule`` instead of
         the additive chain.  ``1`` (default) is the sequential step,
         bit-exact with the pre-pipeline executor.
+
+        ``pipeline_scan`` compiles the K-micro-batch loop as ONE
+        ``lax.scan`` over the chunk axis instead of K unrolled copies of
+        the staged chain — trace size (and compile time) O(1) in K,
+        tolerance-pinned against the unrolled loop.  Only the
+        non-collecting path scans; ``collect=True`` (boundary-tensor
+        capture) keeps the Python loop, whose per-chunk records it needs.
         """
         self.plan = plan
         self.apply_layer = apply_layer
         self.tails = tuple(tails)
         self.stage = stage or BoundaryStage()
         self.pipeline_microbatches = max(1, int(pipeline_microbatches))
+        self.pipeline_scan = bool(pipeline_scan)
         self.segments = plan_segments(plan)
         self.boundaries: List[Boundary] = []
         depth = 0
@@ -473,7 +482,8 @@ class SplitExecution:
         base = (tuple(b.depth for b in self.boundaries),
                 tuple(s.signature for s in self.stages))
         if self.pipeline_microbatches > 1:
-            return base + (("pipeline", self.pipeline_microbatches),)
+            tag = "pipeline-scan" if self.pipeline_scan else "pipeline"
+            return base + ((tag, self.pipeline_microbatches),)
         return base
 
     # ------------------------------------------------------------------
@@ -578,6 +588,8 @@ class SplitExecution:
         if key is None and self.stochastic:
             key = jax.random.PRNGKey(0)
         mb = bsz // k
+        if self.pipeline_scan and not collect:
+            return self._run_pipelined_scan(params, batches, key, k, mb)
         loss = None
         grads = None
         recs = []
@@ -600,6 +612,35 @@ class SplitExecution:
                         jnp.concatenate([r[d][b][p] for r in recs], axis=0)
                         for p in range(self.num_passes))
         return loss, grads, records
+
+    def _run_pipelined_scan(self, params, batches, key, k: int, mb: int):
+        """The K-micro-batch accumulation as ONE ``lax.scan``: chunk 0
+        initializes the carry (same accumulation order as the unrolled
+        loop — l0, l0+l1, ...), the scan body folds in each chunk's
+        micro-batch index for its stage key exactly like the loop does.
+        The staged chain is traced twice total (init + body) regardless
+        of K, vs K times unrolled."""
+        stacked = tuple(b[:k * mb].reshape((k, mb) + tuple(b.shape[1:]))
+                        for b in batches)
+        l0, g0, _ = self.run(
+            params, tuple(s[0] for s in stacked),
+            None if key is None else jax.random.fold_in(key, 0),
+            collect=False)
+
+        def body(carry, xs):
+            m, chunk = xs
+            mkey = None if key is None else jax.random.fold_in(key, m)
+            l, g, _ = self.run(params, chunk, mkey, collect=False)
+            cl, cg = carry
+            return (cl + l, jax.tree.map(jnp.add, cg, g)), None
+
+        (loss, grads), _ = jax.lax.scan(
+            body, (l0, g0),
+            (jnp.arange(1, k), tuple(s[1:] for s in stacked)))
+        inv = 1.0 / k
+        return (loss * inv, jax.tree.map(lambda g: g * inv, grads),
+                {"fwd": [None] * self.num_boundaries,
+                 "bwd": [None] * self.num_boundaries})
 
     def value_and_grad(self, params, real, fake, key=None):
         """The D-loss contract of ``fed/programs.make_local_step``:

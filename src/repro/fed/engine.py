@@ -48,10 +48,12 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.fed.events import ARRIVE, FINISH, EventQueue, make_availability
+from repro.fed.hierarchy import HierarchicalAggregator
 from repro.fed.policies import ClientUpdate, make_policy
 from repro.fed.programs import as_program
 from repro.fed.transport import (LinkModel, TrafficLedger, apply_delta,
-                                 delta_tree, make_codec, tree_rel_error)
+                                 delta_tree, make_codec, tree_bytes,
+                                 tree_rel_error)
 
 # legacy program shape: local_update(client_id, start_params)
 #   -> (trained_params, info_dict)
@@ -110,7 +112,7 @@ class RoundReport:
 
 class FederationEngine:
     def __init__(self, fed_cfg, specs: List[ClientSpec], *,
-                 weighted: bool = True, uplink_stage=None):
+                 weighted: bool = True, uplink_stage=None, cohort_of=None):
         self.cfg = fed_cfg
         self.roster = [s.client_id for s in specs]
         self.specs = {s.client_id: s for s in specs}
@@ -131,6 +133,19 @@ class FederationEngine:
         self.deadline_s = float(fed_cfg.deadline_s)
         self.uplink = LinkModel(fed_cfg.wan_latency_s, fed_cfg.uplink_bps)
         self.downlink = LinkModel(fed_cfg.wan_latency_s, fed_cfg.downlink_bps)
+        # two-tier edge aggregation (fed/hierarchy): cohorts >= 2 on the
+        # sync path routes client updates over the cheap edge link, pre-
+        # reduces per cohort, and uplinks ONE tree per cohort across the
+        # WAN.  0/1 keeps the flat, bit-exact single-tier path.
+        cohorts = int(getattr(fed_cfg, "hierarchy_cohorts", 0))
+        self.edge_link = LinkModel(
+            float(getattr(fed_cfg, "edge_latency_s", 0.005)),
+            float(getattr(fed_cfg, "edge_uplink_bps", 200e6)))
+        self.hierarchy: Optional[HierarchicalAggregator] = None
+        if cohorts >= 2 and fed_cfg.mode == "sync":
+            self.hierarchy = HierarchicalAggregator(
+                cohorts, use_kernel=fed_cfg.kernel_aggregation,
+                interpret=fed_cfg.kernel_interpret, cohort_of=cohort_of)
         self.availability = make_availability(fed_cfg.availability,
                                               fed_cfg.availability_seed)
         self.clock = 0.0
@@ -234,10 +249,12 @@ class FederationEngine:
         db = lambda cid: down_by.get(cid, down_bytes)  # noqa: E731
         self._lan_by = dict(lan_bytes_by_client or {})
         self._timelines = dict(timeline_by_client or {})
-        if self.cfg.mode == "sync":
-            rep = self._run_sync(global_tree, program, db)
-        else:
+        if self.cfg.mode != "sync":
             rep = self._run_async(global_tree, program, db)
+        elif self.hierarchy is not None:
+            rep = self._run_sync_hier(global_tree, program, db)
+        else:
+            rep = self._run_sync(global_tree, program, db)
         self.round_idx += 1
         if self._digester is not None:
             rep.global_digest = self._digester(rep.global_params)
@@ -247,6 +264,8 @@ class FederationEngine:
             self.ledger.record(cid, down=rep.traffic.down_bytes[cid])
         for cid in rep.traffic.lan_bytes:
             self.ledger.record(cid, lan=rep.traffic.lan_bytes[cid])
+        for cid in rep.traffic.edge_bytes:
+            self.ledger.record_edge(cid, rep.traffic.edge_bytes[cid])
         return rep
 
     # ------------------------------------------------------------------
@@ -422,6 +441,145 @@ class FederationEngine:
         if self.tracer is not None:
             self._emit_sync_spans(rep, t0, down_t)
         return rep
+
+    # ------------------------------------------------------------------
+    def _run_sync_hier(self, global_tree, program, db) -> RoundReport:
+        """Sync round through the two-tier edge hierarchy.
+
+        Client updates travel the cheap edge link (``edge_bytes``); each
+        cohort's edge pre-reduces its members' decoded updates with the
+        same weighted FedAvg the server applies, and only ONE aggregate
+        per cohort crosses the WAN (``up_bytes`` keyed ``cohort<k>``).
+        Weighted-mean-of-weighted-means equals the flat aggregate up to
+        float reassociation, so this path pins against :meth:`_run_sync`
+        at tolerance, never bit-exact.  A cohort barrier releases at its
+        slowest surviving member; the round at the slowest cohort."""
+        rep = RoundReport(global_params=global_tree)
+        participants, rep.unavailable = self._split_roster()
+        t0 = self.clock
+        deadline = self.deadline_s
+        down_t = {cid: self.downlink.transfer_time(db(cid))
+                  for cid in participants}
+
+        runnable: List[str] = []
+        for cid in participants:
+            if deadline and down_t[cid] + self.specs[cid].compute_time_s \
+                    > deadline:
+                rep.stragglers.append(cid)
+                rep.traffic.record(cid, down=db(cid))
+                rep.finish_s[cid] = (down_t[cid]
+                                     + self.specs[cid].compute_time_s)
+            else:
+                runnable.append(cid)
+        results = program.run(runnable, global_tree)
+
+        # per-client: codec over the EDGE hop, deadline at edge arrival
+        landed: Dict[str, Tuple[Any, float]] = {}   # cid -> (decoded, w)
+        edge_finish: Dict[str, float] = {}
+        for res in results:
+            cid = res.client_id
+            spec = self.specs[cid]
+            decoded, up_b, cerr = self._codec_roundtrip(cid, global_tree,
+                                                        res.params)
+            finish = down_t[cid] + spec.compute_time_s \
+                + self.edge_link.transfer_time(up_b)
+            rep.traffic.record(cid, down=db(cid),
+                               lan=self._lan_by.get(cid, 0))
+            rep.traffic.record_edge(cid, up_b)
+            rep.client_infos.append((cid, res.info))
+            rep.finish_s[cid] = finish
+            rep.codec_error[cid] = cerr
+            if deadline and finish > deadline:
+                rep.stragglers.append(cid)
+                continue
+            rep.participated.append(cid)
+            if res.opt_state is not None:
+                rep.opt_states[cid] = res.opt_state
+            rep.staleness[cid] = 0
+            rep.staleness_events.append(0)
+            landed[cid] = (decoded, spec.weight)
+            edge_finish[cid] = finish
+
+        # per-cohort: edge pre-reduce, then ONE WAN uplink per cohort
+        cohort_finishes: List[float] = []
+        cohort_trace: List[Dict[str, Any]] = []
+        for red in self.hierarchy.reduce_all(landed):
+            wan_b = tree_bytes(red.aggregate)
+            ready = max(edge_finish[m] for m in red.members)
+            finish = ready + self.uplink.transfer_time(wan_b)
+            ckey = f"cohort{red.cohort}"
+            rep.traffic.record(ckey, up=wan_b)
+            cohort_finishes.append(finish)
+            cohort_trace.append({"cohort": red.cohort, "ready": ready,
+                                 "finish": finish, "bytes": wan_b,
+                                 "members": list(red.members)})
+            self.policy.on_update(
+                global_tree, ClientUpdate(ckey, red.aggregate, red.weight,
+                                          0, self.clock + finish))
+
+        new_global = self.policy.on_round_end(global_tree)
+        if rep.participated:
+            self.version += 1
+        rep.round_time_s = max(cohort_finishes) if cohort_finishes else 0.0
+        if deadline and rep.stragglers:
+            rep.round_time_s = max(rep.round_time_s, deadline)
+        self.clock += rep.round_time_s
+        rep.clock_s = self.clock
+        rep.global_params = new_global
+        rep.version = self.version
+        if self.tracer is not None:
+            self._emit_hier_spans(rep, t0, down_t, cohort_trace)
+        return rep
+
+    def _emit_hier_spans(self, rep: RoundReport, t0: float,
+                         down_t: Dict[str, float],
+                         cohort_trace: List[Dict[str, Any]]) -> None:
+        """Round span -> per-client down/exec/edge-up spans -> one cohort
+        span per edge (cat="cohort": pre-reduce ready time to WAN
+        arrival) -> aggregate."""
+        tr = self.tracer
+        rnd = tr.record(
+            f"round {self.round_idx}", cat="round", track="server",
+            v_start=t0, v_end=t0 + rep.round_time_s,
+            args={"mode": "sync", "hierarchy": True,
+                  "cohorts": len(cohort_trace),
+                  "participated": len(rep.participated),
+                  "stragglers": len(rep.stragglers),
+                  "codec": self.codec_name, "deadline_s": self.deadline_s})
+        for cid, dt in down_t.items():
+            spec = self.specs[cid]
+            tr.record(f"down {cid}", cat="downlink", track=cid,
+                      v_start=t0, v_end=t0 + dt, parent=rnd,
+                      args={"bytes": rep.traffic.down_bytes.get(cid, 0)})
+            args: Dict[str, Any] = {}
+            if cid in rep.stragglers:
+                args["dropped"] = True
+            if cid not in rep.codec_error:
+                args["executed"] = False
+                self._emit_exec_span(tr, rnd, cid, t0 + dt,
+                                     spec.compute_time_s, args)
+                continue
+            self._emit_exec_span(tr, rnd, cid, t0 + dt,
+                                 spec.compute_time_s, args)
+            fin = rep.finish_s[cid]
+            up_dur = max(0.0, fin - dt - spec.compute_time_s)
+            tr.record(f"edge-up {cid}", cat="uplink", track=cid,
+                      v_start=t0 + fin - up_dur, v_end=t0 + fin, parent=rnd,
+                      args={"bytes": rep.traffic.edge_bytes.get(cid, 0),
+                            "tier": "edge", "codec": self.codec_name,
+                            "landed": cid in rep.participated})
+        for ct in cohort_trace:
+            tr.record(f"cohort {ct['cohort']}", cat="cohort",
+                      track=f"edge{ct['cohort']}",
+                      v_start=t0 + ct["ready"], v_end=t0 + ct["finish"],
+                      parent=rnd,
+                      args={"members": len(ct["members"]),
+                            "wan_bytes": ct["bytes"]})
+        tr.record("aggregate", cat="aggregate", track="server",
+                  v_start=t0 + rep.round_time_s, v_end=t0 + rep.round_time_s,
+                  parent=rnd,
+                  args={"num_updates": len(cohort_trace),
+                        "version": rep.version})
 
     # ------------------------------------------------------------------
     def _run_async(self, global_tree, program, db) -> RoundReport:

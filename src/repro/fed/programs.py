@@ -400,7 +400,7 @@ class RoundExecutor:
                  sample: Callable[[str, int], Tuple[jnp.ndarray, jnp.ndarray]],
                  opt_lookup: Callable[[str], Any], default_steps: int,
                  hyper: Optional[Dict[str, ClientHyper]] = None,
-                 round_key=None):
+                 round_key=None, mesh=None, cohort_of=None):
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; "
                              f"expected one of {BACKENDS}")
@@ -411,6 +411,17 @@ class RoundExecutor:
         self.default_steps = int(default_steps)
         self.hyper = hyper or {}
         self.round_key = round_key
+        # client-axis mesh (launch/mesh.make_client_mesh): when set, the
+        # vectorized dispatch places every stacked input on the mesh's
+        # `clients` axis before calling the jitted program, so client
+        # shards execute on separate devices.  None = single-device
+        # placement (bit-exact default).
+        self.mesh = mesh
+        # cohort assigner (e.g. Roster.cohort_of_cid) folded into the
+        # noise-key chain: (round, cohort, client, execution).  None means
+        # cohort 0 for everyone — a uniform chain either way, so keys stay
+        # reproducible across backends and topologies.
+        self.cohort_of = cohort_of
         self._opt_overlay: Dict[str, Any] = {}
         self._exec_idx: Dict[str, int] = {}
         # stable roster index for noise-key derivation: folding in a hash
@@ -433,22 +444,41 @@ class RoundExecutor:
         return self.program.base_lr * (h.lr_scale if h else 1.0)
 
     def _key_for(self, cid: str):
-        """Noise key for this execution: (round key, client roster index,
-        exec index).  Deterministic per schedule, identical across
-        backends, collision-free across clients."""
+        """Noise key for this execution: (round key, cohort, client roster
+        index, exec index) — the roster's ``(round, cohort, client_id)``
+        chain plus the execution counter for async re-cycles.
+        Deterministic per schedule, identical across backends and
+        aggregation topologies, collision-free across clients (cohort is
+        folded in *before* the roster index, and the index is already
+        unique across cohorts, so distinct clients can never collide)."""
         if self.round_key is None:
             return None
         if cid not in self._cid_index:
             self._cid_index[cid] = len(self._cid_index)
         i = self._exec_idx.get(cid, 0)
         self._exec_idx[cid] = i + 1
-        base = jax.random.fold_in(self.round_key, self._cid_index[cid])
+        cohort = int(self.cohort_of(cid)) if self.cohort_of else 0
+        base = jax.random.fold_in(self.round_key, cohort)
+        base = jax.random.fold_in(base, self._cid_index[cid])
         return jax.random.fold_in(base, i)
 
     def _opt_for(self, cid: str):
         if cid in self._opt_overlay:
             return self._opt_overlay[cid]
         return self.opt_lookup(cid)
+
+    def _shard_stacked(self, trees):
+        """Place stacked per-client inputs on the `clients` mesh axis.
+
+        Every leaf's dim 0 is the client axis; other dims replicate.  A
+        client count that doesn't divide the mesh replicates instead
+        (sharding/specs.logical_spec policy), so ragged last groups still
+        run — just without the multi-device split."""
+        from repro.sharding.specs import client_axis_rules, stacked_shardings
+        rules = client_axis_rules(self.mesh)
+        return tuple(
+            jax.device_put(t, stacked_shardings(self.mesh, t, rules=rules))
+            for t in trees)
 
     # ------------------------------------------------------------------
     def run(self, cids: List[str], start_params) -> List[ClientResult]:
@@ -499,14 +529,19 @@ class RoundExecutor:
         for sig, idxs in sig_groups.items():
             stacked_p = stack_trees([start_params] * len(idxs))
             stacked_o = stack_trees([self._opt_for(cids[i]) for i in idxs])
+            stacked_r = jnp.stack([reals_l[i] for i in idxs])
+            stacked_f = jnp.stack([fakes_l[i] for i in idxs])
+            stacked_k = jnp.stack([keys[i] for i in idxs])
+            stacked_m = jnp.asarray([mask_l[i] for i in idxs], bool)
+            if self.mesh is not None:
+                stacked_p, stacked_o, stacked_r, stacked_f, stacked_k, \
+                    stacked_m = self._shard_stacked(
+                        (stacked_p, stacked_o, stacked_r, stacked_f,
+                         stacked_k, stacked_m))
             new_p, new_o, losses = self.program.run_vectorized(
-                stacked_p, stacked_o,
-                jnp.stack([reals_l[i] for i in idxs]),
-                jnp.stack([fakes_l[i] for i in idxs]),
+                stacked_p, stacked_o, stacked_r, stacked_f,
                 lrs=[self.lr_for(cids[i]) for i in idxs],
-                keys=jnp.stack([keys[i] for i in idxs]),
-                mask=jnp.asarray([mask_l[i] for i in idxs], bool),
-                signature=sig)
+                keys=stacked_k, mask=stacked_m, signature=sig)
             for j, i in enumerate(idxs):
                 cid, s = cids[i], steps[i]
                 p = jax.tree.map(lambda x: x[j], new_p)

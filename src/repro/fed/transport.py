@@ -114,19 +114,28 @@ class LinkModel:
 class TrafficLedger:
     """Per-round, per-client byte accounting (benchmarks read this).
 
-    Three budgets: WAN uplink (D params/deltas), WAN downlink (fake
-    batches), and the LAN *inside* each client's split chain — the measured
-    per-boundary payloads of executed split training
+    Four budgets: WAN uplink (D params/deltas — under hierarchical
+    aggregation, keyed by ``cohort<k>`` since only the pre-reduced edge
+    aggregates cross the WAN), WAN downlink (fake batches), the LAN
+    *inside* each client's split chain — the measured per-boundary
+    payloads of executed split training
     (``core/split.SplitExecution.step_wire_bytes``), zero when the client
-    trains unsplit.
+    trains unsplit — and the client→edge tier: bytes each client uplinks
+    to its edge aggregator before the cohort pre-reduce (empty on the
+    flat path).
     """
     up_bytes: Dict[str, int] = field(default_factory=dict)
     down_bytes: Dict[str, int] = field(default_factory=dict)
     lan_bytes: Dict[str, int] = field(default_factory=dict)
+    edge_bytes: Dict[str, int] = field(default_factory=dict)
     # observability hook: called as observer(client_id, up, down, lan) on
     # every record (repro.obs feeds per-client wire counters from it);
     # None — the default — keeps the ledger a plain accumulator
     observer: Optional[Callable[[str, int, int, int], None]] = \
+        field(default=None, repr=False, compare=False)
+    # separate hook for the edge tier — keeps the 4-arg observer
+    # signature stable for installed observers that predate hierarchy
+    edge_observer: Optional[Callable[[str, int], None]] = \
         field(default=None, repr=False, compare=False)
 
     def record(self, client_id: str, *, up: int = 0, down: int = 0,
@@ -140,6 +149,13 @@ class TrafficLedger:
         if self.observer is not None:
             self.observer(client_id, int(up), int(down), int(lan))
 
+    def record_edge(self, client_id: str, nbytes: int) -> None:
+        """Client→edge uplink bytes (the pre-reduce hop)."""
+        self.edge_bytes[client_id] = (self.edge_bytes.get(client_id, 0)
+                                      + int(nbytes))
+        if self.edge_observer is not None:
+            self.edge_observer(client_id, int(nbytes))
+
     @property
     def total_up(self) -> int:
         return sum(self.up_bytes.values())
@@ -151,6 +167,10 @@ class TrafficLedger:
     @property
     def total_lan(self) -> int:
         return sum(self.lan_bytes.values())
+
+    @property
+    def total_edge(self) -> int:
+        return sum(self.edge_bytes.values())
 
 
 # ---------------------------------------------------------------------------

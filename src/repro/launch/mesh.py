@@ -28,6 +28,18 @@ def make_host_mesh(model_parallel: int = 1) -> Mesh:
     return jax.make_mesh((n // mp, mp), ("data", "model"))
 
 
+def make_client_mesh(max_devices: int = 0) -> Mesh:
+    """1-D mesh over this host's devices with the single axis ``clients``
+    — what the federation runtime shards the vectorized program's stacked
+    client axis along (sharding/specs.stacked_shardings).  On CPU, set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before first
+    jax init to get N > 1.  ``max_devices`` > 0 caps the mesh size."""
+    import numpy as np
+    devs = jax.devices()
+    n = len(devs) if max_devices <= 0 else min(len(devs), int(max_devices))
+    return Mesh(np.array(devs[:n]), ("clients",))
+
+
 def mesh_chips(mesh) -> int:
     n = 1
     for v in mesh.shape.values():

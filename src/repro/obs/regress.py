@@ -90,12 +90,28 @@ RULES: Dict[str, Tuple[Rule, ...]] = {
         Rule("pipeline/numerics_ok", DIR_TRUE),
         Rule("pipeline/boundary_fuse/fused_matches", DIR_TRUE),
         Rule("pipeline/k*/round_time_s", DIR_EQUAL, 0.01),
+        # population scale: acceptance gates (size-independent booleans),
+        # deterministic roster resampling, and the analytic byte/epsilon
+        # model — all exact; roster sampling wall-clock is noisy
+        Rule("scale/analytic_wan_cut_ok", DIR_TRUE),
+        Rule("scale/deterministic", DIR_TRUE),
+        Rule("scale/epsilon_monotone_ok", DIR_TRUE),
+        Rule("scale/hier_round/wan_cut_ok", DIR_TRUE),
+        Rule("scale/hier_round/wan_up_bytes_hier", DIR_LOWER, 0.01),
+        Rule("scale/hier_round/wan_cut", DIR_HIGHER, 0.01),
+        Rule("scale/populations/*/wan_bytes_flat", DIR_EQUAL, 0.0),
+        Rule("scale/populations/*/wan_bytes_hier", DIR_EQUAL, 0.0),
+        Rule("scale/populations/*/amplified_epsilon_100r",
+             DIR_LOWER, 0.01),
+        Rule("scale/populations/*/rounds_per_s_hier", DIR_HIGHER, 0.01),
         # wall-clock: CI CPUs jitter wildly — wide default, overridable
         Rule("dispatch/*_us", DIR_LOWER, 1.0, noisy=True),
         Rule("codecs/*/us_per_epoch", DIR_LOWER, 1.0, noisy=True),
         Rule("scheduling/*/us_per_epoch", DIR_LOWER, 1.0, noisy=True),
         Rule("pipeline/k*/us_per_epoch", DIR_LOWER, 1.0, noisy=True),
         Rule("pipeline/boundary_fuse/*_us", DIR_LOWER, 1.0, noisy=True),
+        Rule("scale/populations/*/sample_us", DIR_LOWER, 1.0, noisy=True),
+        Rule("scale/sharded/*_us", DIR_LOWER, 1.0, noisy=True),
     ),
     "BENCH_privacy.json": (
         # deterministic fixed-prefix probes

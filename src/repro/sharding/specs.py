@@ -27,7 +27,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 MeshAxes = Union[None, str, Tuple[str, ...]]
 
 LOGICAL = ("embed", "mlp", "kv", "experts", "vocab", "batch", "seq",
-           "heads", "state", "layers", "window", None)
+           "heads", "state", "layers", "window", "clients", None)
 
 
 @dataclass
@@ -159,3 +159,32 @@ def tree_shardings(mesh: Mesh, rules: AxisRules, params_tree, logical_tree):
             f"param/spec tree mismatch:\n  params: {tdef_p}\n  specs:  {tdef_l}")
     shardings = [spec_for_param(mesh, rules, p, l) for p, l in zip(flat_p, flat_l)]
     return jax.tree.unflatten(tdef_p, shardings)
+
+
+# ---------------------------------------------------------------------------
+# Stacked client-axis sharding (federation runtime)
+#
+# The vectorized client program (fed/programs.LocalProgram.run_vectorized)
+# stacks every per-client tree/batch along a leading `clients` axis.  These
+# helpers place those stacked trees on a 1-D `clients` mesh
+# (launch/mesh.make_client_mesh): dim 0 is the `clients` logical axis, all
+# other dims replicate, and — per logical_spec's policy — a client count
+# that does not divide the mesh replicates instead of failing.
+# ---------------------------------------------------------------------------
+
+def client_axis_rules(mesh: Mesh, axis: str = "clients") -> AxisRules:
+    """Rules mapping the `clients` logical axis onto ``axis`` of ``mesh``
+    (replicated when the mesh has no such axis)."""
+    ax = axis if axis in mesh.axis_names else None
+    return AxisRules(rules={"clients": ax})
+
+
+def stacked_shardings(mesh: Mesh, tree, *, axis: str = "clients",
+                      rules: Optional[AxisRules] = None):
+    """NamedShardings for a stacked per-client tree: every leaf's leading
+    dim is the `clients` logical axis, the rest replicate.  Works for
+    parameter/optimizer stacks and (C, T, B, ...) batch arrays alike."""
+    rules = client_axis_rules(mesh, axis) if rules is None else rules
+    logical = jax.tree.map(
+        lambda l: Lg(*(("clients",) + (None,) * (l.ndim - 1))), tree)
+    return tree_shardings(mesh, rules, tree, logical)
