@@ -40,6 +40,23 @@ def finish(tr) -> str:
     return tr.recorder.run_dir
 
 
+def record_rows(run_id: str, rows) -> str:
+    """Record a trainer-less bench's output rows (``(name, us, notes)``
+    tuples) as a metrics JSONL under ``benchmarks/obs/<run_id>`` — the
+    same artifact layout the trainer benches leave, so ``repro.obs``
+    tooling (load_jsonl, diff) reads artifact-driven benches like
+    bench_roofline too."""
+    from repro.obs import JsonlSink
+    run_dir = os.path.join(OBS_DIR, run_id)
+    shutil.rmtree(run_dir, ignore_errors=True)
+    os.makedirs(run_dir, exist_ok=True)
+    path = os.path.join(run_dir, "metrics.jsonl")
+    with JsonlSink(path) as sink:
+        for name, us, notes in rows:
+            sink.write({"name": name, "us": float(us), "notes": notes})
+    return run_dir
+
+
 def replay_ok(tr) -> bool:
     """Flush and replay the recorded run offline through the pure
     controller fold — True iff the live knob sequence is reproduced

@@ -338,6 +338,100 @@ def run(fast: bool = False) -> List[Tuple[str, float, str]]:
         "unsharded_us": us_unsh, "sharded_us": us_sh,
         "speedup": us_unsh / max(us_sh, 1e-9)}
 
+    # 6. agg: compressed-domain streaming server reduce ---------------------
+    # decode-then-fedavg (stage one decoded fp32 tree per client, stack,
+    # weighted mean — what server_reduce="decode" pays) vs the streaming
+    # fold (fold each int8 wire into one persistent accumulator) vs the
+    # batched vmap decode-reduce.  Client counts are FIXED at 4/16/64 in
+    # both fast and full mode — the regress gate's boolean rules
+    # (numerics_ok, speedup_ok@64) must hold at any size, so only the
+    # leaf width shrinks under fast.
+    from repro.fed.aggregate import (StreamingAggregator, batched_reduce,
+                                     decode_enc)
+    from repro.fed.programs import fedavg_stacked, stack_trees
+    from repro.fed.transport import make_codec
+    from repro.roofline.analysis import agg_fuse_terms
+    leaf = (1 << 14) if fast else (1 << 17)
+    template = {"w": jnp.zeros((leaf,), jnp.float32),
+                "b": jnp.zeros((leaf // 4,), jnp.float32)}
+    n_total = sum(l.size for l in jax.tree.leaves(template))
+    results["agg"] = {"codec": "int8", "elems": int(n_total),
+                      "roofline_c64": agg_fuse_terms(64, n_total,
+                                                     codec="int8")}
+
+    def _best_us(fn, reps_):
+        fn()                                   # warm-up / compile
+        best = float("inf")
+        for _ in range(max(1, reps_)):
+            t0 = time.time()
+            fn()
+            best = min(best, time.time() - t0)
+        return best * 1e6
+
+    for c in (4, 16, 64):
+        akey = jax.random.PRNGKey(c)
+        encs, wire_b = [], 0
+        for i in range(c):
+            ki = jax.random.fold_in(akey, i)
+            d = {"w": 0.1 * jax.random.normal(ki, (leaf,), jnp.float32),
+                 "b": 0.1 * jax.random.normal(jax.random.fold_in(ki, 1),
+                                              (leaf // 4,), jnp.float32)}
+            enc, nb = make_codec("int8").encode_tree(d)
+            encs.append(enc)
+            wire_b += nb
+        agg_w = [1.0 + (i % 3) for i in range(c)]    # non-uniform weights
+
+        def _decode_reduce():
+            trees = [decode_enc("int8", e, template) for e in encs]
+            out = fedavg_stacked(stack_trees(trees), agg_w)
+            jax.block_until_ready(out)
+            return out
+
+        def _stream():
+            agg = StreamingAggregator("int8")
+            agg.init(template)
+            for e, w in zip(encs, agg_w):
+                agg.fold(e, w)
+            out = agg.finalize()
+            jax.block_until_ready(out)
+            return out
+
+        def _batched():
+            out = batched_reduce("int8", encs, agg_w, template)
+            jax.block_until_ready(out)
+            return out
+
+        want = _decode_reduce()
+        dec_us = _best_us(_decode_reduce, reps)
+        str_us = _best_us(_stream, reps)
+        bat_us = _best_us(_batched, reps)
+
+        def _rel(got):
+            num = den = 0.0
+            for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+                num += float(jnp.sum((a - b) ** 2))
+                den += float(jnp.sum(b ** 2))
+            return (num ** 0.5) / max(den ** 0.5, 1e-12)
+
+        err_s, err_b = _rel(_stream()), _rel(_batched())
+        speedup = dec_us / max(str_us, 1e-9)
+        rows.append((f"fed_agg[c{c}]", str_us,
+                     f"decode={dec_us:.0f}us batched={bat_us:.0f}us "
+                     f"fused_speedup={speedup:.2f}x "
+                     f"err={max(err_s, err_b):.2e} "
+                     f"trees {c}->1"))
+        results["agg"][f"c{c}"] = {
+            "decode_us": dec_us, "stream_us": str_us, "batched_us": bat_us,
+            "fused_speedup": speedup,
+            "speedup_ok": bool(speedup >= 1.2),
+            # one weighted mean's reassociation: fma-level
+            "numerics_ok": bool(err_s <= 2e-5 and err_b <= 2e-5),
+            "rel_err_stream": err_s, "rel_err_batched": err_b,
+            "wire_bytes": int(wire_b),
+            # peak live decoded fp32 trees at the server: the decode
+            # reduce stages one per client, the fold holds one accumulator
+            "peak_trees_decode": c, "peak_trees_stream": 1}
+
     with open(JSON_PATH, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
     rows.append(("fed_runtime_json", 0.0, f"wrote {JSON_PATH}"))

@@ -17,6 +17,8 @@ from repro.configs.registry import get_config
 from repro.core.gan import FSLGANTrainer
 from repro.data import partition_dirichlet, partition_iid, synthetic_mnist
 
+from benchmarks._obs import finish, obs_over
+
 
 def run(fast: bool = False, epochs: int = 8, clients: int = 3
         ) -> List[Tuple[str, float, str]]:
@@ -35,12 +37,16 @@ def run(fast: bool = False, epochs: int = 8, clients: int = 3
     for name, mk in cases.items():
         parts = mk()
         sizes = [len(v) for v in parts.values()]
+        # each partition case leaves a recorded run under benchmarks/obs/
+        # (trace + metrics + feedback — the skew-vs-convergence artifacts)
         cfg = get_config("dcgan-mnist").override({
             "shape.global_batch": 32, "fsl.num_clients": clients,
-            "model.dcgan.base_filters": 8})
+            "model.dcgan.base_filters": 8,
+            **obs_over(f"heterogeneity_{name}")})
         tr = FSLGANTrainer(cfg, parts, seed=0)
         t0 = time.time()
         hist = [tr.train_epoch(batches_per_client=3) for _ in range(epochs)]
+        finish(tr)
         g = [h["g_loss"] for h in hist]
         tail = float(np.mean(g[-max(2, epochs // 3):]))
         finals[name] = tail

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.agg_fuse.ops import dequant_reduce_flat, scatter_acc_flat
+from repro.kernels.agg_fuse.ref import dequant_reduce_ref, scatter_acc_ref
 from repro.kernels.boundary_fuse.ops import fused_boundary_flat
 from repro.kernels.boundary_fuse.ref import fused_boundary_ref
 from repro.kernels.fedavg.ops import fedavg_flat
@@ -83,5 +85,36 @@ def run(fast: bool = False) -> List[Tuple[str, float, str]]:
     ref_b = fused_boundary_ref(x, clip, scale, noise, codec="int8")
     err = float(jnp.max(jnp.abs(out_b - ref_b)))
     rows.append((f"kernel_boundary_fuse[int8_b{bb}_n{nn}]", us,
+                 f"max_err_vs_oracle={err:.2e}"))
+
+    # fused dequant-reduce (compressed-domain server aggregation)
+    cc, na = 8, 65536
+    wires = jax.random.randint(jax.random.fold_in(key, 9), (cc, na),
+                               -127, 128, jnp.int32).astype(jnp.int8)
+    scales = jax.random.uniform(jax.random.fold_in(key, 10), (cc,),
+                                jnp.float32, 1e-3, 1e-1)
+    wts_a = jnp.arange(1.0, cc + 1.0)
+    out_a, us = _time(dequant_reduce_flat, wires, scales, wts_a,
+                      use_kernel=True, interpret=True)
+    wn = wts_a / wts_a.sum()
+    ref_a = dequant_reduce_ref(wires, jnp.stack([wn, scales], axis=1))
+    err = float(jnp.max(jnp.abs(out_a - ref_a)))
+    rows.append((f"kernel_agg_fuse_dense[c{cc}_n{na}]", us,
+                 f"max_err_vs_oracle={err:.2e}"))
+
+    # sparse scatter-accumulate (top-k wires into the dense accumulator)
+    kk_s, ns = 512, 65536
+    acc0 = jax.random.normal(jax.random.fold_in(key, 11), (ns,), jnp.float32)
+    sidx = jax.random.randint(jax.random.fold_in(key, 12), (kk_s,), 0, ns,
+                              jnp.int32)                 # collisions likely
+    svals = jax.random.normal(jax.random.fold_in(key, 13), (kk_s,),
+                              jnp.float32)
+    # the acc arg is donated — hand the timer a fresh copy per call
+    out_s, us = _time(lambda: scatter_acc_flat(jnp.copy(acc0), svals, sidx,
+                                               1.5, use_kernel=True,
+                                               interpret=True))
+    err = float(jnp.max(jnp.abs(out_s - scatter_acc_ref(acc0, svals, sidx,
+                                                        1.5))))
+    rows.append((f"kernel_agg_fuse_scatter[k{kk_s}_n{ns}]", us,
                  f"max_err_vs_oracle={err:.2e}"))
     return rows

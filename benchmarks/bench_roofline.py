@@ -12,6 +12,8 @@ import json
 import os
 from typing import List, Tuple
 
+from benchmarks._obs import record_rows
+
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "dryrun")
 
@@ -29,8 +31,10 @@ def run(fast: bool = False) -> List[Tuple[str, float, str]]:
     rows: List[Tuple[str, float, str]] = []
     recs = load_reports()
     if not recs:
-        return [("roofline_table", 0.0,
+        rows = [("roofline_table", 0.0,
                  "no dry-run artifacts yet; run repro.launch.dryrun --all")]
+        record_rows("roofline_table", rows)
+        return rows
     ok = skipped = failed = 0
     for (arch, shape), rec in sorted(recs.items()):
         name = f"roofline[{arch}|{shape}]"
@@ -51,4 +55,7 @@ def run(fast: bool = False) -> List[Tuple[str, float, str]]:
                      f"useful_flops={rec['useful_flops_ratio']:.2f}"))
     rows.append(("roofline_summary", 0.0,
                  f"ok={ok} skipped={skipped} failed={failed}"))
+    # artifact-driven bench, no trainer — record the table as a metrics
+    # JSONL under benchmarks/obs/ like every other bench's run artifacts
+    record_rows("roofline_table", rows)
     return rows

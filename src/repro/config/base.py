@@ -57,6 +57,13 @@ FED_MODES = ("sync", "fedasync", "fedbuff")
 # pins the faster one (core/gan.FSLGANTrainer); fed/programs.BACKENDS
 # stays ("loop", "vectorized") — the executor never sees "auto".
 FED_BACKENDS = ("loop", "vectorized", "auto")
+# server-side reduce over landed uplinks (fed/engine + fed/aggregate):
+# "decode" stages one decoded fp32 tree per client then FedAvgs (the
+# bit-exact reference); "stream" folds each WIRE payload into one fp32
+# accumulator via kernels/agg_fuse as it lands (O(1) server memory);
+# "batched" stacks wire payloads per leaf and reduces them in one fused
+# call (vmapped decode for top-k), sharded when fed.shard_clients is on.
+SERVER_REDUCES = ("decode", "stream", "batched")
 PRIVACY_MODES = ("dp_sgd", "uplink")
 CONTROL_MODES = ("frozen", "adaptive")
 CONTROLLERS = ("codec", "sigma", "split", "deadline")
@@ -399,6 +406,11 @@ class FedConfig:
     # aggregation hot path
     kernel_aggregation: bool = False   # use the fedavg Pallas kernel
     kernel_interpret: bool = False     # Pallas interpret mode (CPU tests)
+    # server reduce strategy (SERVER_REDUCES above).  "decode" is the
+    # bit-exact staging reference; "stream"/"batched" aggregate in the
+    # compressed domain (pinned vs "decode" at fma-level tolerance —
+    # mean(base + d_c) reassociates vs base + mean(d_c) in float).
+    server_reduce: str = "decode"
     # population scale: map the vectorized backend's stacked client axis
     # onto a `clients` device mesh (launch/mesh.make_client_mesh +
     # sharding/specs.stacked_shardings).  Off (default) keeps every
@@ -420,6 +432,8 @@ class FedConfig:
         _check_name("fed", "backend", self.backend, FED_BACKENDS)
         _check_name("fed", "codec", self.codec, CODECS,
                     aliases=("", "identity"))
+        _check_name("fed", "server_reduce", self.server_reduce,
+                    SERVER_REDUCES)
         if self.hierarchy_cohorts < 0:
             raise ValueError(
                 f"fed.hierarchy_cohorts must be >= 0, got "

@@ -47,6 +47,9 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.fed.aggregate import (StreamingAggregator, batched_reduce,
+                                 codec_rel_error, decode_enc,
+                                 fused_decode_apply)
 from repro.fed.events import ARRIVE, FINISH, EventQueue, make_availability
 from repro.fed.hierarchy import HierarchicalAggregator
 from repro.fed.policies import ClientUpdate, make_policy
@@ -102,6 +105,11 @@ class RoundReport:
     # BEFORE any health action touches the tree, so a rolled-back round
     # still records what the aggregate actually was
     global_digest: Optional[str] = None
+    # peak count of decoded fp32 update trees live at the server during
+    # aggregation: the decode reduce stages one per landed client (O(C));
+    # the compressed-domain stream reduce holds only the accumulator
+    # (O(1) in cohort size — asserted in tests, recorded in the bench)
+    peak_live_trees: int = 0
 
     @property
     def mean_staleness(self) -> float:
@@ -116,7 +124,19 @@ class FederationEngine:
         self.cfg = fed_cfg
         self.roster = [s.client_id for s in specs]
         self.specs = {s.client_id: s for s in specs}
+        self.weighted = bool(weighted)
         self.policy = make_policy(fed_cfg, weighted=weighted)
+        # server reduce strategy (config.SERVER_REDUCES): "decode" stages
+        # decoded trees through the policy (bit-exact reference);
+        # "stream"/"batched" aggregate wire payloads in the compressed
+        # domain (fed/aggregate) — on the sync paths, where the reduce is
+        # a plain weighted mean.  Async always decodes per-arrival, but
+        # under "stream"/"batched" the ARRIVE queue carries wire payloads
+        # instead of decoded trees (O(1) live decoded state).
+        self.server_reduce = str(getattr(fed_cfg, "server_reduce", "decode"))
+        # optional client mesh for the "batched" reduce: stacked wire
+        # leaves land on the `clients` axis before the fused reduce
+        self.mesh = None
         # pre-codec uplink transform (privacy/defenses.DPUplinkStage):
         # applied to the update delta BEFORE compression, so the codec —
         # and everything downstream of it — only ever sees the privatized
@@ -162,6 +182,7 @@ class FederationEngine:
         # optional content-digest hook (repro.obs.digest.tree_digest):
         # stamps RoundReport.global_digest on the as-aggregated tree
         self._digester = None
+        self.last_report: Optional[RoundReport] = None
 
     # ------------------------------------------------------------------
     def set_codec(self, name: str, topk_frac: Optional[float] = None) -> None:
@@ -180,6 +201,13 @@ class FederationEngine:
     def set_deadline(self, deadline_s: float) -> None:
         """Retune the sync straggler deadline (deadline controller)."""
         self.deadline_s = float(deadline_s)
+
+    def set_mesh(self, mesh) -> None:
+        """Attach a client device mesh for the "batched" server reduce:
+        per-leaf wire stacks are placed with
+        ``sharding.stacked_shardings`` before the fused dequant-reduce.
+        ``None`` (the default) keeps every reduce single-device."""
+        self.mesh = mesh
 
     def set_tracer(self, tracer, *, batch_cap: int = 0) -> None:
         """Attach a :class:`repro.obs.Tracer`; subsequent rounds emit
@@ -218,6 +246,27 @@ class FederationEngine:
             return apply_delta(base_tree, dec), nbytes, err
         dec, nbytes = codec.roundtrip(params)
         return dec, nbytes, 0.0
+
+    def _encode_uplink(self, cid: str, base_tree, params
+                       ) -> Tuple[Any, int, Any, bool]:
+        """Wire-level form of :meth:`_codec_roundtrip`: encode the uplink
+        WITHOUT decoding it.  Returns ``(enc, wire_bytes, delta,
+        is_delta)`` — ``enc`` is the ``Codec.encode_tree`` payload the
+        compressed-domain reduce folds, ``delta`` the raw (possibly
+        privatized) delta for error measurement (None when the codec is
+        lossless), ``is_delta`` whether the wire is in the delta domain.
+        Prices IDENTICAL bytes, applies the same ``uplink_stage``, and
+        advances stateful codec residuals exactly like the decode path."""
+        codec = self.codecs[cid]
+        if codec.encodes_delta or self.uplink_stage is not None:
+            delta = delta_tree(params, base_tree)
+            if self.uplink_stage is not None:
+                delta = self.uplink_stage(cid, delta)
+            enc, nbytes = codec.encode_tree(delta)
+            return (enc, nbytes,
+                    delta if codec.encodes_delta else None, True)
+        enc, nbytes = codec.encode_tree(params)
+        return enc, nbytes, None, False
 
     def _split_roster(self) -> Tuple[List[str], List[str]]:
         up, down = [], []
@@ -266,6 +315,9 @@ class FederationEngine:
             self.ledger.record(cid, lan=rep.traffic.lan_bytes[cid])
         for cid in rep.traffic.edge_bytes:
             self.ledger.record_edge(cid, rep.traffic.edge_bytes[cid])
+        # kept for post-round inspection (peak_live_trees assertions, the
+        # agg bench) — the trainer consumes the returned report directly
+        self.last_report = rep
         return rep
 
     # ------------------------------------------------------------------
@@ -400,19 +452,41 @@ class FederationEngine:
                 runnable.append(cid)
         results = program.run(runnable, global_tree)
 
+        # compressed-domain reduce ("stream"/"batched"): landed uplinks
+        # fold as WIRE payloads — no per-client decoded tree is staged
+        reduce_mode = self.server_reduce
+        agg: Optional[StreamingAggregator] = None
+        staged: List[Tuple[Any, float]] = []      # batched: (enc, weight)
+        is_delta = False
+        if reduce_mode != "decode":
+            agg = StreamingAggregator(self.codec_name,
+                                      use_kernel=self.cfg.kernel_aggregation,
+                                      interpret=self.cfg.kernel_interpret)
+            agg.init(global_tree)
+
         for res in results:
             cid = res.client_id
             spec = self.specs[cid]
-            decoded, up_b, cerr = self._codec_roundtrip(cid, global_tree,
-                                                        res.params)
+            if reduce_mode == "decode":
+                decoded, up_b, cerr = self._codec_roundtrip(
+                    cid, global_tree, res.params)
+            else:
+                enc, up_b, delta, is_delta = self._encode_uplink(
+                    cid, global_tree, res.params)
             finish = down_t[cid] + spec.compute_time_s \
                 + self.uplink.transfer_time(up_b)
             rep.traffic.record(cid, up=up_b, down=db(cid),
                                lan=self._lan_by.get(cid, 0))
             rep.client_infos.append((cid, res.info))
             rep.finish_s[cid] = finish
-            rep.codec_error[cid] = cerr
+            if reduce_mode == "decode":
+                rep.codec_error[cid] = cerr
             if deadline and finish > deadline:
+                if reduce_mode != "decode":
+                    # ran but never folds: measure the codec's cost
+                    # without decoding the dropped update
+                    rep.codec_error[cid] = codec_rel_error(
+                        self.codec_name, enc, delta)
                 rep.stragglers.append(cid)     # ran, but its update is late
                 continue                       # nothing commits — not even
                                                # its optimizer state
@@ -422,11 +496,40 @@ class FederationEngine:
             rep.staleness[cid] = 0
             rep.staleness_events.append(0)
             finishes.append(finish)
-            self.policy.on_update(
-                global_tree, ClientUpdate(cid, decoded, spec.weight,
-                                          0, self.clock + finish))
+            if reduce_mode == "stream":
+                # fold now; the rel error rides the same traversal
+                err = agg.fold(enc, spec.weight if self.weighted else 1.0,
+                               delta=delta)
+                rep.codec_error[cid] = 0.0 if err is None else err
+            elif reduce_mode == "batched":
+                staged.append((enc, spec.weight if self.weighted else 1.0))
+                rep.codec_error[cid] = codec_rel_error(
+                    self.codec_name, enc, delta)
+            else:
+                self.policy.on_update(
+                    global_tree, ClientUpdate(cid, decoded, spec.weight,
+                                              0, self.clock + finish))
 
-        new_global = self.policy.on_round_end(global_tree)
+        if reduce_mode == "decode":
+            new_global = self.policy.on_round_end(global_tree)
+            rep.peak_live_trees = len(rep.participated)
+        else:
+            if reduce_mode == "stream":
+                mean = agg.finalize()
+            elif staged:
+                mean = batched_reduce(
+                    self.codec_name, [e for e, _ in staged],
+                    [w for _, w in staged], global_tree,
+                    use_kernel=self.cfg.kernel_aggregation,
+                    interpret=self.cfg.kernel_interpret, mesh=self.mesh)
+            else:
+                mean = None
+            if mean is None:
+                new_global = global_tree
+            else:
+                new_global = apply_delta(global_tree, mean) if is_delta \
+                    else mean
+            rep.peak_live_trees = 1 if rep.participated else 0
         if rep.participated:
             self.version += 1
         # the sync barrier releases at the slowest survivor — or at the
@@ -473,14 +576,26 @@ class FederationEngine:
                 runnable.append(cid)
         results = program.run(runnable, global_tree)
 
-        # per-client: codec over the EDGE hop, deadline at edge arrival
-        landed: Dict[str, Tuple[Any, float]] = {}   # cid -> (decoded, w)
+        # per-client: codec over the EDGE hop, deadline at edge arrival.
+        # Under the compressed-domain reduce the edge tier stages WIRE
+        # payloads, not decoded member trees — each cohort folds them
+        # through one streaming accumulator (hierarchy.
+        # reduce_all_streaming), so live decoded state at the edge is
+        # O(1) in the cohort size.
+        reduce_mode = self.server_reduce
+        is_delta = False
+        landed: Dict[str, Tuple[Any, float]] = {}   # cid -> (payload, w)
         edge_finish: Dict[str, float] = {}
         for res in results:
             cid = res.client_id
             spec = self.specs[cid]
-            decoded, up_b, cerr = self._codec_roundtrip(cid, global_tree,
-                                                        res.params)
+            if reduce_mode == "decode":
+                payload, up_b, cerr = self._codec_roundtrip(
+                    cid, global_tree, res.params)
+            else:
+                payload, up_b, delta, is_delta = self._encode_uplink(
+                    cid, global_tree, res.params)
+                cerr = codec_rel_error(self.codec_name, payload, delta)
             finish = down_t[cid] + spec.compute_time_s \
                 + self.edge_link.transfer_time(up_b)
             rep.traffic.record(cid, down=db(cid),
@@ -497,14 +612,25 @@ class FederationEngine:
                 rep.opt_states[cid] = res.opt_state
             rep.staleness[cid] = 0
             rep.staleness_events.append(0)
-            landed[cid] = (decoded, spec.weight)
+            landed[cid] = (payload, spec.weight)
             edge_finish[cid] = finish
 
         # per-cohort: edge pre-reduce, then ONE WAN uplink per cohort
+        if reduce_mode == "decode":
+            reductions = self.hierarchy.reduce_all(landed)
+        else:
+            reductions = self.hierarchy.reduce_all_streaming(
+                landed, global_tree, codec_name=self.codec_name)
         cohort_finishes: List[float] = []
         cohort_trace: List[Dict[str, Any]] = []
-        for red in self.hierarchy.reduce_all(landed):
-            wan_b = tree_bytes(red.aggregate)
+        for red in reductions:
+            aggregate = red.aggregate
+            if reduce_mode != "decode" and is_delta:
+                # stream reduce yields the cohort's mean DELTA; rebase it
+                # so the WAN payload and the server update are the same
+                # full tree the decode path ships
+                aggregate = apply_delta(global_tree, aggregate)
+            wan_b = tree_bytes(aggregate)
             ready = max(edge_finish[m] for m in red.members)
             finish = ready + self.uplink.transfer_time(wan_b)
             ckey = f"cohort{red.cohort}"
@@ -514,8 +640,14 @@ class FederationEngine:
                                  "finish": finish, "bytes": wan_b,
                                  "members": list(red.members)})
             self.policy.on_update(
-                global_tree, ClientUpdate(ckey, red.aggregate, red.weight,
+                global_tree, ClientUpdate(ckey, aggregate, red.weight,
                                           0, self.clock + finish))
+        # decode: every landed member tree + the buffered cohort
+        # aggregates are live at once; stream: cohort aggregates + ONE
+        # accumulator, independent of cohort size
+        rep.peak_live_trees = len(landed) + len(reductions) \
+            if reduce_mode == "decode" else \
+            (len(reductions) + 1 if reductions else 0)
 
         new_global = self.policy.on_round_end(global_tree)
         if rep.participated:
@@ -604,6 +736,13 @@ class FederationEngine:
                             "t1": t0 + down_t[cid], "bytes": db(cid),
                             "cycle": 1})
 
+        # under the compressed-domain reduce, in-flight ARRIVE payloads
+        # carry WIRE encodings; the decode happens per-arrival (one
+        # fused decode+rebase traversal), so live decoded trees stay at
+        # 1 no matter how many uplinks are in flight
+        stream = self.server_reduce != "decode"
+        live_payloads = 0
+        peak_payloads = 0
         last_t = t0
         while queue:
             ev = queue.pop()
@@ -613,8 +752,21 @@ class FederationEngine:
             if ev.kind == FINISH:
                 snap_tree, snap_ver = snapshots[cid]
                 res = program.run([cid], snap_tree)[0]
-                decoded, up_b, cerr = self._codec_roundtrip(cid, snap_tree,
-                                                            res.params)
+                if stream:
+                    enc, up_b, delta, is_delta = self._encode_uplink(
+                        cid, snap_tree, res.params)
+                    cerr = codec_rel_error(self.codec_name, enc, delta)
+                    # the snapshot rides along: it is what the uplink's
+                    # delta rebases onto, and snapshots[cid] may advance
+                    # before this arrival is processed
+                    payload = {"enc": enc, "is_delta": is_delta,
+                               "snap_tree": snap_tree}
+                else:
+                    decoded, up_b, cerr = self._codec_roundtrip(
+                        cid, snap_tree, res.params)
+                    payload = {"decoded": decoded}
+                    live_payloads += 1
+                    peak_payloads = max(peak_payloads, live_payloads)
                 rep.traffic.record(cid, up=up_b,
                                    lan=self._lan_by.get(cid, 0))
                 rep.client_infos.append((cid, res.info))
@@ -622,10 +774,10 @@ class FederationEngine:
                 # the opt state rides with the arrival: it only commits if
                 # the update actually lands inside the deadline
                 up_t = self.uplink.transfer_time(up_b)
-                queue.push(ev.time + up_t, ARRIVE, cid,
-                           payload={"decoded": decoded, "snap_ver": snap_ver,
-                                    "cycle": ev.payload["cycle"],
-                                    "opt_state": res.opt_state})
+                payload.update({"snap_ver": snap_ver,
+                                "cycle": ev.payload["cycle"],
+                                "opt_state": res.opt_state})
+                queue.push(ev.time + up_t, ARRIVE, cid, payload=payload)
                 if self.tracer is not None:
                     tev.append({"kind": "exec", "cid": cid,
                                 "t0": ev.time - spec.compute_time_s,
@@ -635,6 +787,8 @@ class FederationEngine:
                                 "t1": ev.time + up_t, "bytes": up_b})
                 continue
             # ARRIVE
+            if not stream:
+                live_payloads -= 1
             rep.finish_s[cid] = ev.time - t0      # last arrival per client
             if deadline and ev.time - t0 > deadline:
                 rep.stragglers.append(cid)
@@ -650,9 +804,20 @@ class FederationEngine:
                             "staleness": staleness, "landed": True})
             rep.staleness[cid] = staleness
             rep.staleness_events.append(staleness)
+            if stream:
+                if ev.payload["is_delta"]:
+                    update_tree = fused_decode_apply(
+                        self.codec_name, ev.payload["snap_tree"],
+                        ev.payload["enc"])
+                else:
+                    update_tree = decode_enc(self.codec_name,
+                                             ev.payload["enc"],
+                                             ev.payload["snap_tree"])
+            else:
+                update_tree = ev.payload["decoded"]
             global_tree, bumped = self.policy.on_update(
                 global_tree,
-                ClientUpdate(cid, ev.payload["decoded"], spec.weight,
+                ClientUpdate(cid, update_tree, spec.weight,
                              staleness, ev.time))
             if bumped:
                 self.version += 1
@@ -673,6 +838,8 @@ class FederationEngine:
 
         global_tree = self.policy.on_round_end(global_tree)
         self.version += 1 if rep.participated else 0
+        rep.peak_live_trees = (1 if rep.client_infos else 0) if stream \
+            else peak_payloads
         rep.round_time_s = last_t - t0
         self.clock = last_t
         rep.clock_s = self.clock

@@ -101,3 +101,30 @@ class HierarchicalAggregator:
             weights = [updates[m][1] for m in members]
             out.append(self.reduce_cohort(c, members, trees, weights))
         return out
+
+    def reduce_all_streaming(self, updates: Dict[str, Tuple[object, float]],
+                             template, *, codec_name: str
+                             ) -> List[CohortReduction]:
+        """Compressed-domain round reduce: ``updates`` maps client id ->
+        (encoded wire payload from ``Codec.encode_tree``, weight).  Each
+        cohort folds its members' WIRE payloads through one
+        :class:`repro.fed.aggregate.StreamingAggregator` — the edge tier
+        never stacks decoded member trees; live decoded state per cohort
+        is the single fp32 accumulator.  ``aggregate`` is the cohort's
+        weighted MEAN in the wire's domain (the delta domain for lossy
+        codecs — the engine rebases onto the global tree)."""
+        from repro.fed.aggregate import StreamingAggregator
+        grouped = self.group(list(updates.keys()))
+        out: List[CohortReduction] = []
+        for c in sorted(grouped):
+            members = grouped[c]
+            agg = StreamingAggregator(codec_name,
+                                      use_kernel=self.use_kernel,
+                                      interpret=self.interpret)
+            agg.init(template)
+            for m in members:
+                enc, w = updates[m]
+                agg.fold(enc, w)
+            out.append(CohortReduction(int(c), agg.finalize(),
+                                       float(agg.wsum), tuple(members)))
+        return out

@@ -213,6 +213,16 @@ class Codec:
         del meta
         return wire.astype(dtype)
 
+    def encode_tree(self, tree) -> Tuple[List[Tuple[Any, Any]], int]:
+        """Whole-tree wire form: per-leaf ``(wire, meta)`` in
+        ``jax.tree.leaves`` order plus the priced wire bytes — exactly
+        the bytes ``roundtrip`` reports, so the engine's byte accounting
+        is identical whichever reduce consumes the uplink.  Stateful
+        codecs (top-k error feedback) advance their residual here just
+        like ``roundtrip`` does.  The compressed-domain server reduce
+        (``fed/aggregate``) folds these payloads without decoding."""
+        return [(l, None) for l in jax.tree.leaves(tree)], tree_bytes(tree)
+
 
 class IdentityCodec(Codec):
     """No compression; wire bytes = native tree bytes."""
@@ -240,6 +250,11 @@ class FP16Codec(Codec):
     def decode(self, wire, meta, dtype=jnp.float32) -> jnp.ndarray:
         del meta
         return wire.astype(dtype)
+
+    def encode_tree(self, tree) -> Tuple[List[Tuple[Any, Any]], int]:
+        leaves = jax.tree.leaves(tree)
+        return ([(l.astype(jnp.float16), None) for l in leaves],
+                int(sum(l.size * 2 for l in leaves)))
 
 
 class Int8Codec(Codec):
@@ -276,6 +291,11 @@ class Int8Codec(Codec):
         # int8 buffer * fp32 scale, matching roundtrip's q * scale in
         # fp32 before the final cast
         return (wire.astype(jnp.float32) * meta).astype(dtype)
+
+    def encode_tree(self, tree) -> Tuple[List[Tuple[Any, Any]], int]:
+        leaves = jax.tree.leaves(tree)
+        return ([self.encode(l) for l in leaves],
+                int(sum(l.size + 4 for l in leaves)))
 
 
 class TopKCodec(Codec):
@@ -335,6 +355,31 @@ class TopKCodec(Codec):
             n *= int(s)
         return jnp.zeros((n,), jnp.float32).at[idx].set(vals) \
             .reshape(meta).astype(dtype)
+
+    def encode_tree(self, tree) -> Tuple[List[Tuple[Any, Any]], int]:
+        """Stateful whole-tree encode: adds the carried residual before
+        selection and advances it — exactly ``roundtrip``'s error
+        feedback, but the dropped mass is the with-residual leaf with
+        its kept entries zeroed (top-k indices are distinct), so no
+        densified decode is ever built."""
+        if self.error_feedback and self._residual is not None:
+            tree = jax.tree.map(lambda l, r: l + r.astype(l.dtype),
+                                tree, self._residual)
+        enc: List[Tuple[Any, Any]] = []
+        res_leaves = []
+        kept_entries = 0
+        for l in jax.tree.leaves(tree):
+            flat = l.astype(jnp.float32).reshape(-1)
+            k = min(flat.size, max(1, int(math.ceil(self.frac * flat.size))))
+            kept_entries += k
+            _, idx = jax.lax.top_k(jnp.abs(flat), k)
+            idx = idx.astype(jnp.int32)
+            enc.append(((flat[idx], idx), l.shape))
+            res_leaves.append(flat.at[idx].set(0.0).reshape(l.shape))
+        if self.error_feedback:
+            self._residual = jax.tree.unflatten(jax.tree.structure(tree),
+                                                res_leaves)
+        return enc, int(kept_entries * 8)
 
 
 def make_codec(name: str, *, topk_frac: float = 0.01,

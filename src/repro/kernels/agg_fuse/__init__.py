@@ -1,0 +1,5 @@
+from repro.kernels.agg_fuse.ops import (dequant_acc_flat,  # noqa: F401
+                                        dequant_reduce_flat,
+                                        scatter_acc_flat)
+from repro.kernels.agg_fuse.ref import (dequant_acc_ref,  # noqa: F401
+                                        dequant_reduce_ref, scatter_acc_ref)

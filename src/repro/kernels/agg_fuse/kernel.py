@@ -1,0 +1,160 @@
+"""Fused dequantize-and-accumulate kernels for compressed-domain FedAvg.
+
+The server-side reduce used to be decode-then-average: every client's
+wire payload was dequantized to a full fp32 tree, all of them staged,
+then ``kernels/fedavg`` streamed the (C, N) stack.  That pays one full
+fp32 materialization + one extra HBM round-trip per client, and server
+memory grows linearly in the cohort.  These kernels fold the codec
+decode INTO the weighted reduction so the server only ever holds wire
+payloads and ONE fp32 accumulator:
+
+  * ``dequant_reduce_kernel`` — batch form.  Grid ``(nb, C)`` with the
+    n-block OUTER and the client sweep INNER (the last grid dim iterates
+    fastest on TPU), so a persistent (1, bn) VMEM scratch accumulates
+    ``w_c * s_c * x_c`` across all clients of one block before emitting.
+    Each client reads at its WIRE dtype (int8 / fp16 / fp32) — for int8
+    that's 4x less HBM traffic than reducing a dequantized stack.
+  * ``dequant_acc_kernel`` — streaming form: one landed uplink folded
+    into the running fp32 accumulator (``acc + w * s * x``), the O(1)
+    server-memory path the engine uses as uplinks arrive.
+  * ``scatter_acc_kernel`` — sparse top-k form: (values, flat indices)
+    added into the dense accumulator per n-block via a broadcast-compare
+    one-hot sum, which also sums COLLIDING indices correctly — the wire
+    is never densified into a per-client tree.
+
+All follow the repo kernel idiom (``kernels/fedavg``,
+``kernels/boundary_fuse``): zero-pad N to a block multiple and slice
+back, ``pl.when`` phase gating with placeholder flushes on non-final
+client steps, per-client scalars in tiny (·, 2) tiles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _make_dequant_reduce_kernel(num_clients: int):
+    def kernel(x_ref, coef_ref, o_ref, acc_scr):
+        i = pl.program_id(1)               # client index — INNER grid dim
+
+        @pl.when(i == 0)
+        def _init():
+            acc_scr[...] = jnp.zeros_like(acc_scr)
+
+        w = coef_ref[0, 0]                 # normalized fedavg weight
+        s = coef_ref[0, 1]                 # codec dequant scale
+        acc_scr[...] += w * s * x_ref[...].astype(jnp.float32)
+
+        @pl.when(i == num_clients - 1)
+        def _emit():
+            o_ref[...] = acc_scr[...]
+
+        @pl.when(i < num_clients - 1)
+        def _flush():
+            o_ref[...] = jnp.zeros_like(o_ref)   # placeholder flush
+
+    return kernel
+
+
+def dequant_reduce_kernel(wires: jnp.ndarray, coefs: jnp.ndarray, *,
+                          block_n: int = 4096,
+                          interpret: bool = False) -> jnp.ndarray:
+    """wires: (C, N) at wire dtype; coefs: (C, 2) fp32 ``[weight, scale]``
+    per client (weights already normalized).  -> (N,) fp32 weighted sum
+    of the dequantized rows, computed without materializing them."""
+    c, n = wires.shape
+    block_n = min(block_n, max(n, 1))
+    pad = (-n) % block_n
+    if pad:
+        wires = jnp.pad(wires, ((0, 0), (0, pad)))
+    n_padded = n + pad
+    out = pl.pallas_call(
+        _make_dequant_reduce_kernel(c),
+        grid=(n_padded // block_n, c),
+        in_specs=[pl.BlockSpec((1, block_n), lambda j, i: (i, j)),
+                  pl.BlockSpec((1, 2), lambda j, i: (i, 0))],
+        out_specs=pl.BlockSpec((1, block_n), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, n_padded), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, block_n), jnp.float32)],
+        interpret=interpret,
+    )(wires, coefs.astype(jnp.float32))[0]
+    return out[:n] if pad else out
+
+
+def _dequant_acc_kernel(acc_ref, x_ref, scal_ref, o_ref):
+    o_ref[...] = acc_ref[...] + scal_ref[0, 0] * scal_ref[0, 1] \
+        * x_ref[...].astype(jnp.float32)
+
+
+def dequant_acc_kernel(acc: jnp.ndarray, wire: jnp.ndarray, scal: jnp.ndarray,
+                       *, block_n: int = 4096,
+                       interpret: bool = False) -> jnp.ndarray:
+    """acc: (N,) fp32 running sum; wire: (N,) at wire dtype; scal: (1, 2)
+    fp32 ``[weight, scale]``.  -> (N,) fp32 ``acc + w * s * wire``."""
+    n = acc.shape[0]
+    block_n = min(block_n, max(n, 1))
+    pad = (-n) % block_n
+    a2, x2 = acc.reshape(1, n), wire.reshape(1, n)
+    if pad:
+        a2 = jnp.pad(a2, ((0, 0), (0, pad)))
+        x2 = jnp.pad(x2, ((0, 0), (0, pad)))
+    n_padded = n + pad
+    out = pl.pallas_call(
+        _dequant_acc_kernel,
+        grid=(n_padded // block_n,),
+        in_specs=[pl.BlockSpec((1, block_n), lambda j: (0, j)),
+                  pl.BlockSpec((1, block_n), lambda j: (0, j)),
+                  pl.BlockSpec((1, 2), lambda j: (0, 0))],
+        out_specs=pl.BlockSpec((1, block_n), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, n_padded), jnp.float32),
+        interpret=interpret,
+    )(a2, x2, scal.astype(jnp.float32))[0]
+    return out[:n] if pad else out
+
+
+def _make_scatter_acc_kernel(k: int, block_n: int):
+    def kernel(acc_ref, vals_ref, idx_ref, scal_ref, o_ref):
+        j = pl.program_id(0)
+        local = idx_ref[...] - j * block_n            # (K, 1)
+        inr = jnp.logical_and(local >= 0, local < block_n)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (k, block_n), 1)
+        sel = jnp.logical_and(local == cols, inr)     # (K, bn) one-hot rows
+        # colliding indices each contribute a row, so the column sum adds
+        # them — matching .at[idx].add() scatter semantics
+        contrib = jnp.sum(jnp.where(sel, vals_ref[...], 0.0),
+                          axis=0, keepdims=True)      # (1, bn)
+        o_ref[...] = acc_ref[...] + scal_ref[0, 0] * contrib
+
+    return kernel
+
+
+def scatter_acc_kernel(acc: jnp.ndarray, vals: jnp.ndarray,
+                       idx: jnp.ndarray, scal: jnp.ndarray, *,
+                       block_n: int = 1024,
+                       interpret: bool = False) -> jnp.ndarray:
+    """acc: (N,) fp32; vals/idx: (K,) top-k values + flat indices; scal:
+    (1, 2) fp32 ``[weight, unused]``.  -> (N,) fp32 with ``w * vals``
+    scatter-added at ``idx`` (collisions sum), no densified wire."""
+    n = acc.shape[0]
+    k = vals.shape[0]
+    block_n = min(block_n, max(n, 1))
+    pad = (-n) % block_n
+    a2 = acc.reshape(1, n)
+    if pad:
+        a2 = jnp.pad(a2, ((0, 0), (0, pad)))
+    n_padded = n + pad
+    out = pl.pallas_call(
+        _make_scatter_acc_kernel(k, block_n),
+        grid=(n_padded // block_n,),
+        in_specs=[pl.BlockSpec((1, block_n), lambda j: (0, j)),
+                  pl.BlockSpec((k, 1), lambda j: (0, 0)),
+                  pl.BlockSpec((k, 1), lambda j: (0, 0)),
+                  pl.BlockSpec((1, 2), lambda j: (0, 0))],
+        out_specs=pl.BlockSpec((1, block_n), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, n_padded), jnp.float32),
+        interpret=interpret,
+    )(a2, vals.astype(jnp.float32).reshape(k, 1),
+      idx.astype(jnp.int32).reshape(k, 1), scal.astype(jnp.float32))[0]
+    return out[:n] if pad else out

@@ -1,0 +1,24 @@
+"""jnp reference semantics the agg_fuse kernels pin against."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dequant_reduce_ref(wires: jnp.ndarray, coefs: jnp.ndarray) -> jnp.ndarray:
+    """(C, N) wire-dtype rows, (C, 2) [weight, scale] -> (N,) fp32
+    weighted sum of the dequantized rows."""
+    coef = (coefs[:, 0] * coefs[:, 1]).astype(jnp.float32)
+    return jnp.sum(wires.astype(jnp.float32) * coef[:, None], axis=0)
+
+
+def dequant_acc_ref(acc: jnp.ndarray, wire: jnp.ndarray, weight,
+                    scale) -> jnp.ndarray:
+    """One streamed fold: ``acc + w * s * dequant(wire)``."""
+    return acc + jnp.float32(weight) * jnp.float32(scale) \
+        * wire.astype(jnp.float32)
+
+
+def scatter_acc_ref(acc: jnp.ndarray, vals: jnp.ndarray, idx: jnp.ndarray,
+                    weight) -> jnp.ndarray:
+    """Sparse fold: weighted top-k values scatter-added (collisions sum)."""
+    return acc.at[idx].add(jnp.float32(weight) * vals.astype(jnp.float32))

@@ -21,9 +21,9 @@ from repro.obs.health import (HEALTH_CHECKS, HealthAbort, HealthAlert,
                               HealthMonitor, alert_from_dict, alert_to_dict)
 from repro.obs.metrics import (Counter, Gauge, Histogram, JsonlSink,
                                MetricsRegistry, load_jsonl, observe_round)
-from repro.obs.profile import (KernelProfile, profile_dp_clip,
-                               profile_engine_kernels, profile_fedavg,
-                               profile_jit)
+from repro.obs.profile import (KernelProfile, profile_agg_fuse,
+                               profile_dp_clip, profile_engine_kernels,
+                               profile_fedavg, profile_jit)
 from repro.obs.recorder import (FlightRecorder, RunRecord, feedback_from_dict,
                                 feedback_to_dict, knobs_from_dict,
                                 knobs_to_dict, load_run)
@@ -39,8 +39,8 @@ __all__ = [
     "alert_from_dict", "alert_to_dict",
     "Counter", "Gauge", "Histogram", "JsonlSink", "MetricsRegistry",
     "load_jsonl", "observe_round",
-    "KernelProfile", "profile_dp_clip", "profile_engine_kernels",
-    "profile_fedavg", "profile_jit",
+    "KernelProfile", "profile_agg_fuse", "profile_dp_clip",
+    "profile_engine_kernels", "profile_fedavg", "profile_jit",
     "FlightRecorder", "RunRecord", "feedback_from_dict", "feedback_to_dict",
     "knobs_from_dict", "knobs_to_dict", "load_run",
     "ReplayResult", "replay_decisions", "replay_run", "suite_from_manifest",

@@ -143,6 +143,38 @@ def profile_boundary_fuse(*, batch: int = 8, n: int = 4096,
                        fn, x, noise, hw=hw, runs=runs)
 
 
+def profile_agg_fuse(*, num_clients: int = 4, n: int = 8192,
+                     codec: str = "int8", use_kernel: bool = False,
+                     interpret: bool = True, hw: HwSpec = TPU_V5E,
+                     runs: int = 3) -> KernelProfile:
+    """The fused dequant-reduce server aggregation (kernels/agg_fuse):
+    (C, N) compressed client wires + per-client scales -> one fp32
+    weighted mean without materializing decoded trees — what
+    ``fed.server_reduce != 'decode'`` replaces decode-then-fedavg with."""
+    from repro.kernels.agg_fuse.ops import dequant_reduce_flat
+    key = jax.random.PRNGKey(3)
+    k1, k2 = jax.random.split(key)
+    if codec == "int8":
+        wires = jax.random.randint(k1, (num_clients, n), -127, 128,
+                                   jnp.int32).astype(jnp.int8)
+        scales = jax.random.uniform(k2, (num_clients,), jnp.float32,
+                                    1e-3, 1e-1)
+    else:
+        wires = jax.random.normal(k1, (num_clients, n), jnp.float32)
+        if codec == "fp16":
+            wires = wires.astype(jnp.float16)
+        scales = jnp.ones((num_clients,), jnp.float32)
+    weights = jnp.ones((num_clients,), jnp.float32)
+
+    def fn(w, s, wt):
+        return dequant_reduce_flat(w, s, wt, use_kernel=use_kernel,
+                                   interpret=interpret)
+
+    kind = "kernel" if use_kernel else "ref"
+    return profile_jit(f"agg_fuse_{codec}_{kind}_c{num_clients}_n{n}",
+                       fn, wires, scales, weights, hw=hw, runs=runs)
+
+
 def profile_engine_kernels(cfg=None, *, hw: HwSpec = TPU_V5E,
                            runs: int = 3) -> Dict[str, Dict[str, Any]]:
     """Profile the kernels one engine round leans on, sized from ``cfg``
@@ -168,4 +200,13 @@ def profile_engine_kernels(cfg=None, *, hw: HwSpec = TPU_V5E,
                 codec=codec,
                 use_kernel=bool(cfg and cfg.split.use_kernel),
                 interpret=True, hw=hw, runs=runs))
+    # compressed-domain server reduce (kernels/agg_fuse): profiled when a
+    # dense lossy uplink codec is configured — the fused dequant-reduce is
+    # what fed.server_reduce != "decode" folds each uplink through
+    up_codec = cfg.fed.codec if cfg is not None else "int8"
+    if up_codec in ("fp16", "int8"):
+        profiles.append(profile_agg_fuse(
+            num_clients=max(2, num_clients), codec=up_codec,
+            use_kernel=bool(cfg and cfg.fed.kernel_aggregation),
+            interpret=True, hw=hw, runs=runs))
     return {p.name: p.to_dict() for p in profiles}

@@ -104,7 +104,16 @@ RULES: Dict[str, Tuple[Rule, ...]] = {
         Rule("scale/populations/*/amplified_epsilon_100r",
              DIR_LOWER, 0.01),
         Rule("scale/populations/*/rounds_per_s_hier", DIR_HIGHER, 0.01),
+        # compressed-domain streaming aggregation: numerics + speedup are
+        # acceptance gates at any size; wire bytes and peak live decoded
+        # tree counts are deterministic (exact); timings are wall-clock
+        Rule("agg/c*/numerics_ok", DIR_TRUE),
+        Rule("agg/c64/speedup_ok", DIR_TRUE),
+        Rule("agg/c*/wire_bytes", DIR_EQUAL, 0.0),
+        Rule("agg/c*/peak_trees_decode", DIR_EQUAL, 0.0),
+        Rule("agg/c*/peak_trees_stream", DIR_EQUAL, 0.0),
         # wall-clock: CI CPUs jitter wildly — wide default, overridable
+        Rule("agg/c*/*_us", DIR_LOWER, 1.0, noisy=True),
         Rule("dispatch/*_us", DIR_LOWER, 1.0, noisy=True),
         Rule("codecs/*/us_per_epoch", DIR_LOWER, 1.0, noisy=True),
         Rule("scheduling/*/us_per_epoch", DIR_LOWER, 1.0, noisy=True),

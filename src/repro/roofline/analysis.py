@@ -176,6 +176,55 @@ def fused_boundary_terms(batch: int, features: int, *,
     return out
 
 
+_WIRE_BYTES = {"none": 4.0, "fp16": 2.0, "int8": 1.0}
+
+
+def agg_fuse_terms(num_clients: int, n: int, *, codec: str = "int8",
+                   hw: HwSpec = TPU_V5E, compiled=None) -> Dict[str, float]:
+    """Roofline terms for the fused dequant-reduce aggregation kernel
+    (``kernels/agg_fuse``): ``num_clients`` compressed client wires of
+    ``n`` elements -> one fp32 weighted mean, per-client scales applied
+    inside the grid and the running sum held in a persistent VMEM
+    accumulator.
+
+    The fused kernel streams each wire from HBM exactly once at its WIRE
+    dtype width (1 B ``int8``, 2 B ``fp16``, 4 B ``none``), reads the
+    tiny ``(C, 2)`` weight*scale coefficient tile, and writes the fp32
+    aggregate once:
+
+        bytes = wire_b * C * N + 8 * C + 4 * N
+
+    The decode-then-reduce baseline pays the same wire reads plus a full
+    fp32 materialization per client (decode writes ``4*C*N``) that the
+    reduce then reads back (``4*C*N``) — the ``unfused_bytes_accessed``
+    key quantifies that, and its ratio to ``bytes_accessed`` is the
+    memory-bound speedup ceiling the ``agg`` bench section measures.
+    FLOPs are ~3 per element (dequant multiply, weight multiply,
+    accumulate) — negligible against the traffic, so the reduce is
+    memory-bound and fusion pays the full traversal saving.  Pass
+    ``compiled`` (a lowered ``dequant_reduce_flat`` jit artifact) to
+    merge XLA-measured ``kernel_terms`` under ``measured_*`` keys.
+    """
+    wire_b = _WIRE_BYTES.get(codec, 4.0)
+    c, nn = float(num_clients), float(n)
+    flops = 3.0 * c * nn
+    byts = wire_b * c * nn + 8.0 * c + 4.0 * nn
+    out = {"codec": codec, "num_clients": c, "n": nn,
+           "wire_bytes_per_elem": wire_b,
+           "flops": flops, "bytes_accessed": byts,
+           "compute_term_s": flops / hw.peak_flops_bf16,
+           "memory_term_s": byts / hw.hbm_bw,
+           "arithmetic_intensity": flops / byts,
+           # decode-then-reduce: wire reads + fp32 decode writes + fp32
+           # reduce read-back + aggregate write
+           "unfused_bytes_accessed": wire_b * c * nn + 8.0 * c * nn
+                                     + 4.0 * nn}
+    if compiled is not None:
+        out.update({f"measured_{k}": v
+                    for k, v in kernel_terms(compiled, hw).items()})
+    return out
+
+
 def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
                      chips: int, model_flops: float,
                      hw: HwSpec = TPU_V5E,
